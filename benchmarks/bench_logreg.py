@@ -1,0 +1,61 @@
+"""Paper Figures 2/3 (+ App. D.2): logistic regression, heterogeneous and
+homogeneous partitions, full-batch and mini-batch gradients.
+
+MNIST is replaced by a seeded synthetic Gaussian mixture with matched dims
+(DESIGN.md §7); the qualitative claims are what we validate: LEAD converges
+fast and precisely under heterogeneity where DGD-type baselines stall.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import topology
+from repro.core.baselines import DGD, NIDS, CHOCO_SGD, DeepSqueeze, QDGD
+from repro.core.compression import QuantizePNorm
+from repro.core.convex import LogisticRegression
+from repro.core.gossip import DenseGossip
+from repro.core.simulator import LEADSim, run
+
+ITERS = 200
+
+
+def bench(hetero: bool, stochastic: bool, fig: str):
+    key = jax.random.PRNGKey(1)
+    prob = LogisticRegression.generate(key, n_agents=8, m_per_agent=256,
+                                       d=784, n_classes=10,
+                                       heterogeneous=hetero)
+    x_star = prob.solve_x_star(iters=800)
+    gossip = DenseGossip(W=jnp.asarray(topology.ring(8)))
+    q2 = QuantizePNorm(bits=2, block=512)
+    eta = 0.1
+    algos = {
+        f"{fig}/LEAD(2bit)": LEADSim(gossip=gossip, compressor=q2, eta=eta),
+        f"{fig}/NIDS": NIDS(gossip=gossip, eta=eta),
+        f"{fig}/DGD": DGD(gossip=gossip, eta=eta),
+        f"{fig}/CHOCO-SGD(2bit)": CHOCO_SGD(gossip=gossip, compressor=q2,
+                                            eta=eta, gamma=0.6),
+        f"{fig}/DeepSqueeze(2bit)": DeepSqueeze(gossip=gossip, compressor=q2,
+                                                eta=eta, gamma=0.4),
+        f"{fig}/QDGD(2bit)": QDGD(gossip=gossip, compressor=q2, eta=eta,
+                                  gamma=0.4),
+    }
+    for name, algo in algos.items():
+        t0 = time.perf_counter()
+        tr = run(algo, prob, x_star, iters=ITERS, key=key,
+                 stochastic=stochastic, batch=64)
+        us = (time.perf_counter() - t0) / ITERS * 1e6
+        emit(name, us, f"dist={tr.dist[-1]:.3e};loss={tr.loss[-1]:.4f};"
+                       f"consensus={tr.consensus[-1]:.3e}")
+
+
+def main():
+    bench(hetero=True, stochastic=False, fig="fig2_het_full")
+    bench(hetero=True, stochastic=True, fig="fig3_het_minibatch")
+    bench(hetero=False, stochastic=False, fig="fig8_hom_full")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,138 @@
+"""Paper Figure 4 proxy: non-convex neural-net training (decentralized LM on
+synthetic token streams), homogeneous vs heterogeneous agent data.
+
+AlexNet/CIFAR10 is replaced by a small transformer LM (DESIGN.md §7); the
+validated claim is qualitative: LEAD trains stably under heterogeneity with
+2-bit compression while DGD needs uncompressed communication to keep up.
+Runs the *tree* simulator (8 virtual agents on one device, vmap'd grads,
+dense-W gossip) — the distributed runtime path is exercised by tests/dryrun.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.configs.registry import get_config
+from repro.core import lead as lead_mod
+from repro.core import topology
+from repro.core.compression import QuantizePNorm
+from repro.core.gossip import DenseGossip
+from repro.core.lead import LEADHyper
+from repro.data.synthetic import LMStreamConfig, lm_batch
+from repro.models import transformer as tfm
+
+N_AGENTS = 8
+STEPS = 100
+WARM = 20   # dual-transient steps excluded from the derived loss delta
+ETA = 0.02
+
+
+def tree_compress(compressor):
+    def fn(key, tree):
+        leaves, tdef = jax.tree_util.tree_flatten(tree)
+        keys = jax.random.split(key, len(leaves))
+        out = []
+        for k, l in zip(keys, leaves):
+            ks = jax.random.split(k, l.shape[0])
+            out.append(jax.vmap(compressor.compress)(ks, l))
+        return jax.tree_util.tree_unflatten(tdef, out)
+    return fn
+
+
+def run_algo(name, cfg, hetero, algorithm, bits=2, local_opt=None):
+    key = jax.random.PRNGKey(0)
+    W = jnp.asarray(topology.ring(N_AGENTS))
+    gossip = DenseGossip(W=W)
+    # all agents start from the same point (the standard decentralized setup)
+    p0 = tfm.init_params(cfg, key)
+    params = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (N_AGENTS,) + x.shape), p0)
+    ds = LMStreamConfig(vocab=cfg.vocab, seq_len=64, batch_per_agent=4,
+                        n_agents=N_AGENTS, heterogeneous=hetero)
+    grad_fn = jax.vmap(jax.grad(lambda p, b: tfm.loss_fn(p, cfg, b)[0]))
+    loss_fn = jax.jit(jax.vmap(lambda p, b: tfm.loss_fn(p, cfg, b)[0]))
+    hyper = LEADHyper(eta=ETA, gamma=1.0, alpha=0.5)
+    comp = tree_compress(QuantizePNorm(bits=bits, block=512))
+
+    if algorithm == "lead":
+        # beyond-paper: an optional local optimizer preconditions the
+        # gradient before the LEAD algebra (LEAD-Adam / LEAD-momentum)
+        opt = local_opt
+        g0 = grad_fn(params, lm_batch(ds, 0))
+        if opt is not None:
+            opt_state0 = opt.init(params)
+            g0, opt_state0 = opt.update(g0, opt_state0, params)
+            state = (lead_mod.init(params, g0, hyper, gossip.mix), opt_state0)
+
+            @jax.jit
+            def step(state, batch, k):
+                ls, os_ = state
+                g = grad_fn(ls.x, batch)
+                u, os_ = opt.update(g, os_, ls.x)
+                return (lead_mod.step(ls, u, k, hyper, gossip.mix, comp), os_)
+
+            get = lambda s: s[0].x
+        else:
+            state = lead_mod.init(params, g0, hyper, gossip.mix)
+
+            @jax.jit
+            def step(state, batch, k):
+                g = grad_fn(state.x, batch)
+                return lead_mod.step(state, g, k, hyper, gossip.mix, comp)
+
+            get = lambda s: s.x
+    elif algorithm == "dgd":
+        state = params
+
+        @jax.jit
+        def step(state, batch, k):
+            g = grad_fn(state, batch)
+            return jax.tree_util.tree_map(
+                lambda x, gl: x - ETA * gl,
+                gossip.mix(state), g)
+
+        get = lambda s: s
+    else:  # allreduce
+        state = params
+
+        @jax.jit
+        def step(state, batch, k):
+            g = grad_fn(state, batch)
+            gm = jax.tree_util.tree_map(
+                lambda l: jnp.mean(l, 0, keepdims=True).repeat(N_AGENTS, 0), g)
+            return jax.tree_util.tree_map(lambda x, gl: x - ETA * gl, state, gm)
+
+        get = lambda s: s
+
+    t0 = time.perf_counter()
+    l0 = None
+    for i in range(STEPS):
+        if i == WARM:
+            l0 = float(jnp.mean(loss_fn(get(state), lm_batch(ds, i))))
+        state = step(state, lm_batch(ds, i), jax.random.fold_in(key, i))
+    us = (time.perf_counter() - t0) / STEPS * 1e6
+    l1 = float(jnp.mean(loss_fn(get(state), lm_batch(ds, STEPS))))
+    # consensus across agents
+    cons = sum(float(jnp.sum((l - jnp.mean(l, 0, keepdims=True)) ** 2))
+               for l in jax.tree_util.tree_leaves(get(state)))
+    emit(name, us, f"loss0={l0:.3f};loss={l1:.3f};consensus={cons:.3e}")
+    return l0, l1
+
+
+def main():
+    cfg = get_config("granite-3-2b").reduced(n_layers=2, d_model=128, vocab=512)
+    from repro.optim.optimizers import Adam, Momentum
+    for hetero, tag in ((False, "hom"), (True, "het")):
+        run_algo(f"fig4_{tag}/LEAD(2bit)", cfg, hetero, "lead")
+        run_algo(f"fig4_{tag}/DGD", cfg, hetero, "dgd")
+        run_algo(f"fig4_{tag}/AllReduce-SGD", cfg, hetero, "allreduce")
+    # beyond-paper: local-optimizer preconditioning inside LEAD
+    run_algo("fig4ext_het/LEAD-momentum(2bit)", cfg, True, "lead",
+             local_opt=Momentum(beta=0.9))
+    run_algo("fig4ext_het/LEAD-Adam(2bit)", cfg, True, "lead",
+             local_opt=Adam())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Roofline table: aggregates reports/dryrun/*.json into per-(arch x shape)
+rows (§Roofline terms, dominant bottleneck, useful-FLOP fraction).
+Run `python -m repro.launch.dryrun --all` first (or rely on committed
+reports).  Emits one CSV row per record."""
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+REPORT_DIR = os.environ.get("DRYRUN_DIR", "reports/dryrun")
+
+
+def main():
+    files = sorted(glob.glob(os.path.join(REPORT_DIR, "*.json")))
+    if not files:
+        emit("roofline/none", 0.0, "no dryrun reports found; run repro.launch.dryrun")
+        return
+    for f in files:
+        with open(f) as fh:
+            r = json.load(fh)
+        rf = r.get("roofline", {})
+        name = f"roofline/{r['arch']}@{r['shape']}@{r['mesh']}"
+        emit(name, 0.0,
+             f"compute_s={rf.get('compute_s')};memory_s={rf.get('memory_s')};"
+             f"collective_s={rf.get('collective_s')};dominant={rf.get('dominant')};"
+             f"useful={rf.get('useful_flops_fraction')}")
+
+
+if __name__ == "__main__":
+    main()

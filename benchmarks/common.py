@@ -1,0 +1,28 @@
+"""Shared benchmark scaffolding: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows (derived carries the
+figure-specific quantity, e.g. final distance-to-optimum or error ratio).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_us(fn: Callable, *args, iters: int = 5, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r)
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.block_until_ready(r)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def emit(name: str, us: float, derived) -> None:
+    print(f"{name},{us:.1f},{derived}", flush=True)

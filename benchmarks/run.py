@@ -1,0 +1,46 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Modules:
+    bench_linreg        Fig 1  (linear regression, ring-8)
+    bench_theory        Remark 5 (bit-width sweep) + Corollary 1 (kappa_g)
+    bench_logreg        Fig 2/3 + App. D.2 (logistic regression, het/hom)
+    bench_compression   Fig 5/6 (p-norm quantization error, methods) + kernels
+    bench_sensitivity   Fig 7  (alpha x gamma robustness grid)
+    bench_nn            Fig 4 proxy (non-convex LM, hom/het)
+    bench_roofline      §Roofline aggregation from reports/dryrun
+"""
+import sys
+import traceback
+
+from benchmarks import (bench_compression, bench_linreg, bench_logreg,
+                        bench_nn, bench_roofline, bench_sensitivity,
+                        bench_theory)
+
+ALL = {
+    "linreg": bench_linreg.main,
+    "logreg": bench_logreg.main,
+    "compression": bench_compression.main,
+    "sensitivity": bench_sensitivity.main,
+    "nn": bench_nn.main,
+    "theory": bench_theory.main,
+    "roofline": bench_roofline.main,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(ALL)
+    print("name,us_per_call,derived")
+    failed = []
+    for n in names:
+        try:
+            ALL[n]()
+        except Exception:
+            failed.append(n)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED benchmarks: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,49 @@
+"""Quickstart: LEAD on an 8-agent ring, 2-bit compression, linear regression.
+
+Reproduces the paper's headline in ~10 seconds on CPU: linear convergence to
+the consensual optimum under 16x communication compression, where DGD stalls.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import topology
+from repro.core.baselines import DGD, NIDS
+from repro.core.compression import QuantizePNorm
+from repro.core.convex import LinearRegression
+from repro.core.gossip import DenseGossip
+from repro.core.simulator import LEADSim, run
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    prob = LinearRegression.generate(key, n_agents=8, m=100, d=100)
+    gossip = DenseGossip(W=jnp.asarray(topology.ring(8)))
+    mu, L = prob.mu_L
+    eta = 1.0 / L        # safe for every algorithm (DGD diverges at 2/(mu+L))
+    print(f"problem: 8 agents, d=100, mu={mu:.3f}, L={L:.3f}, eta={eta:.3f}")
+
+    q2 = QuantizePNorm(bits=2, block=512)
+    algos = {
+        "LEAD (2-bit)": LEADSim(gossip=gossip, compressor=q2, eta=eta),
+        "NIDS (32-bit)": NIDS(gossip=gossip, eta=eta),
+        "DGD  (32-bit)": DGD(gossip=gossip, eta=eta),
+    }
+    print(f"{'iter':>6} | " + " | ".join(f"{n:>14}" for n in algos))
+    traces = {n: run(a, prob, prob.x_star, iters=200, key=key)
+              for n, a in algos.items()}
+    for it in (0, 24, 49, 99, 149, 199):
+        row = " | ".join(f"{traces[n].dist[it]:14.3e}" for n in algos)
+        print(f"{it + 1:>6} | {row}")
+
+    lead_bits = q2.wire_bits(prob.d) * 200
+    full_bits = 32 * prob.d * 200
+    print(f"\nbits/agent for 200 iters: LEAD {lead_bits:.3g} vs "
+          f"uncompressed {full_bits:.3g}  ({full_bits / lead_bits:.1f}x saving)")
+    print("LEAD reaches machine-precision-level error with ~10x fewer bits;")
+    print("DGD stalls at its heterogeneity bias (the paper's motivation).")
+
+
+if __name__ == "__main__":
+    main()

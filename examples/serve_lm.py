@@ -1,0 +1,58 @@
+"""Serving example: prefill a batch of prompts then decode tokens with the
+production cache layout (full + rolling-window caches, GQA).
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch gemma3-12b]
+(reduced configs; greedy sampling from random-init weights — demonstrates
+the serving *mechanics*: batched prefill, ring-buffer local caches, decode.)
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config
+from repro.data.synthetic import stub_memory
+from repro.models import decode_step, init_params, prefill
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-12b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=96)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    B, S = args.batch, args.prompt_len
+    prompts = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    memory = stub_memory(cfg.family, (B,), cfg)
+
+    t0 = time.time()
+    pf = jax.jit(lambda p, t, m: prefill(p, cfg, t, memory=m,
+                                         cache_len=S + args.gen))
+    logits, cache = pf(params, prompts, memory)
+    jax.block_until_ready(logits)
+    print(f"{cfg.name}: prefill {B}x{S} in {time.time()-t0:.2f}s "
+          f"(cache leaves: {len(jax.tree_util.tree_leaves(cache))})")
+
+    dec = jax.jit(lambda p, t, c: decode_step(p, cfg, t, c))
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    out = [tok]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        logits, cache = dec(params, tok, cache)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    dt = (time.time() - t0) / (args.gen - 1)
+    gen = jnp.concatenate(out, 1)
+    print(f"decoded {args.gen} tokens/seq, {dt*1e3:.1f} ms/token")
+    print("sample token ids:", gen[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""End-to-end example: decentralized LEAD training of a language model on
+8 virtual devices (4 agents x TP-2), heterogeneous token streams, with a
+checkpoint save/restore cycle.
+
+Default is a CI-sized model; pass --full for the ~100M-parameter
+configuration (same code path — use on real hardware).
+
+    PYTHONPATH=src python examples/train_lm.py [--full] [--steps 60]
+"""
+import argparse
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+SRC = os.path.join(HERE, "..", "src")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="~100M params (slow on CPU; meant for real devices)")
+    ap.add_argument("--steps", type=int, default=60)
+    args = ap.parse_args()
+
+    cmd = [sys.executable, "-m", "repro.launch.train",
+           "--devices", "8", "--mesh-shape", "4,2",
+           "--arch", "granite-3-2b",
+           "--steps", str(args.steps),
+           "--algorithm", "lead", "--bits", "2",
+           "--ckpt-dir", os.path.join(HERE, "..", "reports", "ckpt_demo")]
+    if not args.full:
+        cmd.append("--reduced")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    print("+", " ".join(cmd))
+    sys.exit(subprocess.call(cmd, env=env))
+
+
+if __name__ == "__main__":
+    main()

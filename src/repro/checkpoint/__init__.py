@@ -1,0 +1,1 @@
+from repro.checkpoint.checkpoint import load_pytree, restore, save, save_pytree

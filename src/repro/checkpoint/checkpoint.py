@@ -1,0 +1,80 @@
+"""Sharding-aware pytree checkpointing (npz + json tree spec, no orbax).
+
+save(): gathers device arrays to host, stores leaves in a single .npz plus a
+json treedef (path-keyed).  restore(): loads and re-places onto the target
+shardings (or host).  Atomic via tmp-file rename.  A step-numbered directory
+layout with a LATEST pointer supports resumable training.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = ["/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+            for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return keys, leaves, treedef
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    keys, leaves, _ = _paths(tree)
+    arrays = {f"leaf_{i}": np.asarray(jax.device_get(l)) for i, l in enumerate(leaves)}
+    meta = {"keys": keys}
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, __meta__=json.dumps(meta), **arrays)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def load_pytree(path: str, like: Any, shardings: Optional[Any] = None) -> Any:
+    """Restore into the structure of `like` (leaf order must match save)."""
+    with np.load(path, allow_pickle=False) as z:
+        n = len([k for k in z.files if k.startswith("leaf_")])
+        arrays = [z[f"leaf_{i}"] for i in range(n)]
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    assert len(leaves) == len(arrays), \
+        f"checkpoint has {len(arrays)} leaves, target {len(leaves)}"
+    out = []
+    shard_leaves = jax.tree_util.tree_leaves(shardings) if shardings is not None else [None] * len(arrays)
+    for a, ref, sh in zip(arrays, leaves, shard_leaves):
+        assert a.shape == ref.shape, f"shape mismatch {a.shape} vs {ref.shape}"
+        arr = jax.device_put(a.astype(ref.dtype), sh) if sh is not None else a.astype(ref.dtype)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# -- step-numbered training checkpoints --------------------------------------
+
+def save(ckpt_dir: str, step: int, tree: Any) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    save_pytree(path, tree)
+    with open(os.path.join(ckpt_dir, "LATEST"), "w") as f:
+        f.write(str(step))
+    return path
+
+
+def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
+            shardings: Optional[Any] = None):
+    latest = os.path.join(ckpt_dir, "LATEST")
+    if step is None:
+        if not os.path.exists(latest):
+            return None, -1
+        step = int(open(latest).read().strip())
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    return load_pytree(path, like, shardings), step

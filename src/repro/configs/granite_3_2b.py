@@ -1,0 +1,9 @@
+"""IBM Granite 3.0 2B base — dense GQA [hf:ibm-granite/granite-3.0-2b-base]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-3-2b", family="dense",
+    n_layers=40, d_model=2048, n_heads=32, kv_heads=8, d_ff=8192, vocab=49155,
+    block_pattern=("attn",),
+    source="hf:ibm-granite/granite-3.0-2b-base",
+)

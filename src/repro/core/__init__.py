@@ -1,0 +1,15 @@
+"""Core: the paper's contribution — LEAD + compression + gossip + baselines."""
+from repro.core.compression import (
+    Identity, QuantizePNorm, RandK, TopK, compress_pytree, estimate_C,
+)
+from repro.core.gossip import DenseGossip, RingGossip
+from repro.core.lead import LEADHyper, LEADState, init as lead_init, step as lead_step
+from repro.core import baselines, convex, topology
+from repro.core.simulator import LEADSim, run as simulate
+
+__all__ = [
+    "Identity", "QuantizePNorm", "RandK", "TopK", "compress_pytree",
+    "estimate_C", "DenseGossip", "RingGossip", "LEADHyper", "LEADState",
+    "lead_init", "lead_step", "baselines", "convex", "topology", "LEADSim",
+    "simulate",
+]

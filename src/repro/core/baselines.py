@@ -1,0 +1,229 @@
+"""Baseline decentralized algorithms the paper compares against (§2, §5).
+
+All baselines are written in the simulator representation: the iterate X is a
+single (n, d) array (n agents, d coordinates), the mixing is a DenseGossip,
+and stochastic gradients arrive as an (n, d) array evaluated at the current X.
+
+Implemented (source in brackets):
+  * DGD / D-PSGD           [Nedic & Ozdaglar 2009; Lian et al. 2017]
+  * NIDS                   [Li, Shi, Yan 2019] — two-step form, eqs. (4)-(5)
+  * EXTRA                  [Shi et al. 2015]
+  * D2                     [Tang et al. 2018b] — eq. (15)
+  * CHOCO-SGD              [Koloskova et al. 2019]
+  * DeepSqueeze            [Tang et al. 2019a]
+  * QDGD                   [Reisizadeh et al. 2019a]
+  * DCD-SGD                [Tang et al. 2018a]
+
+Each algorithm exposes  init(x0, g0, key) -> state  and
+step(state, g, key) -> state, where g = grad F(state.x; xi).  A uniform
+`state.x` field holds the current iterates so drivers can be generic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gossip import DenseGossip
+
+
+class SimpleState(NamedTuple):
+    x: jnp.ndarray
+    k: jnp.ndarray
+
+
+class PrevGradState(NamedTuple):
+    x: jnp.ndarray
+    x_prev: jnp.ndarray
+    g_prev: jnp.ndarray
+    k: jnp.ndarray
+
+
+class HatState(NamedTuple):
+    x: jnp.ndarray
+    xhat: jnp.ndarray        # public (quantized) copies, one per agent
+    xhat_w: jnp.ndarray      # sum_j w_ij xhat_j, tracked incrementally
+    k: jnp.ndarray
+
+
+class ErrorState(NamedTuple):
+    x: jnp.ndarray
+    e: jnp.ndarray           # error-compensation memory
+    k: jnp.ndarray
+
+
+class DualState(NamedTuple):
+    x: jnp.ndarray
+    d: jnp.ndarray
+    k: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class DGD:
+    """Decentralized gradient descent: X+ = W X - eta g (no compression)."""
+    gossip: DenseGossip
+    eta: float = 0.1
+
+    def init(self, x0, g0, key):
+        return SimpleState(x=x0, k=jnp.zeros((), jnp.int32))
+
+    def step(self, s: SimpleState, g, key):
+        x = self.gossip.mix(s.x) - self.eta * g
+        return SimpleState(x=x, k=s.k + 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class NIDS:
+    """NIDS two-step primal-dual form (paper eqs. (4)-(5))."""
+    gossip: DenseGossip
+    eta: float = 0.1
+
+    def init(self, x0, g0, key):
+        x1 = x0 - self.eta * g0
+        d1 = jnp.zeros_like(x0)
+        return DualState(x=x1, d=d1, k=jnp.zeros((), jnp.int32))
+
+    def step(self, s: DualState, g, key):
+        y = s.x - self.eta * g - self.eta * s.d
+        d = s.d + self.gossip.i_minus_w(y) / (2.0 * self.eta)
+        x = s.x - self.eta * g - self.eta * d
+        return DualState(x=x, d=d, k=s.k + 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class EXTRA:
+    """EXTRA [Shi et al. 2015]:
+    X^{k+2} = (I+W) X^{k+1} - Wtilde X^k - eta (g^{k+1} - g^k),
+    Wtilde = (I+W)/2."""
+    gossip: DenseGossip
+    eta: float = 0.1
+
+    def init(self, x0, g0, key):
+        x1 = self.gossip.mix(x0) - self.eta * g0
+        return PrevGradState(x=x1, x_prev=x0, g_prev=g0, k=jnp.zeros((), jnp.int32))
+
+    def step(self, s: PrevGradState, g, key):
+        Wx = self.gossip.mix(s.x)
+        Wtx_prev = 0.5 * (s.x_prev + self.gossip.mix(s.x_prev))
+        x = s.x + Wx - Wtx_prev - self.eta * (g - s.g_prev)
+        return PrevGradState(x=x, x_prev=s.x, g_prev=g, k=s.k + 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class D2:
+    """D2 [Tang et al. 2018b], paper eq. (15):
+    X^{k+1} = (I+W)/2 (2 X^k - X^{k-1} - eta g^k + eta g^{k-1})."""
+    gossip: DenseGossip
+    eta: float = 0.1
+
+    def init(self, x0, g0, key):
+        x1 = x0 - self.eta * g0
+        return PrevGradState(x=x1, x_prev=x0, g_prev=g0, k=jnp.zeros((), jnp.int32))
+
+    def step(self, s: PrevGradState, g, key):
+        inner = 2.0 * s.x - s.x_prev - self.eta * g + self.eta * s.g_prev
+        x = 0.5 * (inner + self.gossip.mix(inner))
+        return PrevGradState(x=x, x_prev=s.x, g_prev=g, k=s.k + 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class CHOCO_SGD:
+    """CHOCO-SGD [Koloskova et al. 2019].
+
+    x_half = x - eta g
+    q      = Q(x_half - xhat_self)                    (difference compression)
+    xhat  += q   (all agents update their public copies with received q)
+    x+     = x_half + gamma * (W xhat - xhat_self)    (quantized gossip)
+    """
+    gossip: DenseGossip
+    compressor: Any
+    eta: float = 0.1
+    gamma: float = 0.8
+
+    def init(self, x0, g0, key):
+        xhat = jnp.zeros_like(x0)
+        return HatState(x=x0, xhat=xhat, xhat_w=self.gossip.mix(xhat),
+                        k=jnp.zeros((), jnp.int32))
+
+    def step(self, s: HatState, g, key):
+        x_half = s.x - self.eta * g
+        keys = jax.random.split(key, s.x.shape[0])
+        q = jax.vmap(self.compressor.compress)(keys, x_half - s.xhat)
+        xhat = s.xhat + q
+        xhat_w = s.xhat_w + self.gossip.mix(q)
+        x = x_half + self.gamma * (xhat_w - xhat)
+        return HatState(x=x, xhat=xhat, xhat_w=xhat_w, k=s.k + 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeepSqueeze:
+    """DeepSqueeze [Tang et al. 2019a]: error-compensated direct compression.
+
+    v   = x - eta g + e          (compensate last step's compression error)
+    c   = Q(v);  e+ = v - c      (store new error)
+    x+  = c + gamma * (W c - c)  (gossip on the compressed models)
+    """
+    gossip: DenseGossip
+    compressor: Any
+    eta: float = 0.1
+    gamma: float = 0.2
+
+    def init(self, x0, g0, key):
+        return ErrorState(x=x0, e=jnp.zeros_like(x0), k=jnp.zeros((), jnp.int32))
+
+    def step(self, s: ErrorState, g, key):
+        v = s.x - self.eta * g + s.e
+        keys = jax.random.split(key, s.x.shape[0])
+        c = jax.vmap(self.compressor.compress)(keys, v)
+        e = v - c
+        x = c + self.gamma * (self.gossip.mix(c) - c)
+        return ErrorState(x=x, e=e, k=s.k + 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class QDGD:
+    """QDGD [Reisizadeh et al. 2019a]: direct quantized model exchange.
+
+    x+ = x + gamma * (W Q(x) - Q_self(x)) ... - eta g
+    (each agent transmits Q(x_i); receives neighbors' quantized models).
+    """
+    gossip: DenseGossip
+    compressor: Any
+    eta: float = 0.1
+    gamma: float = 0.2
+
+    def init(self, x0, g0, key):
+        return SimpleState(x=x0, k=jnp.zeros((), jnp.int32))
+
+    def step(self, s: SimpleState, g, key):
+        keys = jax.random.split(key, s.x.shape[0])
+        q = jax.vmap(self.compressor.compress)(keys, s.x)
+        x = s.x + self.gamma * (self.gossip.mix(q) - q) - self.eta * g
+        return SimpleState(x=x, k=s.k + 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class DCD_SGD:
+    """DCD-SGD [Tang et al. 2018a]: difference compression of the update.
+
+    x+    = W xhat_local_view - eta g   with xhat the public copies
+    q     = Q(x+ - xhat_self); xhat += q
+    (unstable under aggressive compression — reproduced as in the paper.)
+    """
+    gossip: DenseGossip
+    compressor: Any
+    eta: float = 0.1
+
+    def init(self, x0, g0, key):
+        return HatState(x=x0, xhat=x0, xhat_w=self.gossip.mix(x0),
+                        k=jnp.zeros((), jnp.int32))
+
+    def step(self, s: HatState, g, key):
+        x = s.xhat_w - self.eta * g
+        keys = jax.random.split(key, s.x.shape[0])
+        q = jax.vmap(self.compressor.compress)(keys, x - s.xhat)
+        xhat = s.xhat + q
+        xhat_w = s.xhat_w + self.gossip.mix(q)
+        return HatState(x=x, xhat=xhat, xhat_w=xhat_w, k=s.k + 1)

@@ -1,0 +1,221 @@
+"""Communication-compression operators (paper §5 / Appendix C).
+
+The paper's workhorse is the unbiased p-norm b-bit stochastic quantizer
+(Theorem 3):
+
+    Q_p(x) = (||x||_p * sign(x) * 2^{-(b-1)}) .* floor( 2^{b-1} |x| / ||x||_p + u )
+
+with u ~ Uniform[0,1]^d.  It is unbiased and its variance is bounded by
+(1/4) * 2^{-2(b-1)} * d_block * ||x||_p^2, which is minimized by p = inf
+(Theorem 3: ||x||_p <= ||x||_q for q <= p).  The paper applies it *blockwise*
+with block = 512, b = 2.
+
+Every operator implements the `Compressor` protocol:
+
+    compress(key, x)      -> xhat               (the decoded estimate; the
+                                                 simulator path and the LEAD
+                                                 algebra only need xhat)
+    encode(key, x)        -> (payload, spec)    payload: pytree of arrays (the
+                                                 wire representation), spec:
+                                                 static metadata (shapes etc.)
+    decode(payload, spec) -> xhat
+    wire_bits(n_elements) -> float               true bits on the wire, used by
+                                                 the roofline accounting
+    variance_constant(d)  -> C bound from Assumption 2 (if known)
+
+Unbiasedness (Assumption 2) is property-tested in tests/test_compression.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import Pytree
+
+
+def _block_view(x: jnp.ndarray, block: int):
+    """Pad a flattened array to a multiple of `block` and reshape to (nb, block)."""
+    flat = jnp.ravel(x)
+    n = flat.shape[0]
+    nb = -(-n // block)
+    pad = nb * block - n
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(nb, block), n
+
+
+def _unblock(blocks: jnp.ndarray, n: int, shape):
+    return jnp.reshape(jnp.ravel(blocks)[:n], shape)
+
+
+def _pnorm(x: jnp.ndarray, p, axis=-1, keepdims=True):
+    if p == jnp.inf or p == math.inf or p == "inf":
+        return jnp.max(jnp.abs(x), axis=axis, keepdims=keepdims)
+    return jnp.sum(jnp.abs(x) ** p, axis=axis, keepdims=keepdims) ** (1.0 / p)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizePNorm:
+    """Unbiased blockwise p-norm b-bit stochastic quantizer (paper Thm 3).
+
+    bits:  total bits per element for the integer code (paper uses 2).
+    p:     norm order; inf is the paper's choice.
+    block: block size for the blockwise application (paper uses 512).
+    """
+    bits: int = 2
+    p: float = math.inf
+    block: int = 512
+
+    def __post_init__(self):
+        # codes live in [-(2^{b-1}), 2^{b-1}] and are stored in int8 lanes:
+        # bits <= 7 keeps the top level representable (the paper uses 2).
+        assert 1 <= self.bits <= 7, "int8 code container supports bits in [1, 7]"
+
+    # -- simulator path ----------------------------------------------------
+    def compress(self, key, x: jnp.ndarray) -> jnp.ndarray:
+        payload, spec = self.encode(key, x)
+        return self.decode(payload, spec)
+
+    # -- wire path ----------------------------------------------------------
+    def encode(self, key, x: jnp.ndarray):
+        b = self.bits
+        blocks, n = _block_view(x, self.block)
+        scale = _pnorm(blocks.astype(jnp.float32), self.p)   # (nb, 1)
+        safe = jnp.where(scale > 0, scale, 1.0)
+        u = jax.random.uniform(key, blocks.shape, jnp.float32)
+        lvl = jnp.floor((2.0 ** (b - 1)) * jnp.abs(blocks.astype(jnp.float32)) / safe + u)
+        # levels live in [0, 2^{b-1}]  (inclusive upper end reachable when
+        # |x| == scale and u -> 1), which fits b bits alongside the sign.
+        lvl = jnp.minimum(lvl, 2.0 ** (b - 1))
+        code = (jnp.sign(blocks) * lvl).astype(jnp.int8)
+        payload = {
+            "code": code,
+            "scale": jnp.where(scale > 0, scale, 0.0).astype(jnp.float32),
+        }
+        spec = {"n": n, "shape": x.shape, "dtype": jnp.dtype(x.dtype).name}
+        return payload, spec
+
+    def decode(self, payload: dict, spec: dict) -> jnp.ndarray:
+        b = self.bits
+        vals = payload["scale"] * (2.0 ** (1 - b)) * payload["code"].astype(jnp.float32)
+        out = _unblock(vals, spec["n"], spec["shape"])
+        return out.astype(spec["dtype"])
+
+    def wire_bits(self, n_elements: int) -> float:
+        # b bits of code per element (sign + level fit in b bits for the
+        # b-bit quantizer: level in [0, 2^{b-1}]) + one f32 scale per block.
+        nb = -(-n_elements // self.block)
+        return n_elements * (self.bits + 1) + nb * 32  # +1: sign bit
+
+    def variance_constant(self, d_block: Optional[int] = None) -> float:
+        """Upper bound on C in  E||x - Q(x)||^2 <= C ||x||^2  (Remark 7).
+
+        For p=inf and blockwise application, ||x||_inf <= ||x||_2 per block so
+        C <= d_block * 2^{-2(b-1)} / 4.
+        """
+        d = d_block if d_block is not None else self.block
+        return d * (2.0 ** (-2 * (self.bits - 1))) / 4.0
+
+
+@dataclasses.dataclass(frozen=True)
+class TopK:
+    """Biased top-k sparsifier (used in the Fig. 6 compression-error study).
+
+    ratio: fraction of entries kept.  Index transmission costs log2(d) bits
+    per kept entry (no shared-seed trick possible).
+    """
+    ratio: float = 0.1
+
+    def compress(self, key, x: jnp.ndarray) -> jnp.ndarray:
+        del key
+        flat = jnp.ravel(x)
+        k = max(1, int(flat.shape[0] * self.ratio))
+        thresh = jnp.sort(jnp.abs(flat))[-k]
+        mask = jnp.abs(flat) >= thresh
+        return jnp.reshape(flat * mask, x.shape)
+
+    def encode(self, key, x):
+        return {"dense": self.compress(key, x)}, {}
+
+    def decode(self, payload, spec):
+        return payload["dense"]
+
+    def wire_bits(self, n_elements: int) -> float:
+        k = max(1, int(n_elements * self.ratio))
+        return k * (32 + math.log2(max(n_elements, 2)))
+
+    def variance_constant(self, d_block=None):
+        return None  # biased: Assumption 2 does not hold
+
+
+@dataclasses.dataclass(frozen=True)
+class RandK:
+    """Unbiased random-k sparsifier: keep a random fraction, rescale by 1/ratio.
+
+    With a shared PRNG seed, indices need not be transmitted (paper App. C.2).
+    """
+    ratio: float = 0.1
+    rescale: bool = True
+
+    def compress(self, key, x: jnp.ndarray) -> jnp.ndarray:
+        mask = jax.random.bernoulli(key, self.ratio, x.shape)
+        scale = (1.0 / self.ratio) if self.rescale else 1.0
+        return jnp.where(mask, x * scale, 0.0).astype(x.dtype)
+
+    def encode(self, key, x):
+        return {"dense": self.compress(key, x)}, {}
+
+    def decode(self, payload, spec):
+        return payload["dense"]
+
+    def wire_bits(self, n_elements: int) -> float:
+        return n_elements * self.ratio * 32
+
+    def variance_constant(self, d_block=None):
+        # E||x - Q(x)||^2 = (1/ratio - 1)||x||^2 for the rescaled variant.
+        return 1.0 / self.ratio - 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Identity:
+    """No compression (C = 0); LEAD reduces to NIDS with gamma=1."""
+
+    def compress(self, key, x):
+        del key
+        return x
+
+    def encode(self, key, x):
+        return {"dense": x}, {}
+
+    def decode(self, payload, spec):
+        return payload["dense"]
+
+    def wire_bits(self, n_elements: int) -> float:
+        return n_elements * 32
+
+    def variance_constant(self, d_block=None):
+        return 0.0
+
+
+# -- pytree lifting ---------------------------------------------------------
+
+def compress_pytree(compressor, key, tree: Pytree) -> Pytree:
+    """Apply a compressor leaf-wise to a pytree with split keys."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = [compressor.compress(k, l) for k, l in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def estimate_C(compressor, key, d=4096, trials=64, dtype=jnp.float32) -> float:
+    """Monte-Carlo estimate of the contraction constant C (Assumption 2)."""
+    def one(k):
+        kx, kq = jax.random.split(k)
+        x = jax.random.normal(kx, (d,), dtype)
+        xh = compressor.compress(kq, x)
+        return jnp.sum((x - xh) ** 2) / jnp.sum(x ** 2)
+    vals = jax.vmap(one)(jax.random.split(key, trials))
+    return float(jnp.max(vals))

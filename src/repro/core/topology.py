@@ -1,0 +1,139 @@
+"""Communication topologies and mixing matrices (Assumption 1).
+
+A mixing matrix W must be symmetric, doubly stochastic, and primitive with
+eigenvalues -1 < lambda_n <= ... <= lambda_2 < lambda_1 = 1.
+
+The paper's experiments use an 8-agent ring with uniform weight 1/3
+(self + two 1-hop neighbors).  We provide the common graph families plus the
+spectral quantities used by Theorem 1 / Corollary 1:
+
+    beta    = lambda_max(I - W)
+    kappa_g = lambda_max(I - W) / lambda_min^+(I - W)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def ring(n: int) -> np.ndarray:
+    """Ring with uniform 1/3 weights (paper §5 setup).  n=1,2 degenerate."""
+    if n == 1:
+        return np.ones((1, 1))
+    if n == 2:
+        return np.full((2, 2), 0.5)
+    W = np.zeros((n, n))
+    for i in range(n):
+        W[i, i] = 1.0 / 3.0
+        W[i, (i + 1) % n] = 1.0 / 3.0
+        W[i, (i - 1) % n] = 1.0 / 3.0
+    return W
+
+
+def chain(n: int) -> np.ndarray:
+    """Path graph with Metropolis–Hastings weights."""
+    A = np.zeros((n, n), dtype=bool)
+    for i in range(n - 1):
+        A[i, i + 1] = A[i + 1, i] = True
+    return metropolis(A)
+
+
+def fully_connected(n: int) -> np.ndarray:
+    return np.full((n, n), 1.0 / n)
+
+
+def star(n: int) -> np.ndarray:
+    A = np.zeros((n, n), dtype=bool)
+    A[0, 1:] = A[1:, 0] = True
+    return metropolis(A)
+
+
+def torus_2d(rows: int, cols: int) -> np.ndarray:
+    """2-D torus; uniform weight over the 4 neighbors + self."""
+    n = rows * cols
+    W = np.zeros((n, n))
+    w = 1.0 / 5.0
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            W[i, i] = w
+            for dr, dc in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+                j = ((r + dr) % rows) * cols + (c + dc) % cols
+                W[i, j] += w
+    return W
+
+
+def erdos_renyi(n: int, p: float = 0.5, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    while True:
+        A = rng.random((n, n)) < p
+        A = np.triu(A, 1)
+        A = A | A.T
+        # ensure connectivity via a ring backbone
+        for i in range(n):
+            A[i, (i + 1) % n] = A[(i + 1) % n, i] = True
+        return metropolis(A)
+
+
+def metropolis(adj: np.ndarray) -> np.ndarray:
+    """Metropolis–Hastings weights for an adjacency matrix (symmetric, d.s.)."""
+    n = adj.shape[0]
+    deg = adj.sum(axis=1)
+    W = np.zeros((n, n))
+    for i in range(n):
+        for j in range(n):
+            if i != j and adj[i, j]:
+                W[i, j] = 1.0 / (1.0 + max(deg[i], deg[j]))
+        W[i, i] = 1.0 - W[i].sum()
+    return W
+
+
+TOPOLOGIES = {
+    "ring": ring,
+    "chain": chain,
+    "full": fully_connected,
+    "star": star,
+}
+
+
+def make_mixing(name: str, n: int) -> np.ndarray:
+    if name not in TOPOLOGIES:
+        raise KeyError(f"unknown topology {name!r}; options: {sorted(TOPOLOGIES)}")
+    return TOPOLOGIES[name](n)
+
+
+# -- spectral quantities (Theorem 1 / Corollary 1) ---------------------------
+
+def spectral_gap(W: np.ndarray) -> float:
+    ev = np.sort(np.linalg.eigvalsh(W))
+    return float(1.0 - max(abs(ev[0]), abs(ev[-2]))) if len(ev) > 1 else 1.0
+
+
+def beta(W: np.ndarray) -> float:
+    """lambda_max(I - W)."""
+    ev = np.linalg.eigvalsh(np.eye(W.shape[0]) - W)
+    return float(ev[-1])
+
+
+def lambda_min_plus(W: np.ndarray) -> float:
+    """Smallest nonzero eigenvalue of I - W."""
+    ev = np.linalg.eigvalsh(np.eye(W.shape[0]) - W)
+    pos = ev[ev > 1e-10]
+    return float(pos[0]) if len(pos) else 0.0
+
+
+def kappa_g(W: np.ndarray) -> float:
+    lm = lambda_min_plus(W)
+    return beta(W) / lm if lm > 0 else float("inf")
+
+
+def check_mixing(W: np.ndarray, atol: float = 1e-8) -> None:
+    """Validate Assumption 1; raises AssertionError on violation."""
+    n = W.shape[0]
+    assert W.shape == (n, n), "W must be square"
+    assert np.allclose(W, W.T, atol=atol), "W must be symmetric"
+    assert np.allclose(W.sum(axis=1), 1.0, atol=atol), "rows must sum to 1"
+    assert np.all(W >= -atol), "W must be nonnegative"
+    if n > 1:
+        ev = np.sort(np.linalg.eigvalsh(W))
+        assert ev[0] > -1.0 + 1e-10, "lambda_n(W) must be > -1"
+        assert ev[-2] < 1.0 - 1e-12, "graph must be connected (lambda_2 < 1)"

@@ -1,0 +1,74 @@
+"""Deterministic synthetic data pipeline.
+
+Decentralized training needs *per-agent* data shards with a controllable
+heterogeneity knob (the paper's homogeneous vs heterogeneous settings).  For
+language-model training we synthesize a token stream from a per-agent Markov
+chain: in the heterogeneous setting each agent samples from a *different*
+transition matrix (disjoint preferred-token blocks), so local gradients
+disagree at the optimum — the regime where DGD-type methods break and LEAD's
+gradient correction matters.
+
+Everything is seeded and stateless: batch(i, step) is a pure function, so the
+pipeline needs no host state, checkpoints trivially (just the step counter),
+and is identical across restarts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LMStreamConfig:
+    vocab: int
+    seq_len: int
+    batch_per_agent: int
+    n_agents: int
+    heterogeneous: bool = True
+    seed: int = 0
+    block_size: int = 64          # preferred-token block per agent (het mode)
+
+
+def lm_batch(cfg: LMStreamConfig, step: int, agent: Optional[int] = None
+             ) -> Dict[str, jnp.ndarray]:
+    """Batch for `agent` at `step` (or all agents stacked when agent=None).
+
+    Returns {tokens: (.., B, S), labels: (.., B, S)} with labels = next token.
+    The "Markov chain" is collapsed to a mixture: with prob 0.8 a token from
+    the agent's preferred block, else uniform — cheap, seeded, heterogeneous.
+    """
+    def one(a):
+        key = jax.random.fold_in(jax.random.fold_in(
+            jax.random.PRNGKey(cfg.seed), step), a)
+        k1, k2, k3 = jax.random.split(key, 3)
+        B, S = cfg.batch_per_agent, cfg.seq_len + 1
+        uniform = jax.random.randint(k1, (B, S), 0, cfg.vocab)
+        if cfg.heterogeneous:
+            lo = (a * cfg.block_size) % max(cfg.vocab - cfg.block_size, 1)
+            pref = lo + jax.random.randint(k2, (B, S), 0, cfg.block_size)
+            use_pref = jax.random.bernoulli(k3, 0.8, (B, S))
+            toks = jnp.where(use_pref, pref, uniform)
+        else:
+            toks = uniform
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    if agent is not None:
+        return one(agent)
+    batches = [one(a) for a in range(cfg.n_agents)]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *batches)
+
+
+def stub_memory(family: str, batch_shape, cfg, dtype=jnp.float32, seed: int = 0):
+    """Pre-computed modality embeddings (the one allowed stub): vision patch
+    embeddings for VLM, mel/conv frame embeddings for audio."""
+    key = jax.random.PRNGKey(seed)
+    if family == "vlm":
+        M = cfg.vis_tokens
+    elif family == "audio":
+        M = cfg.n_audio_frames
+    else:
+        return None
+    return 0.02 * jax.random.normal(key, (*batch_shape, M, cfg.d_model), dtype)

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the LEAD hot path (validated with interpret=True).
+
+quantize:     blockwise inf-norm b-bit stochastic quantization (paper Thm 3)
+lead_update:  fused LEAD state update + fused diff-encode (Alg. 1 lines 4-7)
+ops:          jit'd public wrappers (padding, dither, pytree plumbing)
+ref:          pure-jnp oracles the tests assert against
+"""
+from repro.kernels import ops, ref
+from repro.kernels.ops import (
+    lead_diff_encode_flat, lead_update_flat, pack_codes, quantize_decode,
+    quantize_encode, quantize_roundtrip, unpack_codes,
+)

@@ -1,0 +1,129 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+These handle the bookkeeping the kernels don't: flattening arbitrary arrays /
+pytrees to the (n_blocks, block) layout, padding to tile multiples, dither
+generation, and unpadding.  `interpret` defaults to True (CPU validation);
+on real TPU pass interpret=False.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import lead_update as _lu
+from repro.kernels import quantize as _q
+
+DEFAULT_BLOCK = _q.DEFAULT_BLOCK
+
+
+def _to_blocks(x: jnp.ndarray, block: int, tile_b: int):
+    """Flatten + pad to (nb, block) with nb a multiple of tile_b."""
+    flat = jnp.ravel(x).astype(jnp.float32)
+    n = flat.shape[0]
+    nb = -(-n // block)
+    nb_pad = -(-nb // tile_b) * tile_b
+    flat = jnp.pad(flat, (0, nb_pad * block - n))
+    return flat.reshape(nb_pad, block), n
+
+
+def _from_blocks(blocks: jnp.ndarray, n: int, shape, dtype):
+    return jnp.ravel(blocks)[:n].reshape(shape).astype(dtype)
+
+
+def _pick_tile(n_elements: int, block: int, tile_b: int) -> int:
+    """Shrink the tile for small inputs so padding stays bounded."""
+    nb = max(1, -(-n_elements // block))
+    t = tile_b
+    while t > 1 and t > nb:
+        t //= 2
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block", "tile_b", "interpret"))
+def quantize_encode(key, x: jnp.ndarray, *, bits: int = 2,
+                    block: int = DEFAULT_BLOCK, tile_b: int = _q.DEFAULT_TILE_B,
+                    interpret: bool = True):
+    """Quantize any-shape x; returns (code (nb, block) int8, scale (nb,1) f32).
+    Blocks are the wire payload; decode with the original shape."""
+    tile_b = _pick_tile(x.size, block, tile_b)
+    xb, _ = _to_blocks(x, block, tile_b)
+    u = jax.random.uniform(key, xb.shape, jnp.float32)
+    return _q.encode(xb, u, bits=bits, tile_b=tile_b, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "shape", "dtype", "tile_b", "interpret"))
+def quantize_decode(code, scale, *, shape, bits: int = 2, dtype=jnp.float32,
+                    tile_b: int = _q.DEFAULT_TILE_B, interpret: bool = True):
+    n = 1
+    for s in shape:
+        n *= int(s)
+    tile_b = _pick_tile(code.size, code.shape[1], tile_b)
+    vals = _q.decode(code, scale, bits=bits, tile_b=tile_b, interpret=interpret)
+    return _from_blocks(vals, n, shape, dtype)
+
+
+def quantize_roundtrip(key, x, *, bits: int = 2, block: int = DEFAULT_BLOCK,
+                       interpret: bool = True):
+    """compress() semantics via the kernels (used by the kernel-backed
+    Compressor in dist/trainer.py)."""
+    code, scale = quantize_encode(key, x, bits=bits, block=block, interpret=interpret)
+    return quantize_decode(code, scale, bits=bits, shape=tuple(x.shape),
+                           dtype=jnp.dtype(x.dtype).name, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
+def lead_update_flat(x, g, d, h, hw, qh, wqh, eta, gamma, alpha, *,
+                     tile_b: int = _q.DEFAULT_TILE_B, interpret: bool = True):
+    """Fused LEAD post-comm update on flat 1-D vectors (any length)."""
+    n = x.shape[0]
+    tile_b = _pick_tile(n, DEFAULT_BLOCK, tile_b)
+    blocks = [_to_blocks(a, DEFAULT_BLOCK, tile_b)[0] for a in (x, g, d, h, hw, qh, wqh)]
+    outs = _lu.lead_update(*blocks, eta, gamma, alpha, tile_b=tile_b, interpret=interpret)
+    return tuple(_from_blocks(o, n, (n,), x.dtype) for o in outs)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "tile_b", "interpret"))
+def lead_diff_encode_flat(key, x, g, d, h, eta, *, bits: int = 2,
+                          tile_b: int = _q.DEFAULT_TILE_B, interpret: bool = True):
+    """Fused pre-comm pass on flat 1-D vectors; returns (code, scale)."""
+    n = x.shape[0]
+    tile_b = _pick_tile(n, DEFAULT_BLOCK, tile_b)
+    xb, _ = _to_blocks(x, DEFAULT_BLOCK, tile_b)
+    gb, _ = _to_blocks(g, DEFAULT_BLOCK, tile_b)
+    db, _ = _to_blocks(d, DEFAULT_BLOCK, tile_b)
+    hb, _ = _to_blocks(h, DEFAULT_BLOCK, tile_b)
+    u = jax.random.uniform(key, xb.shape, jnp.float32)
+    return _lu.lead_diff_encode(xb, gb, db, hb, u, eta, bits=bits,
+                                tile_b=tile_b, interpret=interpret)
+
+
+def pack_codes(code: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Pack b-bit signed codes (stored in int8 lanes) into dense uint8 words —
+    the wire-accurate representation (8/bits codes per byte).
+
+    A b-bit code c in [-(2^{b-1}), 2^{b-1}] is stored as the (b+1)-bit
+    two's-complement field; for the roofline we account (bits+1) bits/elem.
+    Packing is a reshape + shift-or over int32 lanes (cheap on the VPU).
+    """
+    width = bits + 1
+    per32 = 32 // width
+    flat = jnp.ravel(code).astype(jnp.int32) & ((1 << width) - 1)
+    pad = (-flat.shape[0]) % per32
+    flat = jnp.pad(flat, (0, pad))
+    grp = flat.reshape(-1, per32)
+    shifts = jnp.arange(per32, dtype=jnp.int32) * width
+    return jnp.bitwise_or.reduce(grp << shifts[None, :], axis=1).astype(jnp.uint32)
+
+
+def unpack_codes(packed: jnp.ndarray, n: int, bits: int) -> jnp.ndarray:
+    width = bits + 1
+    per32 = 32 // width
+    shifts = jnp.arange(per32, dtype=jnp.int32) * width
+    fields = (packed[:, None].astype(jnp.int32) >> shifts[None, :]) & ((1 << width) - 1)
+    # sign-extend the width-bit field
+    sign = 1 << (width - 1)
+    vals = (fields ^ sign) - sign
+    return jnp.ravel(vals)[:n].astype(jnp.int8)

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernel tests assert against
+(tests/test_kernels.py sweeps shapes/dtypes and asserts allclose).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_encode_ref(x: jnp.ndarray, u: jnp.ndarray, bits: int):
+    """Blockwise inf-norm b-bit stochastic quantization (paper Thm 3, p=inf).
+
+    x, u: (nb, block) f32; u ~ U[0,1).  Returns (code int8, scale f32 (nb,1)).
+    """
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    lvl = jnp.floor((2.0 ** (bits - 1)) * jnp.abs(x) / safe + u)
+    lvl = jnp.minimum(lvl, 2.0 ** (bits - 1))
+    code = (jnp.sign(x) * lvl).astype(jnp.int8)
+    return code, jnp.where(scale > 0, scale, 0.0).astype(jnp.float32)
+
+
+def quantize_decode_ref(code: jnp.ndarray, scale: jnp.ndarray, bits: int):
+    """Inverse of quantize_encode_ref: (nb, block) f32 values."""
+    return scale * (2.0 ** (1 - bits)) * code.astype(jnp.float32)
+
+
+def lead_update_ref(x, g, d, h, hw, qh, wqh, eta, gamma, alpha):
+    """Fused LEAD post-communication state update (Alg. 1 lines 5-7).
+
+    All arrays share one shape; scalars are python/jnp f32.
+    Returns (x_new, d_new, h_new, hw_new).
+    """
+    yh = h + qh
+    yhw = hw + wqh
+    h_new = (1.0 - alpha) * h + alpha * yh
+    hw_new = (1.0 - alpha) * hw + alpha * yhw
+    d_new = d + gamma / (2.0 * eta) * (yh - yhw)
+    x_new = x - eta * g - eta * d_new
+    return x_new, d_new, h_new, hw_new
+
+
+def lead_diff_encode_ref(x, g, d, h, u, eta, bits):
+    """Fused pre-communication kernel: diff = (x - eta g - eta d) - h, then
+    blockwise inf-norm b-bit quantization of the diff.
+
+    x, g, d, h, u: (nb, block) f32.  Returns (code int8, scale (nb,1) f32).
+    """
+    diff = x - eta * g - eta * d - h
+    return quantize_encode_ref(diff, u, bits)

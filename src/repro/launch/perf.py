@@ -1,0 +1,224 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("DRYRUN_XLA_FLAGS",
+    "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimbing driver: named optimization variants for the three
+selected (arch x shape) pairs, each re-lowered/compiled and roofline-analyzed.
+
+    python -m repro.launch.perf --pair granite --variant bf16
+    python -m repro.launch.perf --pair all
+
+The hypothesis -> change -> before/after log lives in EXPERIMENTS.md §Perf;
+this driver produces the numbers (reports/perf/<pair>__<variant>.json).
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import get_config
+from repro.core.lead import LEADHyper
+from repro.dist.trainer import DistConfig
+from repro.launch import dryrun
+from repro.launch.mesh import make_production_mesh
+from repro.utils import roofline
+
+
+def _train_record(arch, shape_name, mesh, cfg, dc):
+    lowered, cfg2 = dryrun.build_train_lowering(
+        arch, mesh, dc.algorithm, shape_name, cfg_override=cfg, dc_override=dc)
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = round(time.time() - t0, 1)
+    shape = INPUT_SHAPES[shape_name]
+    # cost accounting: XLA counts each scan body once.  The microbatch scan
+    # does the SAME total work as microbatches=1 (just re-scheduled), so cost
+    # extraction always uses the mb=1 lowering; the layer scan is recovered
+    # by exact depth extrapolation (see launch/dryrun.py).
+    dc_cost = dataclasses.replace(dc, microbatches=1)
+    costs = None
+    period = cfg.scan_period()
+    if period and cfg.n_layers > period and not cfg.cross_attn_every \
+            and not cfg.encoder_layers:
+        c = []
+        for n_l in (period, 2 * period):
+            sub = dataclasses.replace(cfg, n_layers=n_l, scan_layers=False)
+            low_s, _ = dryrun.build_train_lowering(
+                arch, mesh, dc.algorithm, shape_name, cfg_override=sub,
+                dc_override=dc_cost)
+            c.append(roofline.extract_costs(low_s.compile()))
+        costs = roofline.extrapolate_costs(c[0], c[1], cfg.n_layers // period)
+    elif dc.microbatches > 1:
+        low1, _ = dryrun.build_train_lowering(
+            arch, mesh, dc.algorithm, shape_name, cfg_override=cfg,
+            dc_override=dc_cost)
+        costs = roofline.extract_costs(low1.compile())
+    rec = roofline.analyze(compiled, cfg, shape, mesh, costs=costs)
+    rec["compile_s"] = compile_s
+    return rec
+
+
+def _serve_record(arch, shape_name, mesh, cfg):
+    lowered, cfg2 = dryrun.build_serve_lowering(arch, mesh, shape_name,
+                                                cfg_override=cfg)
+    t0 = time.time()
+    compiled = lowered.compile()
+    costs = None
+    shape = INPUT_SHAPES[shape_name]
+    if cfg.moe_seq_chunk and shape.seq_len > cfg.moe_seq_chunk:
+        # the MoE chunk scan body is counted once: recover totals by linear
+        # extrapolation over two chunk sizes (work is linear in tokens).
+        c = cfg.moe_seq_chunk
+        cost_c = roofline.extract_costs(compiled)
+        big = dataclasses.replace(cfg, moe_seq_chunk=2 * c)
+        low2, _ = dryrun.build_serve_lowering(arch, mesh, shape_name,
+                                              cfg_override=big)
+        cost_2c = roofline.extract_costs(low2.compile())
+        costs = roofline.extrapolate_costs(cost_c, cost_2c, shape.seq_len // c)
+    rec = roofline.analyze(compiled, cfg2, shape, mesh, costs=costs)
+    rec["compile_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def _bits(n):
+    return DistConfig(algorithm="lead", bits=n)
+
+
+VARIANTS = {
+    # ---- pair 1: granite-3-2b x train_4k (paper-representative) ----------
+    "granite": {
+        "arch": "granite-3-2b", "shape": "train_4k", "kind": "train",
+        "variants": {
+            "baseline": (None, DistConfig()),
+            "bf16": (None, DistConfig(compute_dtype="bfloat16",
+                                      state_dtype="bfloat16")),
+            "bf16_sp": (None, DistConfig(compute_dtype="bfloat16",
+                                         state_dtype="bfloat16",
+                                         seq_parallel=True)),
+            "bf16_sp_mb4": (None, DistConfig(compute_dtype="bfloat16",
+                                             state_dtype="bfloat16",
+                                             seq_parallel=True,
+                                             microbatches=4)),
+            # wire-cost A/B: the decentralized ring vs uncompressed baselines
+            "wire_nids": (None, DistConfig(algorithm="nids")),
+            "wire_allreduce": (None, DistConfig(algorithm="allreduce")),
+            "wire_lead_8bit": (None, DistConfig(bits=7)),
+            "wire_packed": (None, DistConfig(wire_pack=True)),
+            "wire_packed_sp": (None, DistConfig(wire_pack=True,
+                                                compute_dtype="bfloat16",
+                                                state_dtype="bfloat16",
+                                                seq_parallel=True)),
+        },
+    },
+    # ---- pair 2: deepseek-67b x train_4k (scale stress) -------------------
+    "deepseek": {
+        "arch": "deepseek-67b", "shape": "train_4k", "kind": "train",
+        "variants": {
+            "baseline": (None, DistConfig()),
+            "bf16": (None, DistConfig(compute_dtype="bfloat16",
+                                      state_dtype="bfloat16")),
+            "bf16_sp": (None, DistConfig(compute_dtype="bfloat16",
+                                         state_dtype="bfloat16",
+                                         seq_parallel=True)),
+            "bf16_sp_mb4": (None, DistConfig(compute_dtype="bfloat16",
+                                             state_dtype="bfloat16",
+                                             seq_parallel=True,
+                                             microbatches=4)),
+            # different sharding scheme: FSDP within pod-agents (multi mesh)
+            "xxl_multi": ("xxl+multi,dense_fsdp", DistConfig(
+                compute_dtype="bfloat16", state_dtype="bfloat16")),
+        },
+    },
+    # ---- pair 3: kimi-k2 x prefill_32k (worst fraction, collective-bound) -
+    "kimi": {
+        "arch": "kimi-k2-1t-a32b", "shape": "prefill_32k", "kind": "serve",
+        "variants": {
+            "baseline": ("", None),
+            "chunk2048": ("moe_seq_chunk=2048", None),
+            "chunk2048_bf16": ("moe_seq_chunk=2048,param_dtype=bfloat16", None),
+            "chunk512_bf16": ("moe_seq_chunk=512,param_dtype=bfloat16", None),
+            # pin the residual stream's batch dim to the data axis so the MoE
+            # dispatch cannot leave tokens replicated over the EP axis
+            "chunk512_bf16_reshard": (
+                "moe_seq_chunk=512,param_dtype=bfloat16,act_data", None),
+            # manual all-to-all EP dispatch (models/moe_ep.py)
+            "ep_a2a_bf16": (
+                "moe_seq_chunk=512,param_dtype=bfloat16,moe_ep_axis=data",
+                None),
+            # + scanned prefill layer stack: bounds the per-layer EP weight
+            # gathers to a single live buffer (memory-plan fix)
+            "ep_a2a_bf16_scan": (
+                "moe_seq_chunk=512,param_dtype=bfloat16,moe_ep_axis=data,"
+                "prefill_scan", None),
+        },
+    },
+}
+
+
+def run_variant(pair: str, vname: str, out_dir: str):
+    spec = VARIANTS[pair]
+    arch, shape_name = spec["arch"], spec["shape"]
+    cfg_mod, dc = spec["variants"][vname]
+    cfg = get_config(arch)
+    mesh_kind = "single"
+    if isinstance(cfg_mod, str) and cfg_mod:
+        for part in cfg_mod.split(","):
+            if part == "xxl+multi":
+                cfg = dataclasses.replace(cfg, sharding_profile="xxl")
+                mesh_kind = "multi"
+            elif part == "prefill_scan":
+                cfg = dataclasses.replace(cfg, prefill_scan=True)
+            elif part == "dense_fsdp":
+                cfg = dataclasses.replace(cfg, dense_fsdp=True)
+            elif part == "act_data":
+                cfg = dataclasses.replace(cfg, act_spec=("data", None, None))
+            elif "=" in part:
+                k, v = part.split("=")
+                v = int(v) if v.isdigit() else v
+                cfg = dataclasses.replace(cfg, **{k: v})
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    if spec["kind"] == "train":
+        rec = _train_record(arch, shape_name, mesh, cfg, dc or DistConfig())
+    else:
+        rec = _serve_record(arch, shape_name, mesh, cfg)
+    rec.update({"pair": pair, "variant": vname, "arch": arch,
+                "shape": shape_name, "mesh": mesh_kind})
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, f"{pair}__{vname}.json"), "w") as f:
+        json.dump(rec, f, indent=2)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", default="all")
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--out", default="reports/perf")
+    args = ap.parse_args()
+    pairs = list(VARIANTS) if args.pair == "all" else [args.pair]
+    fails = 0
+    for pair in pairs:
+        vs = [args.variant] if args.variant else list(VARIANTS[pair]["variants"])
+        for v in vs:
+            try:
+                rec = run_variant(pair, v, args.out)
+                rf = rec["roofline"]
+                print(f"OK   {pair:10s} {v:16s} compute={rf['compute_s']:.3f} "
+                      f"memory={rf['memory_s']:.3f} coll={rf['collective_s']:.3f} "
+                      f"peak={(rec.get('peak_memory_bytes') or 0)/1e9:.1f}GB "
+                      f"compile={rec['compile_s']}s", flush=True)
+            except Exception as e:
+                fails += 1
+                print(f"FAIL {pair:10s} {v:16s} {type(e).__name__}: {str(e)[:200]}",
+                      flush=True)
+                traceback.print_exc()
+    sys.exit(1 if fails else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+import os
+import sys
+
+# --devices N must take effect before jax initializes
+if "--devices" in sys.argv:
+    _n = sys.argv[sys.argv.index("--devices") + 1]
+    os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={_n}"
+
+"""End-to-end decentralized training driver.
+
+Examples (CPU):
+    # 8 virtual devices, 4 agents x TP-2, tiny model, 50 steps:
+    PYTHONPATH=src python -m repro.launch.train --devices 8 \
+        --mesh-shape 4,2 --arch granite-3-2b --reduced --steps 50
+
+    # production launch (real TPU pod, 256 chips):
+    python -m repro.launch.train --arch granite-3-2b --production \
+        --steps 1000 --algorithm lead --bits 2
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import AxisType, NamedSharding
+
+from repro import checkpoint as ckpt
+from repro.configs.registry import get_config
+from repro.core.lead import LEADHyper
+from repro.data.synthetic import LMStreamConfig, lm_batch, stub_memory
+from repro.dist import sharding as shr
+from repro.dist.trainer import (DistConfig, init_train_state, make_train_step,
+                                n_agents_of, state_shardings)
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as tfm
+from repro.optim.optimizers import make_optimizer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--devices", type=int, default=None)
+    ap.add_argument("--mesh-shape", default=None,
+                    help="e.g. 4,2 (data,model) or 2,2,2 (pod,data,model)")
+    ap.add_argument("--production", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch-per-agent", type=int, default=2)
+    ap.add_argument("--algorithm", default="lead",
+                    choices=["lead", "nids", "dgd", "allreduce"])
+    ap.add_argument("--bits", type=int, default=2)
+    ap.add_argument("--eta", type=float, default=0.03)
+    ap.add_argument("--optimizer", default="sgd",
+                    choices=["sgd", "momentum", "adam"])
+    ap.add_argument("--heterogeneous", action="store_true", default=True)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    if args.production:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    else:
+        shape = tuple(int(x) for x in (args.mesh_shape or "4,2").split(","))
+        axes = ("pod", "data", "model")[-len(shape):]
+        mesh = jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(shape))
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    prof = shr.make_profile(cfg, mesh.axis_names)
+    shr.set_mesh_for_rules(mesh)
+    dc = DistConfig(algorithm=args.algorithm, bits=args.bits,
+                    hyper=LEADHyper(eta=args.eta, gamma=1.0, alpha=0.5),
+                    optimizer=make_optimizer(args.optimizer))
+    A = n_agents_of(mesh, prof)
+    print(f"mesh {dict(zip(mesh.axis_names, mesh.devices.shape))} | "
+          f"{A} agents | {cfg.name} | {cfg.param_count()/1e6:.1f}M params "
+          f"per agent | algorithm={args.algorithm}")
+
+    key = jax.random.PRNGKey(0)
+    state_sds = jax.eval_shape(lambda k: init_train_state(cfg, mesh, prof, dc, k), key)
+    shardings = state_shardings(cfg, mesh, prof, state_sds)
+    with jax.set_mesh(mesh):
+        state = jax.jit(lambda k: init_train_state(cfg, mesh, prof, dc, k),
+                        out_shardings=shardings)(key)
+        start = 0
+        if args.ckpt_dir:
+            restored, ck_step = ckpt.restore(args.ckpt_dir, state_sds)
+            if restored is not None:
+                state = jax.device_put(restored, shardings)
+                start = ck_step
+                print(f"restored step {start}")
+
+        step_fn = jax.jit(make_train_step(cfg, mesh, prof, dc))
+        loss_fn = jax.jit(jax.vmap(lambda p, b: tfm.loss_fn(p, cfg, b)[0]))
+        ds = LMStreamConfig(vocab=cfg.vocab, seq_len=args.seq_len,
+                            batch_per_agent=args.batch_per_agent, n_agents=A,
+                            heterogeneous=args.heterogeneous)
+        bspec = NamedSharding(mesh, shr.train_batch_spec(prof))
+
+        def get_batch(i):
+            b = lm_batch(ds, i)
+            if cfg.family in ("vlm", "audio"):
+                b["memory"] = stub_memory(cfg.family,
+                                          (A, args.batch_per_agent), cfg)
+            return jax.device_put(b, bspec)
+
+        t0 = time.time()
+        for i in range(start, start + args.steps):
+            batch = get_batch(i)
+            state, metrics = step_fn(state, batch, jax.random.fold_in(key, i))
+            if (i + 1) % args.log_every == 0 or i == start:
+                losses = loss_fn(state.params, batch)
+                print(f"step {i+1:5d} | loss {float(jnp.mean(losses)):.4f} | "
+                      f"grad_norm {float(metrics['grad_norm']):.3f} | "
+                      f"{(time.time()-t0)/(i-start+1):.2f}s/step", flush=True)
+            if args.ckpt_dir and (i + 1) % 100 == 0:
+                ckpt.save(args.ckpt_dir, i + 1, jax.device_get(state))
+        if args.ckpt_dir:
+            ckpt.save(args.ckpt_dir, start + args.steps, jax.device_get(state))
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Model zoo: one composable block-stack model covering all 6 families
+(dense / moe / ssm / hybrid / vlm / audio) — see transformer.py."""
+from repro.models import attention, moe, recurrent, transformer
+from repro.models.transformer import (
+    decode_step, forward, init_cache, init_params, loss_fn, prefill,
+)

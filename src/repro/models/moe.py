@@ -1,0 +1,98 @@
+"""Mixture-of-Experts layer (token-choice top-k routing, capacity-based).
+
+TPU adaptation: the dispatch avoids the (T, E, C) one-hot tensor (which is
+astronomically large for kimi-k2's 384 experts at 64k tokens).  Instead:
+
+  1. router gates (T, E); top-k expert ids + weights per token,
+  2. each token's slot within its expert via a cumsum over the (T, E)
+     assignment matrix (int32),
+  3. scatter tokens into a dense (E, C, d) buffer (dropping beyond capacity),
+  4. batched expert FFN (E, C, d) x (E, d, f) — an MXU-friendly grouped
+     matmul sharded over the expert axis,
+  5. gather-combine weighted expert outputs back to (T, d).
+
+An auxiliary load-balancing loss (Switch-style) is returned for training.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_init(key, d_model: int, d_ff: int, n_experts: int):
+    ks = jax.random.split(key, 4)
+    s_in, s_ff = d_model ** -0.5, d_ff ** -0.5
+    return {
+        "router": s_in * jax.random.normal(ks[0], (d_model, n_experts), jnp.float32),
+        "w_gate": s_in * jax.random.normal(ks[1], (n_experts, d_model, d_ff), jnp.float32),
+        "w_up": s_in * jax.random.normal(ks[2], (n_experts, d_model, d_ff), jnp.float32),
+        "w_down": s_ff * jax.random.normal(ks[3], (n_experts, d_ff, d_model), jnp.float32),
+    }
+
+
+def moe_apply(p, x, *, top_k: int, capacity_factor: float = 1.25,
+              seq_chunk: int = 0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar).
+
+    seq_chunk > 0 routes the sequence in chunks of that many positions: the
+    (E, C, d) dispatch buffer and its collectives shrink by S/seq_chunk while
+    total expert FLOPs stay constant (capacity is per chunk).
+    """
+    B, S, d = x.shape
+    if seq_chunk and S > seq_chunk and S % seq_chunk == 0:
+        nc = S // seq_chunk
+        xc = x.reshape(B, nc, seq_chunk, d).swapaxes(0, 1)   # (nc, B, c, d)
+
+        def body(carry, xi):
+            out, aux = moe_apply(p, xi, top_k=top_k,
+                                 capacity_factor=capacity_factor)
+            return carry + aux, out
+
+        aux_tot, outs = jax.lax.scan(body, jnp.zeros((), jnp.float32), xc)
+        out = outs.swapaxes(0, 1).reshape(B, S, d)
+        return out, aux_tot / nc
+    E = p["router"].shape[1]
+    T = B * S
+    xt = x.reshape(T, d)
+    C = max(1, int(capacity_factor * T * top_k / E))
+
+    logits = (xt.astype(jnp.float32)) @ p["router"]                  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)              # (T, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # slot assignment: position of each (token, choice) within its expert.
+    # top-k experts are distinct per token, so a (T, E) multi-hot cumsum
+    # gives each (token, expert) pair its slot — O(T*E) not O(T*k*E).
+    multi_hot = jax.nn.one_hot(expert_ids, E, dtype=jnp.int32).sum(1)  # (T, E)
+    csum = jnp.cumsum(multi_hot, axis=0)                             # (T, E)
+    slot_te = csum - 1
+    slot_id = jnp.take_along_axis(slot_te, expert_ids, axis=1).reshape(T * top_k)
+    eid = expert_ids.reshape(T * top_k)
+    keep = slot_id < C
+
+    # scatter into (E, C, d)
+    buf = jnp.zeros((E, C, d), x.dtype)
+    tok_idx = jnp.repeat(jnp.arange(T), top_k)
+    src = jnp.where(keep[:, None], xt[tok_idx], 0.0)
+    buf = buf.at[eid, jnp.clip(slot_id, 0, C - 1)].add(jnp.where(keep[:, None], src, 0.0))
+
+    # batched expert SwiGLU FFN: (E, C, d) x (E, d, f)
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x.dtype))
+
+    # gather-combine
+    gathered = out_buf[eid, jnp.clip(slot_id, 0, C - 1)]             # (T*k, d)
+    w = (gate_vals.reshape(T * top_k) * keep).astype(x.dtype)
+    combined = jnp.zeros((T, d), x.dtype).at[tok_idx].add(gathered * w[:, None])
+
+    # Switch-style load-balance aux loss
+    frac_tokens = jnp.mean(jax.nn.one_hot(expert_ids[:, 0], E, dtype=jnp.float32), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+
+    return combined.reshape(B, S, d), aux

@@ -1,0 +1,319 @@
+"""Recurrent sequence mixers: mLSTM / sLSTM (xLSTM, arXiv:2405.04517) and
+RG-LRU (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+TPU adaptation notes (DESIGN.md §3):
+* mLSTM — chunkwise-parallel form: intra-chunk quadratic attention with
+  exponential-gate weighting (local stabilizer), inter-chunk linear
+  recurrence on the (hd x hd) matrix memory carried by lax.scan.  O(S * G)
+  memory, O(S * (G + hd)) FLOPs per head; MXU-friendly (chunk G = 128).
+* sLSTM — strictly sequential exponential-gated scalar recurrence with the
+  m-stabilizer; lax.scan over time (no parallel form exists).
+* RG-LRU — diagonal linear recurrence via jax.lax.associative_scan
+  (log-depth), gated as in Griffin.
+
+Each mixer exposes  init / forward (full sequence) / decode (one step with a
+carried state) so the transformer assembly can treat them like attention.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _dense(key, d_in, d_out, scale=None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return scale * jax.random.normal(key, (d_in, d_out), jnp.float32)
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+
+class MLSTMState(NamedTuple):
+    C: jnp.ndarray    # (B, nh, hd, hd) matrix memory
+    n: jnp.ndarray    # (B, nh, hd)     normalizer
+    m: jnp.ndarray    # (B, nh)         log-space stabilizer
+
+
+def mlstm_init(key, d_model: int, n_heads: int, proj_factor: int = 2):
+    di = proj_factor * d_model
+    hd = di // n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": _dense(ks[0], d_model, di),
+        "w_gate": _dense(ks[1], d_model, di),
+        # block-diagonal (per-head) projections, as in xLSTM
+        "w_q": (hd ** -0.5) * jax.random.normal(ks[2], (n_heads, hd, hd)),
+        "w_k": (hd ** -0.5) * jax.random.normal(ks[3], (n_heads, hd, hd)),
+        "w_v": (hd ** -0.5) * jax.random.normal(ks[4], (n_heads, hd, hd)),
+        "w_if": _dense(ks[5], di, 2 * n_heads, scale=0.01),
+        "b_if": jnp.concatenate([jnp.zeros((n_heads,)), 3.0 * jnp.ones((n_heads,))]),
+        "w_down": _dense(ks[6], di, d_model),
+        "out_ln": jnp.ones((di,)),
+    }
+
+
+def _mlstm_heads(p, x, n_heads):
+    """x: (B, S, d) -> q, k, v: (B, S, nh, hd); i_pre, f_pre: (B, S, nh)."""
+    B, S, _ = x.shape
+    xi = x @ p["w_up"]
+    di = xi.shape[-1]
+    hd = di // n_heads
+    xh = xi.reshape(B, S, n_heads, hd)
+    q = jnp.einsum("bsnh,nhk->bsnk", xh, p["w_q"].astype(x.dtype))
+    k = jnp.einsum("bsnh,nhk->bsnk", xh, p["w_k"].astype(x.dtype)) * (hd ** -0.5)
+    v = jnp.einsum("bsnh,nhk->bsnk", xh, p["w_v"].astype(x.dtype))
+    gates = xi @ p["w_if"] + p["b_if"]
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)                    # (B, S, nh)
+    return xi, q, k, v, i_pre.astype(jnp.float32), f_pre.astype(jnp.float32)
+
+
+def mlstm_forward(p, x, n_heads: int, chunk: int = 128):
+    """Chunkwise-parallel mLSTM over a full sequence."""
+    B, S, d = x.shape
+    G = min(chunk, S)
+    while S % G:
+        G -= 1
+    xi, q, k, v, i_pre, f_pre = _mlstm_heads(p, x, n_heads)
+    hd = q.shape[-1]
+    nC = S // G
+
+    def resh(a):
+        return a.reshape(B, nC, G, *a.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc, ic, fc = map(resh, (q, k, v, i_pre, f_pre))
+
+    logf = jax.nn.log_sigmoid(fc)                                   # (nC, B, G, nh)
+    cum = jnp.cumsum(logf, axis=2)                                  # inclusive
+    total = cum[:, :, -1]                                           # (nC, B, nh)
+
+    def body(carry, inp):
+        C, n, m = carry
+        qb, kb, vb, ib, cumb, totb = inp
+        # decay from chunk start to position t (exclusive of t's own forget):
+        # b_t = cum_t  (k_t scaled by i_t and decay cum_t..end handled below)
+        # intra-chunk weights: A[t, s] = exp(cum_t - cum_s + i_s - m_t), s <= t
+        a_q = cumb                                                  # (B, G, nh)
+        a_k = ib - cumb                                             # i_s - cum_s
+        m_intra = jnp.max(a_k, axis=1, keepdims=True)               # (B, 1, nh)
+        m_inter = m[:, None] - 0.0                                  # (B, 1, nh) broadcast below
+        m_t = jnp.maximum(a_q + m_intra, a_q + m[:, None])          # (B, G, nh)
+        # intra-chunk quadratic part
+        s = jnp.einsum("btnh,bsnh->bnts", qb, kb)                   # (B, nh, G, G)
+        w = jnp.exp(a_q[:, :, None] + a_k[:, None, :] - m_t[:, :, None]).transpose(0, 3, 1, 2)
+        mask = jnp.tril(jnp.ones((G, G), bool))
+        sw = s * jnp.where(mask[None, None], w, 0.0)
+        o_intra = jnp.einsum("bnts,bsnh->btnh", sw, vb)
+        l_intra = jnp.einsum("bnts,bsnh->btnh", sw, jnp.ones_like(vb[..., :1]))[..., 0]
+        # inter-chunk: contribution of carried memory C (stabilized by m)
+        decay_q = jnp.exp(a_q + m[:, None] - m_t)                   # (B, G, nh)
+        o_inter = jnp.einsum("btnh,bnhj->btnj", qb, C) * decay_q[..., None]
+        l_inter = jnp.einsum("btnh,bnh->btn", qb, n) * decay_q
+        denom = jnp.maximum(jnp.abs(l_intra + l_inter), jnp.exp(-m_t))
+        h = (o_intra + o_inter) / denom[..., None]
+        # carry update: C' = f_total C + sum_s exp(tot - cum_s + i_s - m') k v^T
+        m_next = jnp.maximum(totb + m, totb + jnp.max(a_k, axis=1))
+        kw = jnp.exp(totb[:, None] + a_k - m_next[:, None])         # (B, G, nh)
+        C_new = C * jnp.exp(totb + m - m_next)[..., None, None] + \
+            jnp.einsum("bsnh,bsnj->bnhj", kb * kw[..., None], vb)
+        n_new = n * jnp.exp(totb + m - m_next)[..., None] + \
+            jnp.einsum("bsnh,bsn->bnh", kb, kw)
+        return (C_new, n_new, m_next), h
+
+    C0 = jnp.zeros((B, n_heads, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, n_heads, hd), jnp.float32)
+    m0 = jnp.full((B, n_heads), -1e30, jnp.float32)
+    (_, _, _), hs = jax.lax.scan(body, (C0, n0, m0), (qc, kc, vc, ic, cum, total))
+    h = hs.swapaxes(0, 1).reshape(B, S, n_heads * hd)
+    out = _rms(h, p["out_ln"]) * jax.nn.silu(x @ p["w_gate"])
+    return (out @ p["w_down"]).astype(x.dtype)
+
+
+def mlstm_decode(p, x, state: MLSTMState, n_heads: int):
+    """x: (B, 1, d); one recurrent step."""
+    B = x.shape[0]
+    xi, q, k, v, i_pre, f_pre = _mlstm_heads(p, x, n_heads)
+    q, k, v = (a[:, 0].transpose(0, 1, 2) for a in (q, k, v))       # (B, nh, hd)
+    i_pre, f_pre = i_pre[:, 0], f_pre[:, 0]                          # (B, nh)
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + state.m, i_pre)
+    fg = jnp.exp(logf + state.m - m_new)
+    ig = jnp.exp(i_pre - m_new)
+    C = state.C * fg[..., None, None] + jnp.einsum("bnh,bnj->bnhj", k * ig[..., None], v)
+    n = state.n * fg[..., None] + k * ig[..., None]
+    num = jnp.einsum("bnh,bnhj->bnj", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bnh,bnh->bn", q, n)), jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(B, 1, -1)
+    out = _rms(h, p["out_ln"]) * jax.nn.silu(x @ p["w_gate"])
+    return (out @ p["w_down"]).astype(x.dtype), MLSTMState(C=C, n=n, m=m_new)
+
+
+def mlstm_init_state(batch, d_model, n_heads, proj_factor=2):
+    di = proj_factor * d_model
+    hd = di // n_heads
+    return MLSTMState(
+        C=jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, n_heads, hd), jnp.float32),
+        m=jnp.full((batch, n_heads), -1e30, jnp.float32),
+    )
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray    # (B, d)
+    n: jnp.ndarray
+    h: jnp.ndarray
+    m: jnp.ndarray
+
+
+def slstm_init(key, d_model: int, n_heads: int):
+    hd = d_model // n_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": _dense(ks[0], d_model, 4 * d_model),                 # i,f,z,o pre-acts
+        "r": 0.1 * jax.random.normal(ks[1], (n_heads, hd, 4 * hd)),  # block-diag recurrent
+        "b": jnp.zeros((4 * d_model,)).at[d_model:2 * d_model].set(3.0),
+        "w_ffn_up": _dense(ks[2], d_model, 4 * d_model // 3),
+        "w_ffn_dn": _dense(ks[3], 4 * d_model // 3, d_model),
+        "ffn_ln": jnp.ones((d_model,)),
+    }
+
+
+def _slstm_cell(p, xt, state: SLSTMState, n_heads: int):
+    """xt: (B, d).  Exponential-gated sLSTM cell with m-stabilizer."""
+    B, d = xt.shape
+    hd = d // n_heads
+    hprev = state.h.reshape(B, n_heads, hd)
+    rec = jnp.einsum("bnh,nhk->bnk", hprev, p["r"])                 # (B, nh, 4*hd)
+    # rearrange recurrent output: per-head (4, hd) gate groups -> gate-major
+    rec = rec.reshape(B, n_heads, 4, hd).transpose(0, 2, 1, 3).reshape(B, 4 * d)
+    pre = xt @ p["w_in"] + p["b"] + rec
+    i_pre, f_pre, z_pre, o_pre = jnp.split(pre.astype(jnp.float32), 4, axis=-1)
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + state.m, i_pre)
+    ig = jnp.exp(i_pre - m_new)
+    fg = jnp.exp(logf + state.m - m_new)
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    c = fg * state.c + ig * z
+    n = fg * state.n + ig
+    h = o * c / jnp.maximum(jnp.abs(n), 1.0)
+    return SLSTMState(c=c, n=n, h=h, m=m_new)
+
+
+def slstm_forward(p, x, n_heads: int):
+    """Sequential scan over time; x: (B, S, d)."""
+    B, S, d = x.shape
+    s0 = slstm_init_state(B, d)
+
+    def body(state, xt):
+        new = _slstm_cell(p, xt, state, n_heads)
+        return new, new.h
+
+    _, hs = jax.lax.scan(body, s0, x.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).astype(x.dtype)
+    # post-FFN (factor 4/3, as in the xLSTM sLSTM block)
+    y = _rms(h, p["ffn_ln"])
+    return (jax.nn.gelu(y @ p["w_ffn_up"]) @ p["w_ffn_dn"]).astype(x.dtype)
+
+
+def slstm_decode(p, x, state: SLSTMState, n_heads: int):
+    new = _slstm_cell(p, x[:, 0], state, n_heads)
+    y = _rms(new.h.astype(x.dtype), p["ffn_ln"])
+    out = (jax.nn.gelu(y @ p["w_ffn_up"]) @ p["w_ffn_dn"])[:, None]
+    return out.astype(x.dtype), new
+
+
+def slstm_init_state(batch, d_model):
+    z = jnp.zeros((batch, d_model), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=jnp.full((batch, d_model), -1e30, jnp.float32))
+
+
+# ===========================================================================
+# RG-LRU (Griffin / RecurrentGemma)
+# ===========================================================================
+
+class RGLRUState(NamedTuple):
+    h: jnp.ndarray         # (B, d_rnn)
+    conv_buf: jnp.ndarray  # (B, conv_width - 1, d) trailing conv inputs
+
+
+def rglru_init(key, d_model: int, conv_width: int = 4):
+    ks = jax.random.split(key, 6)
+    d = d_model
+    # Lambda init so that a in [0.9, 0.999] (Griffin appendix)
+    u = jax.random.uniform(ks[3], (d,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / 8.0))                     # softplus^-1
+    return {
+        "w_x": _dense(ks[0], d, d),
+        "w_gate": _dense(ks[1], d, d),
+        "conv": 0.1 * jax.random.normal(ks[2], (conv_width, d)),
+        "lam": lam,
+        "w_r": _dense(ks[4], d, d, scale=0.01),
+        "w_i": _dense(ks[5], d, d, scale=0.01),
+        "w_out": _dense(jax.random.fold_in(key, 9), d, d),
+    }
+
+
+def _rglru_gates(p, u):
+    """u: (B, S, d) post-conv branch input -> (a, gated_x) both (B, S, d)."""
+    r = jax.nn.sigmoid(u @ p["w_r"])
+    i = jax.nn.sigmoid(u @ p["w_i"])
+    log_a = -8.0 * r * jax.nn.softplus(p["lam"])                    # (B, S, d)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * (i * u)
+    return a.astype(jnp.float32), gated.astype(jnp.float32)
+
+
+def _causal_conv(p, x):
+    w = p["conv"]                                                   # (cw, d)
+    cw = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(cw))
+    return out
+
+
+def rglru_forward(p, x):
+    """Griffin recurrent block: conv -> RG-LRU (associative scan) -> gate."""
+    branch = x @ p["w_x"]
+    branch = _causal_conv(p, branch)
+    a, gx = _rglru_gates(p, branch)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gx), axis=1)
+    h = h.astype(x.dtype) * jax.nn.gelu(x @ p["w_gate"])
+    return h @ p["w_out"]
+
+
+def rglru_decode(p, x, state: RGLRUState):
+    bp = x @ p["w_x"]                                               # (B, 1, d)
+    w = p["conv"]
+    cw = w.shape[0]
+    hist = jnp.concatenate([state.conv_buf.astype(bp.dtype), bp], axis=1)  # (B, cw, d)
+    conv_out = jnp.einsum("bkd,kd->bd", hist, w)[:, None]
+    a, gx = _rglru_gates(p, conv_out)
+    h = a[:, 0] * state.h + gx[:, 0]
+    out = (h[:, None].astype(x.dtype) * jax.nn.gelu(x @ p["w_gate"])) @ p["w_out"]
+    return out, RGLRUState(h=h, conv_buf=hist[:, 1:].astype(state.conv_buf.dtype))
+
+
+def rglru_init_state(batch, d_model, conv_width: int = 4):
+    return RGLRUState(h=jnp.zeros((batch, d_model), jnp.float32),
+                      conv_buf=jnp.zeros((batch, conv_width - 1, d_model), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+
+def _rms(x, g, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps) * g).astype(x.dtype)

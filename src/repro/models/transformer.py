@@ -1,0 +1,652 @@
+"""Composable block-stack language model covering all assigned families.
+
+A model is a stack of blocks driven by cfg.block_pattern:
+    attn / global   causal full attention (chunked online-softmax) + MLP/MoE
+    local           sliding-window attention + MLP/MoE
+    mlstm, slstm    xLSTM recurrent blocks (self-contained)
+    rglru           RG-LRU recurrent block + MLP
+
+plus, orthogonally:
+    * gated cross-attention blocks every cfg.cross_attn_every layers (VLM),
+    * an encoder stack + per-layer decoder cross-attention (audio enc-dec),
+    * chunked cross-entropy (the (B, S, vocab) logits tensor is never
+      materialized — vital for 256k vocabularies).
+
+Layers are scanned in pattern-period groups when n_layers % period == 0
+(stacked params, small HLO); otherwise unrolled.
+
+Entry points:
+    init_params(cfg, key)
+    forward(params, cfg, tokens, memory=None) -> final hidden states
+    loss_fn(params, cfg, batch) -> (loss, metrics)
+    prefill(params, cfg, tokens, memory=None, cache_len) -> (logits, cache)
+    decode_step(params, cfg, token, pos, cache, memory=None) -> (logits, cache)
+    init_cache(cfg, batch, cache_len, dtype)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import moe_ep as moe_ep_mod
+from repro.models import recurrent as rec
+from repro.models.attention import KVCache
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def _dense(key, d_in, d_out, scale=None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (scale * jax.random.normal(key, (d_in, d_out), jnp.float32))
+
+
+def _attn_init(cfg: ModelConfig, key, cross: bool = False) -> Params:
+    d, hd, nq, nkv = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.kv_heads
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": _dense(ks[0], d, nq * hd),
+        "wk": _dense(ks[1], d, nkv * hd),
+        "wv": _dense(ks[2], d, nkv * hd),
+        "wo": _dense(ks[3], nq * hd, d, scale=(nq * hd) ** -0.5 / (2 * cfg.n_layers) ** 0.5),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((nq * hd,))
+        p["bk"] = jnp.zeros((nkv * hd,))
+        p["bv"] = jnp.zeros((nkv * hd,))
+    if cross:
+        p["gate"] = jnp.zeros(())          # tanh-gated cross-attn (llama-vision)
+        p["ln_mem"] = jnp.ones((d,))
+    return p
+
+
+def _mlp_init(cfg: ModelConfig, key, d_ff: int) -> Params:
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    if cfg.mlp_type == "swiglu":
+        return {"w_gate": _dense(ks[0], d, d_ff), "w_up": _dense(ks[1], d, d_ff),
+                "w_down": _dense(ks[2], d_ff, d, scale=d_ff ** -0.5 / (2 * cfg.n_layers) ** 0.5)}
+    return {"w_up": _dense(ks[0], d, d_ff),
+            "w_down": _dense(ks[1], d_ff, d, scale=d_ff ** -0.5 / (2 * cfg.n_layers) ** 0.5)}
+
+
+def _block_init(cfg: ModelConfig, key, block_type: str) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    if block_type in ("attn", "local", "global"):
+        p = {"ln1": jnp.ones((d,)), "attn": _attn_init(cfg, ks[0]), "ln2": jnp.ones((d,))}
+        if cfg.n_experts:
+            p["moe"] = moe_mod.moe_init(ks[1], d, cfg.d_ff, cfg.n_experts)
+        else:
+            p["mlp"] = _mlp_init(cfg, ks[1], cfg.d_ff)
+        return p
+    if block_type == "mlstm":
+        return {"ln1": jnp.ones((d,)), "mlstm": rec.mlstm_init(ks[0], d, cfg.n_heads)}
+    if block_type == "slstm":
+        return {"ln1": jnp.ones((d,)), "slstm": rec.slstm_init(ks[0], d, cfg.n_heads)}
+    if block_type == "rglru":
+        return {"ln1": jnp.ones((d,)), "rglru": rec.rglru_init(ks[0], d),
+                "ln2": jnp.ones((d,)), "mlp": _mlp_init(cfg, ks[1], cfg.d_ff)}
+    raise ValueError(block_type)
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    params: Params = {
+        "embed": 0.02 * jax.random.normal(ks[0], (cfg.vocab, d), jnp.float32),
+        "final_ln": jnp.ones((d,)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _dense(ks[1], d, cfg.vocab)
+
+    types = cfg.layer_types()
+    layer_keys = jax.random.split(ks[2], cfg.n_layers)
+    layers = [_block_init(cfg, layer_keys[i], t) for i, t in enumerate(types)]
+    period = cfg.scan_period()
+    if period and cfg.n_layers > period:
+        n_per = cfg.n_layers // period
+        stacked = []
+        for j in range(period):
+            group = [layers[i * period + j] for i in range(n_per)]
+            stacked.append(jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *group))
+        params["layers"] = tuple(stacked)
+    else:
+        params["layers"] = tuple(layers)
+
+    if cfg.cross_attn_every:
+        n_cross = cfg.n_layers // cfg.cross_attn_every
+        ck = jax.random.split(ks[3], n_cross)
+        cross = [{"ln": jnp.ones((d,)), "xattn": _attn_init(cfg, ck[i], cross=True)}
+                 for i in range(n_cross)]
+        if cfg.scan_period() and cfg.n_layers > cfg.scan_period():
+            params["cross_layers"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *cross)
+        else:
+            params["cross_layers"] = tuple(cross)
+
+    if cfg.encoder_layers:
+        ek = jax.random.split(ks[4], cfg.encoder_layers + 1)
+        params["encoder"] = tuple(
+            {"ln1": jnp.ones((d,)), "attn": _attn_init(cfg, ek[i]),
+             "ln2": jnp.ones((d,)), "mlp": _mlp_init(cfg, ek[i + 1], cfg.d_ff)}
+            for i in range(cfg.encoder_layers))
+        params["encoder_ln"] = jnp.ones((d,))
+        # per-decoder-layer cross attention
+        xk = jax.random.split(ks[5], cfg.n_layers)
+        xl = [{"ln": jnp.ones((d,)), "xattn": _attn_init(cfg, xk[i], cross=True)}
+              for i in range(cfg.n_layers)]
+        period = cfg.scan_period()
+        if period and cfg.n_layers > period:
+            n_per = cfg.n_layers // period
+            stacked = []
+            for j in range(period):
+                group = [xl[i * period + j] for i in range(n_per)]
+                stacked.append(jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *group))
+            params["dec_cross"] = tuple(stacked)
+        else:
+            params["dec_cross"] = tuple(xl)
+
+    dtype = jnp.dtype(cfg.param_dtype)
+    return jax.tree_util.tree_map(lambda x: x.astype(dtype), params)
+
+
+# ---------------------------------------------------------------------------
+# block application (training / full-sequence mode)
+# ---------------------------------------------------------------------------
+
+def _rms(x, g, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * g.astype(jnp.float32)).astype(x.dtype)
+
+
+def _mlp_apply(cfg, p, x):
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"].astype(x.dtype)) * (x @ p["w_up"].astype(x.dtype))
+    else:
+        h = jax.nn.gelu(x @ p["w_up"].astype(x.dtype))
+    return h @ p["w_down"].astype(x.dtype)
+
+
+def _qkv(cfg, p, x):
+    B, S, _ = x.shape
+    nq, nkv, hd = cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if "bq" in p:
+        q, k, v = q + p["bq"].astype(x.dtype), k + p["bk"].astype(x.dtype), v + p["bv"].astype(x.dtype)
+    return (q.reshape(B, S, nq, hd), k.reshape(B, S, nkv, hd), v.reshape(B, S, nkv, hd))
+
+
+def _self_attn_full(cfg, p, x, positions, block_type):
+    ap = p["attn"]
+    q, k, v = _qkv(cfg, ap, x)
+    q = attn.apply_rope(q, positions, cfg.rope_theta)
+    k = attn.apply_rope(k, positions, cfg.rope_theta)
+    if block_type == "local":
+        o = attn.windowed_attention(q, k, v, window=cfg.window)
+    else:
+        o = attn.chunked_causal_attention(q, k, v)
+    B, S = x.shape[:2]
+    return o.reshape(B, S, -1) @ ap["wo"].astype(x.dtype), (k, v)
+
+
+def _cross_attn_apply(cfg, p, x, mem_kv):
+    B, S, _ = x.shape
+    q = (x @ p["xattn"]["wq"].astype(x.dtype)).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    mk, mv = mem_kv
+    o = attn.cross_attention(q, mk, mv).reshape(B, S, -1)
+    o = o @ p["xattn"]["wo"].astype(x.dtype)
+    gate = jnp.tanh(p["xattn"]["gate"]).astype(x.dtype)
+    return gate * o
+
+
+def _mem_kv(cfg, p, memory):
+    """Project a (B, M, d) memory into cross-attention K/V once."""
+    B, M, _ = memory.shape
+    m = _rms(memory, p["xattn"]["ln_mem"])
+    mk = (m @ p["xattn"]["wk"].astype(m.dtype)).reshape(B, M, cfg.kv_heads, cfg.head_dim)
+    mv = (m @ p["xattn"]["wv"].astype(m.dtype)).reshape(B, M, cfg.kv_heads, cfg.head_dim)
+    return mk, mv
+
+
+def _seq_shard(cfg, x):
+    """Residual-stream sharding constraint on (B, S, d)."""
+    from jax.sharding import PartitionSpec as P
+    if cfg.act_spec is not None:
+        return jax.lax.with_sharding_constraint(x, P(*cfg.act_spec))
+    if cfg.seq_shard_axis is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, P(None, cfg.seq_shard_axis, None))
+
+
+def _block_apply(cfg, p, x, positions, block_type, collect_cache=False,
+                 window_override=None):
+    """Full-sequence application.  Returns (x, cache_entry or None)."""
+    cache = None
+    x = _seq_shard(cfg, x)
+    if block_type in ("attn", "local", "global"):
+        h = _rms(x, p["ln1"])
+        o, (k, v) = _self_attn_full(cfg, p, h, positions, block_type)
+        x = x + o
+        h2 = _rms(x, p["ln2"])
+        if cfg.n_experts:
+            if cfg.moe_ep_axis:
+                mo, _aux = moe_ep_mod.moe_apply_ep(
+                    p["moe"], h2, top_k=cfg.top_k,
+                    capacity_factor=cfg.capacity_factor,
+                    ep_axis=cfg.moe_ep_axis, seq_chunk=cfg.moe_seq_chunk)
+            else:
+                mo, _aux = moe_mod.moe_apply(p["moe"], h2, top_k=cfg.top_k,
+                                             capacity_factor=cfg.capacity_factor,
+                                             seq_chunk=cfg.moe_seq_chunk)
+        else:
+            mo = _mlp_apply(cfg, p["mlp"], h2)
+        x = x + mo
+        if collect_cache:
+            cache = (k, v)
+    elif block_type == "mlstm":
+        h = _rms(x, p["ln1"])
+        x = x + rec.mlstm_forward(p["mlstm"], h, cfg.n_heads)
+        if collect_cache:
+            cache = _mlstm_final_state(cfg, p, h)
+    elif block_type == "slstm":
+        h = _rms(x, p["ln1"])
+        x = x + rec.slstm_forward(p["slstm"], h, cfg.n_heads)
+        if collect_cache:
+            cache = _slstm_final_state(cfg, p, h)
+    elif block_type == "rglru":
+        h = _rms(x, p["ln1"])
+        x = x + rec.rglru_forward(p["rglru"], h)
+        h2 = _rms(x, p["ln2"])
+        x = x + _mlp_apply(cfg, p["mlp"], h2)
+        if collect_cache:
+            cache = _rglru_final_state(cfg, p, h)
+    else:
+        raise ValueError(block_type)
+    return x, cache
+
+
+# recurrent final states for prefill: re-run the recurrence in decode form.
+# (the forward scans already computed them; exposing them keeps code simple
+# at the cost of one extra pass — only used on the prefill path.)
+
+def _mlstm_final_state(cfg, p, h):
+    B, S, _ = h.shape
+    st = rec.mlstm_init_state(B, cfg.d_model, cfg.n_heads)
+
+    def body(s, xt):
+        _, s2 = rec.mlstm_decode(p["mlstm"], xt[:, None], s, cfg.n_heads)
+        return s2, None
+
+    st, _ = jax.lax.scan(body, st, h.swapaxes(0, 1))
+    return st
+
+
+def _slstm_final_state(cfg, p, h):
+    B = h.shape[0]
+    st = rec.slstm_init_state(B, cfg.d_model)
+
+    def body(s, xt):
+        return rec._slstm_cell(p["slstm"], xt, s, cfg.n_heads), None
+
+    st, _ = jax.lax.scan(body, st, h.swapaxes(0, 1))
+    return st
+
+
+def _rglru_final_state(cfg, p, h):
+    bp = h @ p["rglru"]["w_x"]
+    branch = rec._causal_conv(p["rglru"], bp)
+    a, gx = rec._rglru_gates(p["rglru"], branch)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    _, hf = jax.lax.associative_scan(combine, (a, gx), axis=1)
+    cw = p["rglru"]["conv"].shape[0]
+    pad = jnp.pad(bp, ((0, 0), (cw - 1, 0), (0, 0)))
+    return rec.RGLRUState(h=hf[:, -1], conv_buf=pad[:, -(cw - 1):].astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward + loss
+# ---------------------------------------------------------------------------
+
+def _iter_layers(cfg: ModelConfig, params: Params):
+    """Yields (layer_index, block_type, layer_params) in order, unstacking
+    scanned groups.  Used by the unrolled paths (prefill/smoke)."""
+    types = cfg.layer_types()
+    period = cfg.scan_period()
+    if period and cfg.n_layers > period:
+        n_per = cfg.n_layers // period
+        for i in range(n_per):
+            for j in range(period):
+                lp = jax.tree_util.tree_map(lambda x: x[i], params["layers"][j])
+                yield i * period + j, types[i * period + j], lp
+    else:
+        for i, t in enumerate(types):
+            yield i, t, params["layers"][i]
+
+
+def _cross_param(cfg, params, cross_idx):
+    cl = params["cross_layers"]
+    if isinstance(cl, tuple):
+        return cl[cross_idx]
+    return jax.tree_util.tree_map(lambda x: x[cross_idx], cl)
+
+
+def encode_audio(params, cfg, frames):
+    """Whisper-style encoder over stub frame embeddings (B, F, d)."""
+    x = frames
+    positions = jnp.arange(x.shape[1])[None]
+    for p in params["encoder"]:
+        h = _rms(x, p["ln1"])
+        q, k, v = _qkv(cfg, p["attn"], h)
+        q = attn.apply_rope(q, positions, cfg.rope_theta)
+        k = attn.apply_rope(k, positions, cfg.rope_theta)
+        o = attn.cross_attention(q, k, v)                 # bidirectional full
+        x = x + o.reshape(x.shape) @ p["attn"]["wo"].astype(x.dtype)
+        x = x + _mlp_apply(cfg, p["mlp"], _rms(x, p["ln2"]))
+    return _rms(x, params["encoder_ln"])
+
+
+def forward(params: Params, cfg: ModelConfig, tokens, memory=None) -> jnp.ndarray:
+    """tokens: (B, S) int32 -> final hidden (B, S, d).
+
+    memory: (B, M, d) stub embeddings for vlm (vision) / audio (frames).
+    """
+    B, S = tokens.shape
+    x = params["embed"].astype(jnp.dtype(cfg.param_dtype))[tokens]
+    positions = jnp.arange(S)[None]
+
+    enc_out = None
+    if cfg.encoder_layers:
+        assert memory is not None, "audio model needs frame embeddings"
+        enc_out = encode_audio(params, cfg, memory)
+
+    types = cfg.layer_types()
+    period = cfg.scan_period()
+    use_scan = bool(period) and cfg.n_layers > period and not cfg.cross_attn_every \
+        and not cfg.encoder_layers
+
+    if use_scan:
+        pattern = cfg.block_pattern
+
+        def period_fn(x, period_params):
+            for j, t in enumerate(pattern):
+                x, _ = _block_apply(cfg, period_params[j], x, positions, t)
+            # constrain the scan carry too: it is the per-iteration residual
+            # saved for the backward pass — without this the saved stream is
+            # replicated over TP and dominates peak memory at depth
+            return _seq_shard(cfg, x), None
+
+        x, _ = jax.lax.scan(jax.checkpoint(period_fn), x, params["layers"])
+    else:
+        cross_idx = 0
+        for i, t, lp in _iter_layers(cfg, params):
+            x, _ = _block_apply(cfg, lp, x, positions, t)
+            if cfg.encoder_layers:
+                xp = _dec_cross_param(cfg, params, i)
+                x = x + _cross_attn_apply(cfg, xp, _rms(x, xp["ln"]),
+                                          _mem_kv(cfg, xp, enc_out))
+            if cfg.cross_attn_every and (i + 1) % cfg.cross_attn_every == 0:
+                cp = _cross_param(cfg, params, cross_idx)
+                assert memory is not None, "vlm model needs vision embeddings"
+                x = x + _cross_attn_apply(cfg, cp, _rms(x, cp["ln"]),
+                                          _mem_kv(cfg, cp, memory))
+                cross_idx += 1
+
+    return _rms(x, params["final_ln"])
+
+
+def _dec_cross_param(cfg, params, layer_idx):
+    dc = params["dec_cross"]
+    if isinstance(dc, tuple) and len(dc) == cfg.n_layers:
+        return dc[layer_idx]
+    # stacked by period groups
+    period = cfg.scan_period()
+    i, j = divmod(layer_idx, period)
+    return jax.tree_util.tree_map(lambda x: x[i], dc[j])
+
+
+def logits_fn(params, cfg, hidden):
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    if cfg.tie_embeddings:
+        return hidden @ head.astype(hidden.dtype).T
+    return hidden @ head.astype(hidden.dtype)
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            chunk: int = 512) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Chunked next-token cross-entropy.  batch: tokens (B,S), labels (B,S)
+    [, memory (B,M,d)].  The (B, S, V) logits tensor is never materialized."""
+    hidden = forward(params, cfg, batch["tokens"], memory=batch.get("memory"))
+    labels = batch["labels"]
+    B, S, d = hidden.shape
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    hc = hidden.reshape(B, S // c, c, d).swapaxes(0, 1)
+    lc = labels.reshape(B, S // c, c).swapaxes(0, 1)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    head = head.astype(hidden.dtype)
+
+    @jax.checkpoint
+    def chunk_loss(carry, inp):
+        h, l = inp
+        logits = (h @ head.T if cfg.tie_embeddings else h @ head).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(logp, l[..., None], -1)[..., 0]
+        return carry + jnp.sum(nll), None
+
+    total, _ = jax.lax.scan(chunk_loss, jnp.zeros((), jnp.float32), (hc, lc))
+    loss = total / (B * S)
+    return loss, {"loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def _layer_cache_template(cfg: ModelConfig, t: str, batch: int, cache_len: int,
+                          dtype) -> Any:
+    if t in ("attn", "global"):
+        return attn.init_cache(batch, cache_len, cfg.kv_heads, cfg.head_dim, dtype)
+    if t == "local":
+        return attn.init_cache(batch, min(cfg.window, cache_len), cfg.kv_heads,
+                               cfg.head_dim, dtype, rolling=True)
+    if t == "mlstm":
+        return rec.mlstm_init_state(batch, cfg.d_model, cfg.n_heads)
+    if t == "slstm":
+        return rec.slstm_init_state(batch, cfg.d_model)
+    if t == "rglru":
+        return rec.rglru_init_state(batch, cfg.d_model)
+    raise ValueError(t)
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    """Cache pytree: tuple over layers (+ cross-memory slots)."""
+    caches = tuple(_layer_cache_template(cfg, t, batch, cache_len, dtype)
+                   for t in cfg.layer_types())
+    out = {"layers": caches, "pos": jnp.zeros((), jnp.int32)}
+    if cfg.cross_attn_every:
+        n_cross = cfg.n_layers // cfg.cross_attn_every
+        M = cfg.vis_tokens
+        out["cross_mem"] = tuple(
+            (jnp.zeros((batch, M, cfg.kv_heads, cfg.head_dim), dtype),
+             jnp.zeros((batch, M, cfg.kv_heads, cfg.head_dim), dtype))
+            for _ in range(n_cross))
+    if cfg.encoder_layers:
+        F = cfg.n_audio_frames
+        out["enc_mem"] = tuple(
+            (jnp.zeros((batch, F, cfg.kv_heads, cfg.head_dim), dtype),
+             jnp.zeros((batch, F, cfg.kv_heads, cfg.head_dim), dtype))
+            for _ in range(cfg.n_layers))
+    return out
+
+
+def prefill(params, cfg: ModelConfig, tokens, memory=None, cache_len=None,
+            cache_dtype=jnp.bfloat16):
+    """Process a prompt, returning (last-token logits, populated cache)."""
+    B, S = tokens.shape
+    cache_len = cache_len or S
+    x = params["embed"].astype(jnp.dtype(cfg.param_dtype))[tokens]
+    positions = jnp.arange(S)[None]
+
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = encode_audio(params, cfg, memory)
+
+    # scanned layer stack (uniform full-attention archs, opt-in): one
+    # per-layer transient footprint instead of n_layers coexisting buffers
+    if (cfg.prefill_scan and cfg.scan_period() == 1
+            and cfg.n_layers > 1
+            and all(t == "attn" for t in cfg.layer_types())
+            and not cfg.cross_attn_every and not cfg.encoder_layers):
+        stacked = params["layers"][0]
+
+        def body(xc, lp):
+            xc, (k, v) = _block_apply(cfg, lp, xc, positions, "attn",
+                                      collect_cache=True)
+            return xc, (k.astype(cache_dtype), v.astype(cache_dtype))
+
+        x, (ks, vs) = jax.lax.scan(body, x, stacked)
+        pad = ((0, 0), (0, cache_len - S), (0, 0), (0, 0))
+        layer_caches = tuple(
+            KVCache(k=jnp.pad(ks[i], pad), v=jnp.pad(vs[i], pad),
+                    rolling=False)
+            for i in range(cfg.n_layers))
+        cache = init_cache(cfg, B, cache_len, cache_dtype)
+        cache["layers"] = layer_caches
+        cache["pos"] = jnp.asarray(S, jnp.int32)
+        h = _rms(x[:, -1:], params["final_ln"])
+        return logits_fn(params, cfg, h), cache
+
+    cache = init_cache(cfg, B, cache_len, cache_dtype)
+    layer_caches: List[Any] = []
+    cross_mems: List[Any] = []
+    enc_mems: List[Any] = []
+    cross_idx = 0
+    for i, t, lp in _iter_layers(cfg, params):
+        x, entry = _block_apply(cfg, lp, x, positions, t, collect_cache=True)
+        layer_caches.append(_fill_cache(cfg, t, cache["layers"][i], entry, S))
+        if cfg.encoder_layers:
+            xp = _dec_cross_param(cfg, params, i)
+            mem = _mem_kv(cfg, xp, enc_out)
+            enc_mems.append(tuple(m.astype(cache_dtype) for m in mem))
+            x = x + _cross_attn_apply(cfg, xp, _rms(x, xp["ln"]), mem)
+        if cfg.cross_attn_every and (i + 1) % cfg.cross_attn_every == 0:
+            cp = _cross_param(cfg, params, cross_idx)
+            mem = _mem_kv(cfg, cp, memory)
+            cross_mems.append(tuple(m.astype(cache_dtype) for m in mem))
+            x = x + _cross_attn_apply(cfg, cp, _rms(x, cp["ln"]), mem)
+            cross_idx += 1
+
+    cache["layers"] = tuple(layer_caches)
+    cache["pos"] = jnp.asarray(S, jnp.int32)
+    if cross_mems:
+        cache["cross_mem"] = tuple(cross_mems)
+    if enc_mems:
+        cache["enc_mem"] = tuple(enc_mems)
+    h = _rms(x[:, -1:], params["final_ln"])
+    return logits_fn(params, cfg, h), cache
+
+
+def _fill_cache(cfg, t, template, entry, S):
+    if t in ("attn", "global"):
+        k, v = entry
+        L = template.k.shape[1]
+        k = k[:, :L].astype(template.k.dtype)
+        v = v[:, :L].astype(template.v.dtype)
+        pad = ((0, 0), (0, L - k.shape[1]), (0, 0), (0, 0))
+        return KVCache(k=jnp.pad(k, pad), v=jnp.pad(v, pad), rolling=False)
+    if t == "local":
+        k, v = entry
+        w = template.k.shape[1]
+        if S >= w:
+            kw, vw = k[:, S - w:S], v[:, S - w:S]
+            # ring order: position p lives at slot p % w
+            pos = jnp.arange(S - w, S)
+            slots = jnp.mod(pos, w)
+            kr = jnp.zeros_like(template.k).at[:, slots].set(kw.astype(template.k.dtype))
+            vr = jnp.zeros_like(template.v).at[:, slots].set(vw.astype(template.v.dtype))
+            return KVCache(k=kr, v=vr, rolling=True)
+        pad = ((0, 0), (0, w - S), (0, 0), (0, 0))
+        return KVCache(k=jnp.pad(k.astype(template.k.dtype), pad),
+                       v=jnp.pad(v.astype(template.v.dtype), pad), rolling=True)
+    return entry  # recurrent states pass through
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, memory=None):
+    """token: (B, 1) int32; cache from init_cache/prefill.  Returns
+    (logits (B, 1, V), new cache)."""
+    B = token.shape[0]
+    pos = cache["pos"]
+    x = params["embed"].astype(jnp.dtype(cfg.param_dtype))[token]
+    positions = pos[None, None].astype(jnp.int32) * jnp.ones((B, 1), jnp.int32)
+
+    new_layer_caches = []
+    cross_idx = 0
+    for i, t, lp in _iter_layers(cfg, params):
+        c = cache["layers"][i]
+        if t in ("attn", "local", "global"):
+            h = _rms(x, lp["ln1"])
+            q, k, v = _qkv(cfg, lp["attn"], h)
+            q = attn.apply_rope(q, positions, cfg.rope_theta)
+            k = attn.apply_rope(k, positions, cfg.rope_theta)
+            c = attn.update_cache(c, k, v, pos)
+            o = attn.decode_attention(q, c, pos)
+            x = x + o.reshape(B, 1, -1) @ lp["attn"]["wo"].astype(x.dtype)
+            h2 = _rms(x, lp["ln2"])
+            if cfg.n_experts:
+                mo, _ = moe_mod.moe_apply(lp["moe"], h2, top_k=cfg.top_k,
+                                          capacity_factor=4.0)
+            else:
+                mo = _mlp_apply(cfg, lp["mlp"], h2)
+            x = x + mo
+        elif t == "mlstm":
+            h = _rms(x, lp["ln1"])
+            o, c = rec.mlstm_decode(lp["mlstm"], h, c, cfg.n_heads)
+            x = x + o
+        elif t == "slstm":
+            h = _rms(x, lp["ln1"])
+            o, c = rec.slstm_decode(lp["slstm"], h, c, cfg.n_heads)
+            x = x + o
+        elif t == "rglru":
+            h = _rms(x, lp["ln1"])
+            o, c = rec.rglru_decode(lp["rglru"], h, c)
+            x = x + o
+            x = x + _mlp_apply(cfg, lp["mlp"], _rms(x, lp["ln2"]))
+        new_layer_caches.append(c)
+
+        if cfg.encoder_layers:
+            xp = _dec_cross_param(cfg, params, i)
+            mk, mv = cache["enc_mem"][i]
+            x = x + _cross_attn_apply(cfg, xp, _rms(x, xp["ln"]),
+                                      (mk.astype(x.dtype), mv.astype(x.dtype)))
+        if cfg.cross_attn_every and (i + 1) % cfg.cross_attn_every == 0:
+            cp = _cross_param(cfg, params, cross_idx)
+            mk, mv = cache["cross_mem"][cross_idx]
+            x = x + _cross_attn_apply(cfg, cp, _rms(x, cp["ln"]),
+                                      (mk.astype(x.dtype), mv.astype(x.dtype)))
+            cross_idx += 1
+
+    new_cache = dict(cache)
+    new_cache["layers"] = tuple(new_layer_caches)
+    new_cache["pos"] = pos + 1
+    h = _rms(x, params["final_ln"])
+    return logits_fn(params, cfg, h), new_cache

@@ -1,0 +1,9 @@
+"""Local optimizers.
+
+The paper's LEAD uses the raw stochastic gradient (SGD) in lines 4/7.  For
+neural-net training the framework also offers momentum and Adam as *local
+preconditioners*: the optimizer transforms the local gradient g -> u and LEAD
+treats u as the "gradient" (a beyond-paper extension, flagged in configs as
+lead_optimizer; the paper-faithful path is plain sgd).
+"""
+from repro.optim.optimizers import Adam, Momentum, SGD, make_optimizer

@@ -1,0 +1,69 @@
+"""Minimal functional optimizers (pytree-generic, jit-friendly).
+
+Each optimizer is  init(params) -> state,  update(g, state, params) ->
+(direction, state).  `direction` is what LEAD consumes as its "gradient"
+(so plain SGD returns g itself — the paper-faithful path)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import Pytree, tree_map, tree_zeros_like
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    def init(self, params: Pytree):
+        return ()
+
+    def update(self, g: Pytree, state, params: Pytree):
+        return g, state
+
+
+class MomentumState(NamedTuple):
+    v: Pytree
+
+
+@dataclasses.dataclass(frozen=True)
+class Momentum:
+    beta: float = 0.9
+
+    def init(self, params: Pytree):
+        return MomentumState(v=tree_zeros_like(params))
+
+    def update(self, g: Pytree, state: MomentumState, params: Pytree):
+        v = tree_map(lambda vl, gl: self.beta * vl + gl, state.v, g)
+        return v, MomentumState(v=v)
+
+
+class AdamState(NamedTuple):
+    m: Pytree
+    v: Pytree
+    t: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class Adam:
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+
+    def init(self, params: Pytree):
+        return AdamState(m=tree_zeros_like(params), v=tree_zeros_like(params),
+                         t=jnp.zeros((), jnp.int32))
+
+    def update(self, g: Pytree, state: AdamState, params: Pytree):
+        t = state.t + 1
+        m = tree_map(lambda ml, gl: self.b1 * ml + (1 - self.b1) * gl, state.m, g)
+        v = tree_map(lambda vl, gl: self.b2 * vl + (1 - self.b2) * gl * gl, state.v, g)
+        bc1 = 1 - self.b1 ** t.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** t.astype(jnp.float32)
+        u = tree_map(lambda ml, vl: (ml / bc1) / (jnp.sqrt(vl / bc2) + self.eps), m, v)
+        return u, AdamState(m=m, v=v, t=t)
+
+
+def make_optimizer(name: str, **kw):
+    return {"sgd": SGD, "momentum": Momentum, "adam": Adam}[name](**kw)

@@ -1,0 +1,193 @@
+"""Roofline-term extraction from a compiled XLA executable.
+
+Hardware model: TPU v5e —
+    peak_flops  = 197e12  FLOP/s bf16 per chip
+    hbm_bw      = 819e9   B/s per chip
+    ici_bw      = 50e9    B/s per link (per-direction, per chip)
+
+Terms (per §Roofline, all *per device*):
+    compute_s    = HLO_FLOPs / peak_flops
+    memory_s     = HLO_bytes / hbm_bw
+    collective_s = collective_bytes / ici_bw
+
+cost_analysis() gives flops and bytes-accessed per device.  Collective bytes
+are NOT in cost_analysis: we parse the *partitioned* HLO (compiled.as_text())
+and sum operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction (shapes there are per-partition).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 0.5, "u4": 0.5,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Total bytes of possibly-tuple HLO type string, e.g.
+    'f32[16,512]' or '(f32[4], s8[8,512])'."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum operand bytes per collective type from (partitioned) HLO text."""
+    # first pass: instruction name -> result type string
+    shapes: Dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        # rhs starts with the result type, e.g. "f32[16,512]{1,0} add(..."
+        shapes[name] = rhs
+
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        op = None
+        for c in _COLLECTIVES:
+            if re.search(rf"\b{c}(\.\d+)?\(", rhs) or rhs.split("(")[0].strip().endswith(c):
+                op = c
+                break
+        if op is None:
+            # also match start/done pairs (async collectives): count -start only
+            for c in _COLLECTIVES:
+                if f"{c}-start(" in rhs:
+                    op = c
+                    break
+        if op is None:
+            continue
+        # operand names inside the call parens
+        call = rhs[rhs.index("("):] if "(" in rhs else ""
+        operands = re.findall(r"%?([\w\.\-]+)", call)
+        b = 0.0
+        seen = 0
+        for o in operands:
+            if o in shapes:
+                b += _shape_bytes(shapes[o].split(" ")[0])
+                seen += 1
+        if seen == 0:
+            # fall back to result type
+            b = _shape_bytes(rhs.split(" ")[0])
+        out[op] = out.get(op, 0.0) + b
+    return out
+
+
+def extract_costs(compiled) -> Dict[str, Any]:
+    """Raw per-device costs of one compiled executable."""
+    ca = compiled.cost_analysis() or {}
+    coll = {}
+    try:
+        coll = collective_bytes(compiled.as_text())
+    except Exception:
+        pass
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "collectives": coll,
+    }
+
+
+def extrapolate_costs(c1: Dict, c2: Dict, n_periods: int) -> Dict[str, Any]:
+    """Exact depth extrapolation: given costs of 1-period and 2-period
+    *unrolled* models, total(n) = c1 + (n-1) * (c2 - c1).  Valid because
+    scan periods are homogeneous (identical per-period HLO)."""
+    def lin(a, b):
+        return a + (n_periods - 1) * (b - a)
+
+    keys = set(c1["collectives"]) | set(c2["collectives"])
+    coll = {k: max(0.0, lin(c1["collectives"].get(k, 0.0),
+                            c2["collectives"].get(k, 0.0))) for k in keys}
+    return {
+        "flops": lin(c1["flops"], c2["flops"]),
+        "bytes": lin(c1["bytes"], c2["bytes"]),
+        "collectives": coll,
+    }
+
+
+def analyze(compiled, cfg, shape, mesh, costs: Dict = None) -> Dict[str, Any]:
+    """Full §Roofline record for one compiled executable.  `costs` overrides
+    the raw cost extraction (used for the scan depth-extrapolation)."""
+    n_dev = mesh.devices.size
+    raw = extract_costs(compiled)
+    used = costs if costs is not None else raw
+    flops = used["flops"]
+    hbm = used["bytes"]
+
+    try:
+        ma = compiled.memory_analysis()
+        peak = getattr(ma, "temp_size_in_bytes", None)
+        mem = {
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_bytes": getattr(ma, "output_size_in_bytes", None),
+            "alias_bytes": getattr(ma, "alias_size_in_bytes", None),
+        }
+    except Exception:
+        peak, mem = None, {}
+
+    coll = used["collectives"]
+    coll_total = sum(coll.values())
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    collective_s = coll_total / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    # MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE) per step, whole system
+    n_params = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * n_params * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * n_params * tokens
+    else:
+        tokens = shape.global_batch  # one token per sequence
+        model_flops = 2.0 * n_params * tokens
+    model_flops_per_dev = model_flops / n_dev
+    useful = model_flops_per_dev / flops if flops else 0.0
+
+    return {
+        "cost_analysis": {"flops_per_device": flops,
+                          "hbm_bytes_per_device": hbm},
+        "cost_method": "depth_extrapolated" if costs is not None else "direct",
+        "memory_analysis": mem,
+        "peak_memory_bytes": peak,
+        "collectives_bytes_per_device": coll,
+        "collective_total_bytes": coll_total,
+        "roofline": {
+            **{k: round(v, 6) for k, v in terms.items()},
+            "dominant": dominant,
+            "model_flops_per_device": model_flops_per_dev,
+            "useful_flops_fraction": round(useful, 4),
+        },
+    }

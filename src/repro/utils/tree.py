@@ -1,0 +1,108 @@
+"""Pytree vector-space utilities.
+
+Every LEAD/baseline state (X, H, H_w, D, momenta) is a pytree with the same
+structure as the model parameters.  These helpers implement the small linear
+algebra the algorithms need, plus flat-vector packing used by the blockwise
+compressor and the checkpointing layer.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def tree_map(f: Callable, *trees: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(f, *trees)
+
+
+def tree_add(a: Pytree, b: Pytree) -> Pytree:
+    return tree_map(jnp.add, a, b)
+
+
+def tree_sub(a: Pytree, b: Pytree) -> Pytree:
+    return tree_map(jnp.subtract, a, b)
+
+
+def tree_scale(s, a: Pytree) -> Pytree:
+    return tree_map(lambda x: s * x, a)
+
+
+def tree_axpy(s, a: Pytree, b: Pytree) -> Pytree:
+    """s * a + b."""
+    return tree_map(lambda x, y: s * x + y, a, b)
+
+
+def tree_lerp(alpha, a: Pytree, b: Pytree) -> Pytree:
+    """(1 - alpha) * a + alpha * b."""
+    return tree_map(lambda x, y: (1.0 - alpha) * x + alpha * y, a, b)
+
+
+def tree_dot(a: Pytree, b: Pytree):
+    leaves = tree_map(lambda x, y: jnp.vdot(x, y), a, b)
+    return functools.reduce(jnp.add, jax.tree_util.tree_leaves(leaves))
+
+
+def tree_sq_norm(a: Pytree):
+    return tree_dot(a, a)
+
+
+def tree_norm(a: Pytree):
+    return jnp.sqrt(tree_sq_norm(a))
+
+
+def tree_zeros_like(a: Pytree) -> Pytree:
+    return tree_map(jnp.zeros_like, a)
+
+
+def tree_ones_like(a: Pytree) -> Pytree:
+    return tree_map(jnp.ones_like, a)
+
+
+def tree_cast(a: Pytree, dtype) -> Pytree:
+    return tree_map(lambda x: x.astype(dtype), a)
+
+
+def tree_random_like(key, a: Pytree, scale=1.0) -> Pytree:
+    leaves, treedef = jax.tree_util.tree_flatten(a)
+    keys = jax.random.split(key, len(leaves))
+    new = [scale * jax.random.normal(k, l.shape, l.dtype) for k, l in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, new)
+
+
+def tree_size(a: Pytree) -> int:
+    return sum(int(l.size) for l in jax.tree_util.tree_leaves(a))
+
+
+def tree_bytes(a: Pytree) -> int:
+    return sum(int(l.size) * l.dtype.itemsize for l in jax.tree_util.tree_leaves(a))
+
+
+# ---------------------------------------------------------------------------
+# Flat-vector packing (used by the blockwise compressor + checkpointing)
+# ---------------------------------------------------------------------------
+
+def ravel_pytree(tree: Pytree):
+    """Flatten a pytree into a single 1-D f32-compatible vector.
+
+    Returns (vector, unravel_fn).  Unlike jax.flatten_util.ravel_pytree this
+    keeps a stable leaf ordering and preserves dtypes on unravel.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = [l.shape for l in leaves]
+    dtypes = [l.dtype for l in leaves]
+    sizes = [int(l.size) for l in leaves]
+    flat = jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in leaves]) if leaves else jnp.zeros((0,), jnp.float32)
+
+    def unravel(vec):
+        out, off = [], 0
+        for shp, dt, sz in zip(shapes, dtypes, sizes):
+            out.append(jnp.reshape(vec[off:off + sz], shp).astype(dt))
+            off += sz
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return flat, unravel

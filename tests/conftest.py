@@ -1,0 +1,10 @@
+# NOTE: do NOT set --xla_force_host_platform_device_count here.  Smoke tests
+# and benches must see the real single device; only launch/dryrun.py (and the
+# subprocess-based distributed tests) force placeholder devices.
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

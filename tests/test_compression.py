@@ -1,0 +1,97 @@
+"""Compression operator tests: Assumption 2 (unbiased, C-contracted) and
+Theorem 3 (p-norm variance ordering)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compression import Identity, QuantizePNorm, RandK, TopK, estimate_C
+
+
+@pytest.mark.parametrize("bits", [1, 2, 4, 7])
+@pytest.mark.parametrize("p", [2, np.inf])
+def test_quantizer_unbiased(bits, p, key):
+    q = QuantizePNorm(bits=bits, p=p, block=128)
+    x = jax.random.normal(key, (512,))
+    keys = jax.random.split(jax.random.PRNGKey(1), 512)
+    xhats = jax.vmap(lambda k: q.compress(k, x))(keys)
+    bias = jnp.mean(xhats, 0) - x
+    # SE of the mean ~ scale*2^{-(b-1)}/sqrt(trials); allow 5 sigma
+    tol = 5 * float(jnp.max(jnp.abs(x))) * 2.0 ** (1 - bits) / np.sqrt(512)
+    assert float(jnp.max(jnp.abs(bias))) < tol
+
+
+def test_quantizer_elementwise_error_bound(key):
+    """|x - Q(x)| <= scale * 2^{-(b-1)} elementwise (quantization step)."""
+    q = QuantizePNorm(bits=2, block=64)
+    x = jax.random.normal(key, (640,))
+    xh = q.compress(jax.random.PRNGKey(3), x)
+    step = jnp.repeat(jnp.max(jnp.abs(x.reshape(10, 64)), 1), 64) * 0.5
+    assert bool(jnp.all(jnp.abs(xh - x) <= step + 1e-6))
+
+
+def test_inf_norm_lowest_variance(key):
+    """Theorem 3: the compression error decreases as p increases."""
+    errs = {}
+    for p in (1, 2, 3, np.inf):
+        q = QuantizePNorm(bits=2, p=p, block=512)
+        x = jax.random.normal(key, (4096,))
+        keys = jax.random.split(key, 64)
+        e = jax.vmap(lambda k: jnp.sum((q.compress(k, x) - x) ** 2))(keys)
+        errs[p] = float(jnp.mean(e))
+    assert errs[np.inf] < errs[2] < errs[1]
+
+
+def test_estimated_C_below_bound(key):
+    q = QuantizePNorm(bits=2, block=512)
+    C_hat = estimate_C(q, key, d=2048, trials=32)
+    assert 0 < C_hat < q.variance_constant()
+
+
+def test_randk_unbiased_and_C(key):
+    r = RandK(ratio=0.25)
+    x = jax.random.normal(key, (1024,))
+    keys = jax.random.split(key, 2048)
+    xh = jax.vmap(lambda k: r.compress(k, x))(keys)
+    bias = jnp.mean(xh, 0) - x
+    assert float(jnp.max(jnp.abs(bias))) < 0.5
+    C_hat = estimate_C(r, key, d=1024, trials=32)
+    assert C_hat < 1.2 * r.variance_constant() + 1.0
+
+
+def test_topk_keeps_largest(key):
+    t = TopK(ratio=0.1)
+    x = jax.random.normal(key, (100,))
+    xh = t.compress(key, x)
+    kept = jnp.abs(xh) > 0
+    assert int(kept.sum()) >= 10
+    thresh = jnp.sort(jnp.abs(x))[-10]
+    assert bool(jnp.all(jnp.abs(x)[kept] >= thresh))
+
+
+def test_identity_exact(key):
+    x = jax.random.normal(key, (77,))
+    assert bool(jnp.all(Identity().compress(key, x) == x))
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 2000), bits=st.integers(1, 6), seed=st.integers(0, 2**30))
+def test_quantizer_roundtrip_bound_property(n, bits, seed):
+    """Hypothesis: for any shape/bits, the decode error respects the
+    per-block quantization-step bound."""
+    q = QuantizePNorm(bits=bits, block=128)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    xh = q.compress(jax.random.PRNGKey(seed + 1), x)
+    nb = -(-n // 128)
+    xp = jnp.pad(x, (0, nb * 128 - n)).reshape(nb, 128)
+    step = jnp.max(jnp.abs(xp), 1, keepdims=True) * 2.0 ** (1 - bits)
+    bound = jnp.repeat(step, 128, 1).reshape(-1)[:n]
+    assert bool(jnp.all(jnp.abs(xh - x) <= bound + 1e-6))
+
+
+def test_wire_bits_accounting():
+    q = QuantizePNorm(bits=2, block=512)
+    assert q.wire_bits(512) == 512 * 3 + 32
+    assert q.wire_bits(513) == 513 * 3 + 64
+    assert Identity().wire_bits(100) == 3200

@@ -1,0 +1,87 @@
+"""Config registry + parameter-count sanity vs published model sizes."""
+import jax
+import pytest
+
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import get_config, get_shape, list_archs
+from repro.models import init_params
+
+EXPECTED_PARAMS = {
+    # published total parameter counts (approximate, embedding included)
+    "granite-3-2b": 2.5e9,
+    "qwen2-7b": 7.6e9,
+    "deepseek-67b": 67e9,
+    "gemma3-12b": 12e9,
+    "kimi-k2-1t-a32b": 1.0e12,
+    "granite-moe-1b-a400m": 1.3e9,
+    "llama-3.2-vision-11b": 9.8e9,   # language tower only (vision stubbed)
+    "recurrentgemma-2b": 2.7e9,
+    "xlstm-1.3b": 1.3e9,
+    "whisper-tiny": 37e6,
+}
+
+
+def test_all_archs_registered():
+    assert len(list_archs()) == 10
+    assert len(INPUT_SHAPES) == 4
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    spec = {
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+        "granite-3-2b": (40, 2048, 32, 8, 8192, 49155),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+        "gemma3-12b": (48, 3840, 16, 8, 15360, 262144),
+        "qwen2-7b": (28, 3584, 28, 4, 18944, 152064),
+        "deepseek-67b": (95, 8192, 64, 8, 22016, 102400),
+    }[arch]
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.d_ff,
+            cfg.vocab) == spec
+    assert cfg.source
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_param_count_formula_matches_init(arch, key):
+    """cfg.param_count() (used for MODEL_FLOPS) must match the real init on
+    the reduced config within 2%."""
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, key)
+    actual = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    predicted = cfg.param_count()
+    assert abs(predicted - actual) / actual < 0.02, (predicted, actual)
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED_PARAMS))
+def test_full_size_param_count_plausible(arch):
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    expect = EXPECTED_PARAMS[arch]
+    assert 0.5 * expect < n < 1.7 * expect, f"{arch}: {n/1e9:.2f}B vs {expect/1e9:.2f}B"
+
+
+def test_moe_active_params():
+    cfg = get_config("kimi-k2-1t-a32b")
+    active = cfg.active_param_count()
+    total = cfg.param_count()
+    assert active < 0.1 * total          # 8 of 384 experts
+    assert active > 1e10                 # ~32B active
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_reduced_configs_meet_spec(arch):
+    r = get_config(arch).reduced()
+    assert r.n_layers == 2 and r.d_model <= 512
+    assert r.n_experts <= 4
+    assert r.family == get_config(arch).family
+
+
+def test_shapes():
+    s = get_shape("train_4k")
+    assert (s.seq_len, s.global_batch, s.kind) == (4096, 256, "train")
+    assert get_shape("long_500k").seq_len == 524288

@@ -1,0 +1,99 @@
+"""Pallas kernel tests: sweep shapes/dtypes, assert allclose vs the ref.py
+pure-jnp oracles (interpret=True executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.ops import _pick_tile, _to_blocks
+
+
+@pytest.mark.parametrize("n", [64, 512, 1000, 4096, 300_000])
+@pytest.mark.parametrize("bits", [1, 2, 4])
+def test_encode_matches_ref(n, bits, key):
+    x = jax.random.normal(jax.random.fold_in(key, n), (n,))
+    code, scale = ops.quantize_encode(key, x, bits=bits)
+    tb = _pick_tile(n, 512, 256)
+    xb, _ = _to_blocks(x, 512, tb)
+    u = jax.random.uniform(key, xb.shape, jnp.float32)
+    rc, rs = ref.quantize_encode_ref(xb, u, bits)
+    np.testing.assert_array_equal(np.asarray(code), np.asarray(rc))
+    np.testing.assert_allclose(np.asarray(scale), np.asarray(rs), rtol=1e-6)
+
+
+@pytest.mark.parametrize("n", [100, 2048, 70_000])
+@pytest.mark.parametrize("bits", [2, 6])
+def test_decode_matches_ref(n, bits, key):
+    x = jax.random.normal(jax.random.fold_in(key, n + 1), (n,))
+    code, scale = ops.quantize_encode(key, x, bits=bits)
+    got = ops.quantize_decode(code, scale, bits=bits, shape=(n,))
+    rv = ref.quantize_decode_ref(code, scale, bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(rv).ravel()[:n],
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_roundtrip_dtype_and_bound(dtype, key):
+    x = jax.random.normal(key, (3000,), dtype)
+    xh = ops.quantize_roundtrip(key, x, bits=2)
+    assert xh.dtype == dtype
+    xb, _ = _to_blocks(x, 512, _pick_tile(3000, 512, 256))
+    step = np.repeat(np.max(np.abs(np.asarray(xb, np.float32)), 1), 512) * 0.5
+    err = np.abs(np.asarray(xh, np.float32) - np.asarray(x, np.float32))
+    assert np.all(err <= step[:3000] + 2e-2)
+
+
+@pytest.mark.parametrize("n", [512, 7777, 131072])
+def test_lead_update_matches_ref(n, key):
+    arrs = [jax.random.normal(jax.random.fold_in(key, i), (n,)) for i in range(7)]
+    for eta, gamma, alpha in [(0.1, 1.0, 0.5), (0.01, 0.3, 0.9)]:
+        got = ops.lead_update_flat(*arrs, eta, gamma, alpha)
+        want = ref.lead_update_ref(*arrs, eta, gamma, alpha)
+        for g, w, nm in zip(got, want, ["x", "d", "h", "hw"]):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       atol=1e-4, err_msg=nm)
+
+
+@pytest.mark.parametrize("n", [1000, 65536])
+def test_lead_diff_encode_matches_composition(n, key):
+    """Fused pre-comm kernel == (compute diff; encode diff) composition."""
+    x, g, d, h = (jax.random.normal(jax.random.fold_in(key, i), (n,))
+                  for i in range(4))
+    eta = 0.07
+    code, scale = ops.lead_diff_encode_flat(key, x, g, d, h, eta, bits=2)
+    diff = x - eta * g - eta * d - h
+    code2, scale2 = ops.quantize_encode(key, diff, bits=2)
+    # same dither => identical codes (both draw uniform from the same key and
+    # block layout)
+    np.testing.assert_array_equal(np.asarray(code), np.asarray(code2))
+    np.testing.assert_allclose(np.asarray(scale), np.asarray(scale2), rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 5000), bits=st.sampled_from([1, 2, 3, 4]),
+       seed=st.integers(0, 2**29))
+def test_pack_unpack_roundtrip_property(n, bits, seed):
+    lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1)
+    c = jax.random.randint(jax.random.PRNGKey(seed), (n,), lo, hi + 1
+                           ).astype(jnp.int8)
+    p = ops.pack_codes(c, bits)
+    c2 = ops.unpack_codes(p, n, bits)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(c2))
+    # wire size: (bits+1) bits per element, padded to 32-bit words
+    per32 = 32 // (bits + 1)
+    assert p.size == -(-n // per32)
+
+
+def test_kernel_vs_core_compressor_semantics(key):
+    """The Pallas path and core.compression.QuantizePNorm implement the same
+    quantizer (identical codes for identical dither)."""
+    from repro.core.compression import QuantizePNorm
+    q = QuantizePNorm(bits=2, block=512)
+    x = jax.random.normal(key, (2048,))
+    payload, spec = q.encode(key, x)
+    # core draws uniform over the padded block matrix with the same key
+    code_k, scale_k = ops.quantize_encode(key, x, bits=2)
+    np.testing.assert_array_equal(np.asarray(payload["code"]),
+                                  np.asarray(code_k)[: payload["code"].shape[0]])

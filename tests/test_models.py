@@ -1,0 +1,188 @@
+"""Per-architecture smoke tests (reduced configs, CPU) + model invariants.
+
+Spec: for each assigned architecture, instantiate a REDUCED variant of the
+same family (2 layers, d_model <= 512, <= 4 experts) and run one forward /
+train step asserting output shapes + no NaNs.  Plus prefill/decode
+equivalence, sliding-window semantics, and rolling-cache correctness.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import with_long_context
+from repro.configs.registry import get_config, list_archs
+from repro.models import (decode_step, forward, init_params, loss_fn, prefill)
+from repro.models import attention as attn_mod
+from repro.models.transformer import logits_fn
+from repro.optim.optimizers import SGD
+
+ARCHS = list_archs()
+
+
+def _batch_for(cfg, key, B=2, S=64):
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.family == "vlm":
+        batch["memory"] = 0.02 * jax.random.normal(key, (B, cfg.vis_tokens, cfg.d_model))
+    if cfg.family == "audio":
+        batch["memory"] = 0.02 * jax.random.normal(key, (B, cfg.n_audio_frames, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch, key):
+    cfg = get_config(arch).reduced()
+    assert cfg.n_layers == 2 and cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+    params = init_params(cfg, key)
+    batch = _batch_for(cfg, key)
+
+    h = forward(params, cfg, batch["tokens"], memory=batch.get("memory"))
+    assert h.shape == (2, 64, cfg.d_model)
+    assert bool(jnp.all(jnp.isfinite(h)))
+
+    # one SGD train step
+    (loss, _), grads = jax.value_and_grad(
+        lambda p: loss_fn(p, cfg, batch), has_aux=True)(params)
+    assert bool(jnp.isfinite(loss))
+    gleaves = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in gleaves)
+    new = jax.tree_util.tree_map(lambda p, g: p - 1e-2 * g, params, grads)
+    loss2, _ = loss_fn(new, cfg, batch)
+    assert bool(jnp.isfinite(loss2))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_matches_forward(arch, key):
+    cfg = get_config(arch).reduced()
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)  # no token drops
+    params = init_params(cfg, key)
+    B, S = 2, 32
+    batch = _batch_for(cfg, key, B, S)
+    tokens, memory = batch["tokens"], batch.get("memory")
+
+    ref_logits = logits_fn(params, cfg, forward(params, cfg, tokens, memory=memory))
+    Sp = S - 3
+    lg, cache = prefill(params, cfg, tokens[:, :Sp], memory=memory,
+                        cache_len=S, cache_dtype=jnp.float32)
+    errs = [float(jnp.max(jnp.abs(lg[:, 0] - ref_logits[:, Sp - 1])))]
+    for t in range(Sp, S):
+        lg, cache = decode_step(params, cfg, tokens[:, t:t + 1], cache)
+        errs.append(float(jnp.max(jnp.abs(lg[:, 0] - ref_logits[:, t]))))
+    assert max(errs) < 1e-3, errs
+
+
+def test_windowed_equals_full_when_window_covers(key):
+    B, S, nq, nkv, hd = 2, 64, 4, 2, 16
+    q = jax.random.normal(key, (B, S, nq, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, nkv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, nkv, hd))
+    full = attn_mod.chunked_causal_attention(q, k, v, chunk=16)
+    win = attn_mod.windowed_attention(q, k, v, window=S, chunk=16)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(win), atol=2e-5)
+
+
+def test_windowed_masks_out_of_window(key):
+    """Changing keys outside the window must not change the output."""
+    B, S, H, hd, W = 1, 64, 2, 8, 8
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, hd))
+    out = attn_mod.windowed_attention(q, k, v, window=W, chunk=16)
+    k2 = k.at[:, :40].set(jax.random.normal(jax.random.fold_in(key, 3),
+                                            (B, 40, H, hd)))
+    v2 = v.at[:, :40].set(0.0)
+    out2 = attn_mod.windowed_attention(q, k2, v2, window=W, chunk=16)
+    # positions >= 49 attend only to [t-W, t] in (48, 64): unaffected
+    np.testing.assert_allclose(np.asarray(out[:, 49:]), np.asarray(out2[:, 49:]),
+                               atol=2e-5)
+
+
+def test_rolling_cache_equals_full_for_windowed_decode(key):
+    """A rolling (ring-buffer) cache of width W must reproduce windowed
+    attention over the last W positions."""
+    B, H, hd, W = 1, 2, 8, 8
+    cache = attn_mod.init_cache(B, W, H, hd, jnp.float32, rolling=True)
+    ks, vs = [], []
+    outs = []
+    for pos in range(20):
+        kk = jax.random.fold_in(key, 100 + pos)
+        q = jax.random.normal(kk, (B, 1, H, hd))
+        k = jax.random.normal(jax.random.fold_in(kk, 1), (B, 1, H, hd))
+        v = jax.random.normal(jax.random.fold_in(kk, 2), (B, 1, H, hd))
+        ks.append(k)
+        vs.append(v)
+        cache = attn_mod.update_cache(cache, k, v, jnp.asarray(pos))
+        o = attn_mod.decode_attention(q, cache, jnp.asarray(pos))
+        # reference: softmax over the last W positions
+        kw = jnp.concatenate(ks[max(0, pos - W + 1):], 1)
+        vw = jnp.concatenate(vs[max(0, pos - W + 1):], 1)
+        s = jnp.einsum("bqhd,bshd->bhqs", q, kw) * hd ** -0.5
+        r = jnp.einsum("bhqs,bshd->bqhd", jax.nn.softmax(s, -1), vw)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=2e-5)
+
+
+def test_long_context_transform():
+    cfg = get_config("granite-3-2b")
+    lc = with_long_context(cfg)
+    assert all(t == "local" for t in lc.block_pattern)
+    assert lc.window == cfg.long_context_window
+    g3 = get_config("gemma3-12b")
+    assert with_long_context(g3) is g3        # native subquadratic unchanged
+    xl = get_config("xlstm-1.3b")
+    assert with_long_context(xl) is xl
+
+
+def test_chunked_loss_matches_dense(key):
+    """Chunked cross-entropy == materialized logits cross-entropy."""
+    cfg = get_config("granite-3-2b").reduced()
+    params = init_params(cfg, key)
+    batch = _batch_for(cfg, key, 2, 32)
+    loss, _ = loss_fn(params, cfg, batch, chunk=8)
+    h = forward(params, cfg, batch["tokens"])
+    logits = logits_fn(params, cfg, h).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits)
+    want = -jnp.mean(jnp.take_along_axis(logp, batch["labels"][..., None], -1))
+    np.testing.assert_allclose(float(loss), float(want), rtol=1e-5)
+
+
+@pytest.mark.parametrize("arch", ["xlstm-1.3b", "recurrentgemma-2b"])
+def test_recurrent_long_decode_state_is_bounded(arch, key):
+    """Recurrent archs decode with O(1) state: the cache for a 1e6-position
+    stream is the same pytree as for 32 positions."""
+    from repro.models import init_cache
+    cfg = get_config(arch).reduced()
+    c_small = jax.eval_shape(lambda: init_cache(cfg, 1, 32))
+    c_big = jax.eval_shape(lambda: init_cache(cfg, 1, 1_000_000))
+    small = {jax.tree_util.tree_structure(c_small)}
+    sizes_small = [l.size for l in jax.tree_util.tree_leaves(c_small)
+                   if l.size > 4]
+    sizes_big = [l.size for l in jax.tree_util.tree_leaves(c_big)
+                 if l.size > 4]
+    # recurrent/rolling leaves identical; only "local" windows cap at window
+    for a, b in zip(sizes_small, sizes_big):
+        assert b <= max(a, cfg.window * cfg.kv_heads * cfg.head_dim * 2)
+
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "granite-moe-1b-a400m"])
+def test_prefill_scan_matches_unrolled(arch, key):
+    """cfg.prefill_scan (the §Perf kimi memory fix) == unrolled prefill."""
+    cfg = get_config(arch).reduced()
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    cfg_s = dataclasses.replace(cfg, prefill_scan=True)
+    params = init_params(cfg, key)
+    tokens = jax.random.randint(key, (2, 24), 0, cfg.vocab)
+    lg1, c1 = prefill(params, cfg, tokens, cache_len=32, cache_dtype=jnp.float32)
+    lg2, c2 = prefill(params, cfg_s, tokens, cache_len=32, cache_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(lg1), np.asarray(lg2), atol=1e-5)
+    for l1, l2 in zip(jax.tree_util.tree_leaves(c1), jax.tree_util.tree_leaves(c2)):
+        np.testing.assert_allclose(np.asarray(l1, np.float32),
+                                   np.asarray(l2, np.float32), atol=1e-5)
+    # decode continues identically from the scanned cache
+    lg3, _ = decode_step(params, cfg_s, tokens[:, :1], c2)
+    assert bool(jnp.all(jnp.isfinite(lg3)))

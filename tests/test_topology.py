@@ -1,0 +1,43 @@
+"""Mixing-matrix tests (Assumption 1 + spectral quantities)."""
+import numpy as np
+import pytest
+
+from repro.core import topology as tp
+
+
+@pytest.mark.parametrize("name", ["ring", "chain", "full", "star"])
+@pytest.mark.parametrize("n", [2, 3, 8, 16, 32])
+def test_assumption1(name, n):
+    W = tp.make_mixing(name, n)
+    tp.check_mixing(W)
+
+
+def test_ring_paper_weights():
+    W = tp.ring(8)
+    assert np.allclose(np.diag(W), 1 / 3)
+    assert np.allclose(W[0, 1], 1 / 3) and np.allclose(W[0, 7], 1 / 3)
+    assert W[0, 2] == 0
+
+
+def test_torus():
+    W = tp.torus_2d(4, 4)
+    tp.check_mixing(W)
+
+
+def test_erdos_renyi_connected():
+    W = tp.erdos_renyi(12, p=0.3, seed=3)
+    tp.check_mixing(W)
+
+
+def test_kappa_g_ordering():
+    """Better-connected graphs have smaller condition number kappa_g."""
+    kf = tp.kappa_g(tp.fully_connected(16))
+    kr = tp.kappa_g(tp.ring(16))
+    kc = tp.kappa_g(tp.chain(16))
+    assert kf == pytest.approx(1.0)
+    assert kf < kr < kc
+
+
+def test_beta_full_graph():
+    """Paper: fully connected => beta = lambda_max(I - W) = 1."""
+    assert tp.beta(tp.fully_connected(8)) == pytest.approx(1.0)
