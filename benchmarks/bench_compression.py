@@ -48,11 +48,13 @@ def main():
 
     # kernel micro-timings (CPU interpret — correctness path)
     x = jax.random.normal(key, (1 << 20,))
-    us = time_us(lambda: ops.quantize_roundtrip(key, x, bits=2), iters=3)
+    us = time_us(lambda: ops.quantize_roundtrip(key, x, bits=2,
+                                               interpret=True), iters=3)
     emit("kernels/quantize_roundtrip_1M", us, "interpret=True")
     arrs = [jax.random.normal(jax.random.fold_in(key, i), (1 << 20,))
             for i in range(7)]
-    us = time_us(lambda: ops.lead_update_flat(*arrs, 0.1, 1.0, 0.5), iters=3)
+    us = time_us(lambda: ops.lead_update_flat(*arrs, 0.1, 1.0, 0.5,
+                                              interpret=True), iters=3)
     emit("kernels/lead_update_1M", us, "interpret=True")
 
     def unfused():

@@ -1,0 +1,193 @@
+"""LEAD hot-path latency: pytree reference engine vs flat-buffer engine.
+
+Two measurements, both at f32 across sizes d in {2^12..2^20}, n in {8, 16}:
+
+  * step/...    bare per-step latency of each engine's jitted step (the
+                iteration map alone, synthetic gradients).  Both paths are
+                XLA-fused and memory-bound, so this isolates the layout +
+                dither wins of the flat engine.
+  * driven/...  per-iteration latency of the LEAD hot path as each engine
+                is *driven* at the acceptance point (d=2^18, n=8):
+                the tree path as the seed simulator ran it (python loop,
+                jitted step, per-iteration recorded metrics with blocking
+                float() host syncs) vs the flat engine under the new
+                jax.lax.scan driver with on-device metric accumulation —
+                the comparison the flat-engine rewrite targets.
+
+Writes BENCH_lead_step.json (rows + the headline speedups) to the CWD.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, peek_rows, write_json
+from repro.core import lead as lead_mod, topology
+from repro.core.compression import QuantizePNorm
+from repro.core.convex import consensus_error, distance_to_opt
+from repro.core.engine import engine_for
+from repro.core.gossip import DenseGossip
+from repro.core.lead import LEADHyper
+from repro.core.simulator import vmap_compress
+
+DS = [2 ** p for p in (12, 14, 16, 18, 20)]
+NS = [8, 16]
+ACCEPT_D, ACCEPT_N = 2 ** 18, 8
+HYPER = LEADHyper(eta=0.05, gamma=1.0, alpha=0.5)
+
+
+def _best(fn, iters, *args):
+    r = fn(*args)
+    jax.block_until_ready(r)
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.block_until_ready(r)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def bench_bare_steps():
+    key = jax.random.PRNGKey(0)
+    comp = QuantizePNorm(bits=2, block=512)
+    speedup_at_accept = None
+    for n in NS:
+        gossip = DenseGossip(W=jnp.asarray(topology.ring(n)))
+        for d in DS:
+            iters = 3 if d >= 2 ** 18 else 6
+            x0 = jax.random.normal(key, (n, d))
+            g = jax.random.normal(jax.random.fold_in(key, 1), (n, d))
+            st_t = lead_mod.init(x0, g, HYPER, gossip.mix, h0=x0)
+            tree = jax.jit(lambda s, gg, k: lead_mod.step(
+                s, gg, k, HYPER, gossip.mix, vmap_compress(comp)))
+            us_t = _best(tree, iters, st_t, g, key)
+
+            eng = engine_for(gossip.W, comp, d, dither="fast")
+            st_f = eng.init(x0, g, HYPER)
+            gb = eng.blockify(g)       # native layout in, native layout out
+            flat = jax.jit(lambda s, gg, k: eng.step(s, gg, k, HYPER)[0])
+            us_f = _best(flat, iters, st_f, gb, key)
+
+            emit(f"lead_step/step_tree_d{d}_n{n}", us_t, "pytree+threefry")
+            emit(f"lead_step/step_flat_d{d}_n{n}", us_f,
+                 f"speedup_vs_tree={us_t / us_f:.2f}")
+            if d == ACCEPT_D and n == ACCEPT_N:
+                speedup_at_accept = us_t / us_f
+    return speedup_at_accept
+
+
+class _Quadratic:
+    """f_i(x) = 0.5 ||x - t_i||^2: the cheapest strongly-convex objective —
+    keeps the driven comparison dominated by engine+driver cost."""
+
+    def __init__(self, key, n, d):
+        self.T = jax.random.normal(key, (n, d))
+        self.n, self.d = n, d
+        self.x_star = jnp.mean(self.T, 0)
+
+    def full_grad(self, X):
+        return X - self.T
+
+    def loss(self, X):
+        return 0.5 * jnp.mean(jnp.sum((X - self.T) ** 2, -1))
+
+
+def bench_driven(iters=6):
+    """Seed-style driven tree iteration vs scan-driven flat iteration."""
+    n, d = ACCEPT_N, ACCEPT_D
+    key = jax.random.PRNGKey(0)
+    prob = _Quadratic(key, n, d)
+    gossip = DenseGossip(W=jnp.asarray(topology.ring(n)))
+    comp = QuantizePNorm(bits=2, block=512)
+    x0 = jnp.zeros((n, d))
+    g0 = prob.full_grad(x0)
+
+    # -- tree path, exactly as the seed simulator drove it: python loop,
+    # jitted step (grad inside), four recorded metrics with float() syncs.
+    st = lead_mod.init(x0, g0, HYPER, gossip.mix, h0=x0)
+
+    @jax.jit
+    def step_fn(state, kk):
+        g = prob.full_grad(state.x)
+        return lead_mod.step(state, g, jax.random.fold_in(kk, 2), HYPER,
+                             gossip.mix, vmap_compress(comp))
+
+    def seed_iteration(state, k):
+        k, sub = jax.random.split(k)
+        state = step_fn(state, sub)
+        X = state.x
+        float(distance_to_opt(X, prob.x_star))
+        float(consensus_error(X))
+        float(prob.loss(X))
+        # seed _compression_error: re-compress the transmitted quantity
+        eta = 0.05
+        y = X - eta * (prob.full_grad(X) + state.d)
+        target = y - state.h
+        q = jax.vmap(comp.compress)(jax.random.split(sub, n), target)
+        float(jnp.linalg.norm(q - target) / (jnp.linalg.norm(X) + 1e-12))
+        return state, k
+
+    # -- flat engine under the scan driver with on-device metrics, fully in
+    # the native block layout (gradients and metrics computed on blocked
+    # buffers — padding is zero in every operand, so values are identical).
+    eng = engine_for(gossip.W, comp, d, dither="fast")
+    st_f = eng.init(x0, g0, HYPER)
+    Tb = eng.blockify(prob.T)
+    xs_b = eng.blockify(prob.x_star[None, :])[0]
+    K = 8
+
+    def body(carry, _):
+        state, k = carry
+        k, sub = jax.random.split(k)
+        g = state.x - Tb                                   # blocked gradients
+        new, cerr = eng.step(state, g, jax.random.fold_in(sub, 2), HYPER)
+        X = new.x
+        dist = jnp.mean(jnp.sum((X - xs_b[None]) ** 2, (1, 2)))
+        xbar = jnp.mean(X, 0, keepdims=True)
+        cons = jnp.mean(jnp.sum((X - xbar) ** 2, (1, 2)))
+        lss = 0.5 * jnp.mean(jnp.sum((X - Tb) ** 2, (1, 2)))
+        return (new, k), (dist, cons, lss, cerr)
+
+    @jax.jit
+    def scan_iters(state, k):
+        (state, _), ms = jax.lax.scan(body, (state, k), None, length=K)
+        return state, ms
+
+    # warm both jit caches, then interleave reps so machine-throughput
+    # drift on shared boxes affects both measurements equally
+    st, k = seed_iteration(st, key)
+    jax.block_until_ready(scan_iters(st_f, key))
+    best_t = best_f = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        st, k = seed_iteration(st, k)
+        best_t = min(best_t, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(scan_iters(st_f, key))
+        best_f = min(best_f, time.perf_counter() - t0)
+    us_tree = best_t * 1e6
+    us_flat = best_f / K * 1e6
+
+    emit(f"lead_step/driven_tree_d{ACCEPT_D}_n{ACCEPT_N}", us_tree,
+         "seed driver: python loop + 4 host syncs/iter")
+    emit(f"lead_step/driven_flat_d{ACCEPT_D}_n{ACCEPT_N}", us_flat,
+         "scan driver: on-device metrics")
+    speedup = us_tree / us_flat
+    emit(f"lead_step/driven_speedup_d{ACCEPT_D}_n{ACCEPT_N}",
+         us_tree - us_flat, f"speedup={speedup:.2f}")
+    return speedup
+
+
+def main():
+    bare = bench_bare_steps()
+    driven = bench_driven()
+    emit("lead_step/acceptance", 0.0,
+         f"driven_speedup_d{ACCEPT_D}_n{ACCEPT_N}={driven:.2f};"
+         f"bare_step_speedup_d{ACCEPT_D}_n{ACCEPT_N}={bare:.2f}")
+    write_json("BENCH_lead_step.json", "lead_step", peek_rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -30,6 +30,9 @@ def main():
     algos = {
         "fig1/LEAD(2bit)": LEADSim(gossip=gossip, compressor=q2, eta=eta,
                                    gamma=1.0, alpha=0.5),
+        "fig1/LEAD(2bit,flat)": LEADSim(gossip=gossip, compressor=q2, eta=eta,
+                                        gamma=1.0, alpha=0.5, engine="flat",
+                                        dither="fast"),
         "fig1/NIDS": NIDS(gossip=gossip, eta=eta),
         "fig1/DGD": DGD(gossip=gossip, eta=eta),
         "fig1/CHOCO-SGD(2bit)": CHOCO_SGD(gossip=gossip, compressor=q2,

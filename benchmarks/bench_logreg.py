@@ -33,6 +33,9 @@ def bench(hetero: bool, stochastic: bool, fig: str):
     eta = 0.1
     algos = {
         f"{fig}/LEAD(2bit)": LEADSim(gossip=gossip, compressor=q2, eta=eta),
+        f"{fig}/LEAD(2bit,flat)": LEADSim(gossip=gossip, compressor=q2,
+                                          eta=eta, engine="flat",
+                                          dither="fast"),
         f"{fig}/NIDS": NIDS(gossip=gossip, eta=eta),
         f"{fig}/DGD": DGD(gossip=gossip, eta=eta),
         f"{fig}/CHOCO-SGD(2bit)": CHOCO_SGD(gossip=gossip, compressor=q2,

@@ -1,14 +1,21 @@
-"""Shared benchmark scaffolding: timing + CSV emission.
+"""Shared benchmark scaffolding: timing + CSV emission + JSON collection.
 
 Every benchmark prints ``name,us_per_call,derived`` rows (derived carries the
 figure-specific quantity, e.g. final distance-to-optimum or error ratio).
+Rows also accumulate in an in-process registry so ``run.py --json OUT`` can
+write a machine-readable ``BENCH_<module>.json`` per module — the perf
+trajectory across PRs.
 """
 from __future__ import annotations
 
+import json
 import time
-from typing import Callable
+from typing import Callable, List
 
 import jax
+
+# rows emitted since the last drain_rows() call: [{name, us_per_call, derived}]
+_ROWS: List[dict] = []
 
 
 def time_us(fn: Callable, *args, iters: int = 5, warmup: int = 1) -> float:
@@ -26,3 +33,25 @@ def time_us(fn: Callable, *args, iters: int = 5, warmup: int = 1) -> float:
 
 def emit(name: str, us: float, derived) -> None:
     print(f"{name},{us:.1f},{derived}", flush=True)
+    _ROWS.append({"name": name, "us_per_call": round(float(us), 1),
+                  "derived": derived if isinstance(derived, (int, float))
+                  else str(derived)})
+
+
+def drain_rows() -> List[dict]:
+    """Return and clear the rows emitted since the last drain."""
+    rows, _ROWS[:] = list(_ROWS), []
+    return rows
+
+
+def peek_rows() -> List[dict]:
+    """Return the rows emitted since the last drain, without clearing —
+    for modules that write their own JSON but still run under run.py."""
+    return list(_ROWS)
+
+
+def write_json(path: str, bench_name: str, rows: List[dict]) -> None:
+    """Write one benchmark module's rows as BENCH_<name>.json content."""
+    with open(path, "w") as f:
+        json.dump({"bench": bench_name, "rows": rows}, f, indent=2)
+        f.write("\n")

@@ -8,13 +8,20 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
     bench_sensitivity   Fig 7  (alpha x gamma robustness grid)
     bench_nn            Fig 4 proxy (non-convex LM, hom/het)
     bench_roofline      §Roofline aggregation from reports/dryrun
+    bench_lead_step     flat-buffer engine vs pytree path step latency
+
+``--json OUT``: additionally write one machine-readable ``BENCH_<name>.json``
+per executed module into directory OUT (rows: name, us_per_call, derived) so
+the perf trajectory is comparable across PRs.
 """
+import os
 import sys
 import traceback
 
-from benchmarks import (bench_compression, bench_linreg, bench_logreg,
-                        bench_nn, bench_roofline, bench_sensitivity,
-                        bench_theory)
+from benchmarks import (bench_compression, bench_lead_step, bench_linreg,
+                        bench_logreg, bench_nn, bench_roofline,
+                        bench_sensitivity, bench_theory)
+from benchmarks.common import drain_rows, write_json
 
 ALL = {
     "linreg": bench_linreg.main,
@@ -24,16 +31,33 @@ ALL = {
     "nn": bench_nn.main,
     "theory": bench_theory.main,
     "roofline": bench_roofline.main,
+    "lead_step": bench_lead_step.main,
 }
 
 
 def main() -> None:
-    names = sys.argv[1:] or list(ALL)
+    args = sys.argv[1:]
+    json_dir = None
+    if "--json" in args:
+        i = args.index("--json")
+        try:
+            json_dir = args[i + 1]
+        except IndexError:
+            print("--json requires an output directory", file=sys.stderr)
+            sys.exit(2)
+        del args[i:i + 2]
+        os.makedirs(json_dir, exist_ok=True)
+
+    names = args or list(ALL)
     print("name,us_per_call,derived")
     failed = []
     for n in names:
+        drain_rows()  # isolate each module's rows
         try:
             ALL[n]()
+            if json_dir is not None:
+                write_json(os.path.join(json_dir, f"BENCH_{n}.json"),
+                           n, drain_rows())
         except Exception:
             failed.append(n)
             traceback.print_exc()

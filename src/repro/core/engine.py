@@ -1,0 +1,237 @@
+"""Flat-buffer LEAD engine: the fused-kernel hot path of the simulator.
+
+The pytree path (core/lead.py) touches every parameter element with ~12
+separate elementwise ops per iteration (Alg. 1 lines 4-7) — each an HBM
+round trip on a memory-bound update.  This engine keeps the LEAD state as
+contiguous ``(n_agents, nb, block)`` f32 buffers in the kernels' native
+block layout (see kernels/__init__.py for the layout contract) and runs the
+iteration as exactly two fused passes:
+
+  * kernels.lead_update.lead_diff_encode — pre-communication: fused
+    Y-difference + blockwise quantization, one read of (X, G, D, H, dither),
+    one write of int8 codes + per-block scales;
+  * kernels.lead_update.lead_update — post-communication: fused
+    H / H_w / D / X update, one read of (X, G, D, H, H_w, Qh, WQh), one
+    write of the four new state buffers.
+
+Agents are batched along the kernel row axis — ``(n * nb, block)`` — so
+each pass is a single ``pallas_call`` (no per-agent dispatch).  The dense
+gossip mixing is applied directly on the decoded codes, between the two
+passes; this is the only inter-agent operation.
+
+Bit-compatibility with the tree path
+------------------------------------
+The engine draws dither exactly the way ``simulator.vmap_compress`` +
+``QuantizePNorm`` do — one key per agent via ``jax.random.split``, uniform
+over the *logical* ``(ceil(d/block), block)`` block matrix — and the fused
+kernels use the same left-to-right subtraction order as ``lead.step``, so
+``engine="flat"`` and ``engine="tree"`` produce matching ``LEADState``
+trajectories (tests/test_engine.py asserts atol <= 1e-5 over 20 steps).
+Zero rows are a fixed point of both kernels, so the tile padding past the
+logical blocks never leaks into the trajectory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lead import LEADHyper, _at
+from repro.kernels import lead_update as _lu
+from repro.kernels import quantize as _q
+from repro.kernels.ops import DEFAULT_BLOCK, _pick_tile
+
+
+def fast_uniform(shape, seed: jnp.ndarray) -> jnp.ndarray:
+    """Counter-based U[0,1) dither: murmur3-style integer finalizer over an
+    iota, keyed by a uint32 seed.  One hash per element (~5 int ops) versus
+    ~dozens for threefry — the production dither of the flat engine's
+    ``dither="fast"`` mode (the fused-kernel analogue of TPU's on-device
+    pltpu.prng_random_bits path).  Quality is ample for quantization dither;
+    it is NOT a cryptographic or jax.random-compatible stream."""
+    m = 1
+    for s in shape:
+        m *= int(s)
+    cnt = jax.lax.iota(jnp.uint32, m).reshape(shape)
+    z = (cnt + seed.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)) \
+        * jnp.uint32(0x85EBCA6B)
+    z = (z ^ (z >> 13)) * jnp.uint32(0xC2B2AE35)
+    z = z ^ (z >> 16)
+    # top 24 bits -> [0, 1) with full f32 mantissa coverage
+    return (z >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+class FlatLEADState(NamedTuple):
+    """LEAD state in the kernels' block layout: all buffers (n, nb, block)
+    f32, zero-padded past the logical dimension d."""
+    x: jnp.ndarray
+    h: jnp.ndarray
+    hw: jnp.ndarray
+    d: jnp.ndarray
+    k: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatLEADEngine:
+    """init/step over flat buffers; mirrors core/lead.py semantics exactly.
+
+    bits=None runs the Identity compressor (Qh = Y - H, no quantization);
+    otherwise bits is the quantizer bit-width (paper: 2).  `interpret` is
+    the kernels' tri-state backend flag (None = auto-dispatch).
+
+    dither="match" draws the quantizer dither exactly as the tree path does
+    (per-agent threefry; trajectories match engine="tree" bit for bit modulo
+    compiler rounding).  dither="fast" uses the counter-hash generator above
+    — statistically equivalent, much cheaper, but a different random stream,
+    so trajectories equal the tree path's only in distribution.
+    """
+    W: Any                             # (n, n) mixing matrix
+    dim: int                           # logical per-agent dimension d
+    bits: Optional[int] = 2
+    block: int = DEFAULT_BLOCK
+    interpret: Optional[bool] = None
+    dither: str = "match"              # "match" | "fast"
+
+    def __post_init__(self):
+        assert self.dither in ("match", "fast"), self.dither
+
+    @property
+    def n(self) -> int:
+        return self.W.shape[0]
+
+    @property
+    def nb_logical(self) -> int:
+        """Blocks the tree-path compressor sees: ceil(d / block)."""
+        return -(-self.dim // self.block)
+
+    @property
+    def tile_b(self) -> int:
+        return _pick_tile(self.dim, self.block, _q.DEFAULT_TILE_B)
+
+    @property
+    def nb(self) -> int:
+        """nb_logical rounded up to a tile multiple (kernel grid constraint)."""
+        return -(-self.nb_logical // self.tile_b) * self.tile_b
+
+    # -- layout ------------------------------------------------------------
+    def blockify(self, arr: jnp.ndarray) -> jnp.ndarray:
+        """(n, d) -> (n, nb, block), zero-padded past d."""
+        n = arr.shape[0]
+        pad = self.nb * self.block - self.dim
+        flat = jnp.pad(arr.astype(jnp.float32), ((0, 0), (0, pad)))
+        return flat.reshape(n, self.nb, self.block)
+
+    def unblockify(self, buf: jnp.ndarray) -> jnp.ndarray:
+        """(n, nb, block) -> (n, d)."""
+        return buf.reshape(buf.shape[0], -1)[:, :self.dim]
+
+    def _mix(self, buf: jnp.ndarray) -> jnp.ndarray:
+        """W @ buf along the agent axis (pads are zero -> stay zero)."""
+        W = jnp.asarray(self.W, buf.dtype)
+        return jnp.tensordot(W, buf, axes=([1], [0]))
+
+    def _rows(self, buf: jnp.ndarray) -> jnp.ndarray:
+        """(n, nb, block) -> (n*nb, block): one kernel call for all agents."""
+        return buf.reshape(self.n * self.nb, self.block)
+
+    # -- algorithm ---------------------------------------------------------
+    def init(self, x0: jnp.ndarray, g0: jnp.ndarray,
+             hyper: LEADHyper) -> FlatLEADState:
+        """Paper init: X^1 = X^0 - eta0 g(X^0); H^1 = X^0; H_w^1 = W H^1;
+        D^1 = 0.  x0, g0: (n, d)."""
+        eta0 = _at(hyper.eta, jnp.zeros((), jnp.int32))
+        xb, gb = self.blockify(x0), self.blockify(g0)
+        h1 = xb
+        return FlatLEADState(x=xb - eta0 * gb, h=h1, hw=self._mix(h1),
+                             d=jnp.zeros_like(xb),
+                             k=jnp.zeros((), jnp.int32))
+
+    def _dither(self, key: jax.Array, k: jnp.ndarray) -> jnp.ndarray:
+        """U[0,1) dither (n, nb, block).  "match": per-agent threefry over
+        the logical blocks, matching the tree path's split-then-vmap draw
+        bit for bit (tile padding rows get zeros — codes there are zero
+        regardless of dither).  "fast": one counter-hash pass."""
+        if self.dither == "fast":
+            raw = (key if jnp.issubdtype(key.dtype, jnp.integer)
+                   else jax.random.key_data(key))
+            seed = jnp.bitwise_xor(jnp.ravel(raw)[-1].astype(jnp.uint32),
+                                   k.astype(jnp.uint32))
+            return fast_uniform((self.n, self.nb, self.block), seed)
+        keys = jax.random.split(key, self.n)
+        shape = (self.nb_logical, self.block)
+        u = jax.vmap(lambda kk: jax.random.uniform(kk, shape, jnp.float32))(keys)
+        return jnp.pad(u, ((0, 0), (0, self.nb - self.nb_logical), (0, 0)))
+
+    def step(self, state: FlatLEADState, g: jnp.ndarray, key: jax.Array,
+             hyper: LEADHyper):
+        """One LEAD iteration on flat buffers; g: gradients at state.x,
+        either (n, d) (blockified here) or already (n, nb, block) — the
+        engine's native layout, which skips the per-step padding copy.
+        Returns (new_state, comp_err) with comp_err = ||Qh - (Y-H)|| / ||Y||,
+        the error this step incurred (jit callers that drop it get the
+        extra passes DCE'd)."""
+        eta = _at(hyper.eta, state.k)
+        gamma = _at(hyper.gamma, state.k)
+        alpha = _at(hyper.alpha, state.k)
+        gb = g if g.ndim == 3 else self.blockify(g)
+
+        if self.bits is None:
+            # Identity compression: Qh = Y - H exactly (one fused XLA pass).
+            y = state.x - eta * gb - eta * state.d
+            qh = y - state.h
+        else:
+            code, scale = _lu.lead_diff_encode(
+                self._rows(state.x), self._rows(gb), self._rows(state.d),
+                self._rows(state.h), self._rows(self._dither(key, state.k)),
+                eta, bits=self.bits, tile_b=self.tile_b,
+                interpret=self.interpret)
+            qh_rows = _q.decode(code, scale, bits=self.bits,
+                                tile_b=self.tile_b, interpret=self.interpret)
+            qh = qh_rows.reshape(self.n, self.nb, self.block)
+
+        wqh = self._mix(qh)                 # the single gossip exchange
+
+        xo, do, ho, hwo = _lu.lead_update(
+            self._rows(state.x), self._rows(gb), self._rows(state.d),
+            self._rows(state.h), self._rows(state.hw), self._rows(qh),
+            self._rows(wqh), eta, gamma, alpha,
+            tile_b=self.tile_b, interpret=self.interpret)
+        shape3 = (self.n, self.nb, self.block)
+        new = FlatLEADState(x=xo.reshape(shape3), d=do.reshape(shape3),
+                            h=ho.reshape(shape3), hw=hwo.reshape(shape3),
+                            k=state.k + 1)
+
+        y = state.x - eta * gb - eta * state.d
+        diff = y - state.h
+        comp_err = (jnp.linalg.norm(jnp.ravel(qh - diff))
+                    / (jnp.linalg.norm(jnp.ravel(y)) + 1e-12))
+        return new, comp_err
+
+
+def engine_for(gossip_W, compressor, dim: int,
+               interpret: Optional[bool] = None,
+               dither: str = "match") -> FlatLEADEngine:
+    """Build a FlatLEADEngine matching a simulator compressor.
+
+    Supports QuantizePNorm(p=inf) — the kernels implement exactly that
+    quantizer — and Identity.  Anything else (TopK, RandK, p != inf) has no
+    fused kernel; callers should fall back to engine="tree".
+    """
+    from repro.core.compression import Identity, QuantizePNorm
+
+    if isinstance(compressor, Identity) or compressor is None:
+        return FlatLEADEngine(W=gossip_W, dim=dim, bits=None,
+                              interpret=interpret, dither=dither)
+    if isinstance(compressor, QuantizePNorm):
+        import math
+        if compressor.p not in (jnp.inf, math.inf, "inf"):
+            raise NotImplementedError(
+                "flat engine kernels implement the p=inf quantizer only; "
+                f"got p={compressor.p!r} (use engine='tree')")
+        return FlatLEADEngine(W=gossip_W, dim=dim, bits=compressor.bits,
+                              block=compressor.block, interpret=interpret,
+                              dither=dither)
+    raise NotImplementedError(
+        f"no fused kernel for {type(compressor).__name__}; use engine='tree'")

@@ -40,7 +40,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.utils.tree import (
-    Pytree, tree_axpy, tree_lerp, tree_map, tree_scale, tree_sub,
+    Pytree, tree_axpy, tree_lerp, tree_map, tree_norm, tree_scale, tree_sub,
     tree_zeros_like,
 )
 
@@ -89,6 +89,45 @@ def init(
     return LEADState(x=x1, h=h1, hw=hw1, d=d1, k=jnp.zeros((), jnp.int32))
 
 
+def step_with_metrics(
+    state: LEADState,
+    g: Pytree,
+    key: jax.Array,
+    hyper: LEADHyper,
+    mix: Callable[[Pytree], Pytree],
+    compress: Callable[[jax.Array, Pytree], Pytree],
+):
+    """One LEAD iteration; additionally returns the compression error the
+    iteration actually incurred,  ||Qh - (Y-H)|| / ||Y||  (Fig. 1d).
+
+    The subtraction order (x - eta*g - eta*d, left to right) is the flat
+    engine's fused-kernel order — keep them identical so both paths feed
+    bit-identical Y into the stochastic quantizer (core/engine.py)."""
+    eta = _at(hyper.eta, state.k)
+    gamma = _at(hyper.gamma, state.k)
+    alpha = _at(hyper.alpha, state.k)
+
+    x, h, hw, d = state.x, state.h, state.hw, state.d
+
+    # line 4: Y = X - eta g - eta D
+    y = tree_map(lambda xl, gl, dl: xl - eta * gl - eta * dl, x, g, d)
+    # COMM procedure (lines 9-16): difference compression + single exchange
+    diff = tree_sub(y, h)
+    qh = compress(key, diff)
+    yh = tree_map(jnp.add, h, qh)
+    yh_w = tree_map(jnp.add, hw, mix(qh))
+    h_new = tree_lerp(alpha, h, yh)
+    hw_new = tree_lerp(alpha, hw, yh_w)
+    # line 6: inexact dual ascent; D stays in Range(I - W)
+    d_new = tree_map(lambda dl, a, b: dl + gamma / (2.0 * eta) * (a - b), d, yh, yh_w)
+    # line 7: primal descent with the *new* dual
+    x_new = tree_map(lambda xl, gl, dl: xl - eta * gl - eta * dl, x, g, d_new)
+
+    comp_err = tree_norm(tree_sub(qh, diff)) / (tree_norm(y) + 1e-12)
+    new = LEADState(x=x_new, h=h_new, hw=hw_new, d=d_new, k=state.k + 1)
+    return new, comp_err
+
+
 def step(
     state: LEADState,
     g: Pytree,
@@ -99,26 +138,8 @@ def step(
 ) -> LEADState:
     """One LEAD iteration.  `g` must be (an unbiased estimate of) grad F at
     state.x; it is used in both line 4 and line 7 (computed once)."""
-    eta = _at(hyper.eta, state.k)
-    gamma = _at(hyper.gamma, state.k)
-    alpha = _at(hyper.alpha, state.k)
-
-    x, h, hw, d = state.x, state.h, state.hw, state.d
-
-    # line 4: Y = X - eta g - eta D
-    y = tree_map(lambda xl, gl, dl: xl - eta * (gl + dl), x, g, d)
-    # COMM procedure (lines 9-16): difference compression + single exchange
-    qh = compress(key, tree_sub(y, h))
-    yh = tree_map(jnp.add, h, qh)
-    yh_w = tree_map(jnp.add, hw, mix(qh))
-    h_new = tree_lerp(alpha, h, yh)
-    hw_new = tree_lerp(alpha, hw, yh_w)
-    # line 6: inexact dual ascent; D stays in Range(I - W)
-    d_new = tree_map(lambda dl, a, b: dl + gamma / (2.0 * eta) * (a - b), d, yh, yh_w)
-    # line 7: primal descent with the *new* dual
-    x_new = tree_map(lambda xl, gl, dl: xl - eta * (gl + dl), x, g, d_new)
-
-    return LEADState(x=x_new, h=h_new, hw=hw_new, d=d_new, k=state.k + 1)
+    new, _ = step_with_metrics(state, g, key, hyper, mix, compress)
+    return new
 
 
 # ---------------------------------------------------------------------------

@@ -6,12 +6,21 @@ paper's metrics per iteration:
 
     dist:      (1/n) sum ||x_i - x*||^2          (Fig. 1a, 2a, 3a)
     consensus: (1/n) sum ||x_i - xbar||^2        (Fig. 1c)
-    comp_err:  ||Y - Yhat||^2 / ||Y||^2          (Fig. 1d)  [LEAD-family only]
+    comp_err:  ||Qh - (Y-H)|| / ||Y||            (Fig. 1d)  [LEAD: recorded
+               from inside the step — the error the iteration actually
+               incurred, not a fresh re-compression]
     loss:      average local loss
     bits:      cumulative transmitted bits per agent (Fig. 1b, x-axis)
 
+The whole trace is one ``jax.lax.scan``: a 300-iteration run compiles once,
+executes sync-free on device (metrics accumulate in the scan carry), and
+performs a single device->host transfer at the end.  ``record_every`` is
+applied by slicing the on-device trace after the fact.
+
 The LEAD adapter wraps core/lead.py with a DenseGossip and a per-agent
-(vmapped) compressor so that blocks never straddle agents.
+(vmapped) compressor so that blocks never straddle agents; with
+``engine="flat"`` it instead drives the fused flat-buffer engine
+(core/engine.py) holding state in the kernels' (n, nb, block) layout.
 """
 from __future__ import annotations
 
@@ -23,8 +32,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import lead as lead_mod
+from repro.core.engine import FlatLEADState, engine_for
 from repro.core.gossip import DenseGossip
-from repro.core.lead import LEADHyper, LEADState
+from repro.core.lead import LEADHyper
 from repro.core.convex import consensus_error, distance_to_opt
 
 
@@ -38,23 +48,70 @@ def vmap_compress(compressor) -> Callable:
 
 @dataclasses.dataclass(frozen=True)
 class LEADSim:
-    """init/step adapter making LEAD interface-compatible with baselines."""
+    """init/step adapter making LEAD interface-compatible with baselines.
+
+    engine="tree" is the reference pytree path (core/lead.py);
+    engine="flat" drives the fused flat-buffer engine (core/engine.py) —
+    same algorithm, state blockified to the kernels' native layout.
+    dither/interpret are forwarded to the flat engine (see its docstring);
+    the default dither="match" keeps flat trajectories aligned with tree.
+    """
     gossip: DenseGossip
     compressor: Any
     eta: Any = 0.1
     gamma: Any = 1.0
     alpha: Any = 0.5
+    engine: str = "tree"
+    dither: str = "match"
+    interpret: Optional[bool] = None
+    dim: Optional[int] = None   # logical per-agent d; run() binds it for
+                                # engine="flat" (needed to unblockify states)
+
+    def __post_init__(self):
+        assert self.engine in ("tree", "flat"), self.engine
 
     @property
     def hyper(self):
         return LEADHyper(eta=self.eta, gamma=self.gamma, alpha=self.alpha)
 
+    def _flat_engine(self, dim: int):
+        return engine_for(self.gossip.W, self.compressor, dim,
+                          interpret=self.interpret, dither=self.dither)
+
     def init(self, x0, g0, key):
+        if self.engine == "flat":
+            dim = self.dim if self.dim is not None else x0.shape[1]
+            return self._flat_engine(dim).init(x0, g0, self.hyper)
         return lead_mod.init(x0, g0, self.hyper, self.gossip.mix, h0=x0)
 
-    def step(self, state: LEADState, g, key):
-        return lead_mod.step(state, g, key, self.hyper, self.gossip.mix,
-                             vmap_compress(self.compressor))
+    def step(self, state, g, key):
+        new, _ = self.step_with_metrics(state, g, key)
+        return new
+
+    def step_with_metrics(self, state, g, key):
+        """Returns (new_state, comp_err) with comp_err = ||Qh-(Y-H)||/||Y||
+        computed inside the step (the error this iteration incurred)."""
+        if self.engine == "flat":
+            if self.dim is not None:
+                dim = self.dim
+            else:
+                assert g.ndim == 2, (
+                    "gradients in the native (n, nb, block) layout need "
+                    "LEADSim(dim=...) to recover the logical dimension")
+                dim = g.shape[1]
+            return self._flat_engine(dim).step(state, g, key, self.hyper)
+        return lead_mod.step_with_metrics(state, g, key, self.hyper,
+                                          self.gossip.mix,
+                                          vmap_compress(self.compressor))
+
+    def x_of(self, state):
+        """Current iterates as (n, d) regardless of engine layout."""
+        if isinstance(state, FlatLEADState):
+            assert self.dim is not None, (
+                "LEADSim(engine='flat') needs dim=<per-agent d> to unblockify "
+                "states; pass it at construction or let run() bind it")
+            return self._flat_engine(self.dim).unblockify(state.x)
+        return state.x
 
 
 class Trace(NamedTuple):
@@ -71,10 +128,18 @@ def run(algo, problem, x_star, *, iters=300, key=None, stochastic=False,
 
     stochastic=True draws minibatch gradients; noise_std>0 instead adds
     Gaussian noise to the full gradient — the bounded-variance oracle of
-    Assumption 3 (minibatch quadratics have state-dependent variance)."""
+    Assumption 3 (minibatch quadratics have state-dependent variance).
+
+    The trace is computed by one jitted ``lax.scan``: metrics for every
+    iteration accumulate on device and cross to the host once at the end —
+    zero per-iteration host syncs.  Metrics are evaluated every iteration
+    (record_every subsamples the on-device trace by slicing)."""
     key = key if key is not None else jax.random.PRNGKey(0)
     n, d = problem.n, problem.d
     x0 = jnp.zeros((n, d))
+
+    if isinstance(algo, LEADSim) and algo.engine == "flat" and algo.dim is None:
+        algo = dataclasses.replace(algo, dim=d)
 
     def grad_at(X, k):
         if noise_std > 0:
@@ -93,45 +158,53 @@ def run(algo, problem, x_star, *, iters=300, key=None, stochastic=False,
     comp = getattr(algo, "compressor", None)
     bits_per_iter = comp.wire_bits(d) if comp is not None else d * 32
 
+    x_of = getattr(algo, "x_of", lambda s: s.x)
+    step_with_metrics = getattr(algo, "step_with_metrics", None)
+    xs = jnp.asarray(x_star)
+
+    def body(carry, _):
+        state, k = carry
+        k, sub = jax.random.split(k)
+        g = grad_at(x_of(state), sub)
+        step_key = jax.random.fold_in(sub, 2)
+        if step_with_metrics is not None:
+            new, cerr = step_with_metrics(state, g, step_key)
+        else:
+            new = algo.step(state, g, step_key)
+            cerr = _compression_error(algo, new, problem, step_key)
+        X = x_of(new)
+        metrics = (distance_to_opt(X, xs), consensus_error(X),
+                   problem.loss(X), cerr)
+        return (new, k), metrics
+
     @jax.jit
-    def step_fn(state, key):
-        g = grad_at(state.x, key)
-        new = algo.step(state, g, jax.random.fold_in(key, 2))
-        # compression error of this step (LEAD definition): ||Qh - (Y-H)||/||Y||
-        return new
+    def trace(state, key):
+        (state, _), ms = jax.lax.scan(body, (state, key), None, length=iters)
+        return ms
 
-    dist, cons, loss, bits, cerr = [], [], [], [], []
-    for it in range(iters):
-        key, sub = jax.random.split(key)
-        state = step_fn(state, sub)
-        if it % record_every == 0:
-            X = state.x
-            dist.append(float(distance_to_opt(X, x_star)))
-            cons.append(float(consensus_error(X)))
-            loss.append(float(problem.loss(X)))
-            bits.append((it + 1) * bits_per_iter)
-            cerr.append(_compression_error(algo, state, problem, sub))
-
-    return Trace(dist=np.array(dist), consensus=np.array(cons),
-                 loss=np.array(loss), bits_per_agent=np.array(bits),
-                 comp_err=np.array(cerr))
+    dist, cons, loss, cerr = trace(state, key)
+    # single device->host transfer for the whole trace
+    dist, cons, loss, cerr = (np.asarray(m) for m in (dist, cons, loss, cerr))
+    sel = slice(0, iters, record_every)
+    bits = (np.arange(iters, dtype=np.float64)[sel] + 1.0) * bits_per_iter
+    return Trace(dist=dist[sel], consensus=cons[sel], loss=loss[sel],
+                 bits_per_agent=bits, comp_err=cerr[sel])
 
 
-def _compression_error(algo, state, problem, key) -> float:
-    """Relative compression error of the quantity each algorithm transmits."""
+def _compression_error(algo, state, problem, key) -> jnp.ndarray:
+    """Relative compression error of the quantity a *baseline* transmits
+    (traced, on-device).  LEAD paths record the exact in-step error via
+    step_with_metrics instead; this fallback re-compresses the transmitted
+    quantity with the step's key to approximate the incurred error."""
     comp = getattr(algo, "compressor", None)
     if comp is None:
-        return 0.0
-    if isinstance(state, LEADState):
-        eta = algo.eta if not callable(algo.eta) else algo.eta(state.k)
-        y = state.x - eta * (problem.full_grad(state.x) + state.d)
-        target = y - state.h
-    elif hasattr(state, "xhat"):
+        return jnp.zeros(())
+    if hasattr(state, "xhat"):
         target = state.x - state.xhat
     else:
         target = state.x
     keys = jax.random.split(key, target.shape[0])
     q = jax.vmap(comp.compress)(keys, target)
     num = jnp.linalg.norm(q - target)
-    den = jnp.linalg.norm(getattr(state, "x", target)) + 1e-12
-    return float(num / den)
+    den = jnp.linalg.norm(state.x) + 1e-12
+    return num / den

@@ -1,11 +1,43 @@
-"""Pallas TPU kernels for the LEAD hot path (validated with interpret=True).
+"""Pallas TPU kernels for the LEAD hot path.
 
 quantize:     blockwise inf-norm b-bit stochastic quantization (paper Thm 3)
 lead_update:  fused LEAD state update + fused diff-encode (Alg. 1 lines 4-7)
 ops:          jit'd public wrappers (padding, dither, pytree plumbing)
+dispatch:     backend resolution (interpret vs compiled Pallas)
 ref:          pure-jnp oracles the tests assert against
+
+Backend dispatch contract
+-------------------------
+Every kernel entry point takes ``interpret`` as a tri-state, resolved by
+dispatch.resolve_backend to one of three backends:
+
+    interpret=None (default)  auto-dispatch: the ``jnp`` backend on CPU
+                              (kernel semantics via the ref.py math, fused
+                              by XLA — the fast CPU execution), compiled
+                              ``pallas`` on TPU/GPU.
+    interpret=True            the true Pallas interpreter — slow bit-level
+                              emulation of the kernel bodies; what the
+                              kernel test-suite pins to validate them.
+    interpret=False           force compiled Pallas (real accelerators).
+
+``REPRO_KERNEL_BACKEND=jnp|interpret|pallas`` overrides the auto decision.
+Callers (core/engine.py, core/simulator.py, benchmarks) should pass the
+tri-state through rather than hardcoding a bool.
+
+Flat block layout contract
+--------------------------
+All kernels operate on the blockified layout produced by ops._to_blocks:
+a logical f32 vector of length d is zero-padded and reshaped to
+``(nb, block)`` with ``block = 512`` (the paper's quantization block,
+4 x 128 TPU lanes) and ``nb`` a multiple of the grid tile ``tile_b``.
+Rows are independent quantization blocks, so batched callers (the
+flat-buffer LEAD engine in core/engine.py) may stack agents along the row
+axis — ``(n_agents * nb, block)`` — and make a single kernel call.  Zero
+rows are a fixed point of every kernel (codes/scales/updates stay zero),
+which is what makes the zero-padding safe.
 """
-from repro.kernels import ops, ref
+from repro.kernels import dispatch, ops, ref
+from repro.kernels.dispatch import default_backend, resolve_backend
 from repro.kernels.ops import (
     lead_diff_encode_flat, lead_update_flat, pack_codes, quantize_decode,
     quantize_encode, quantize_roundtrip, unpack_codes,

@@ -1,0 +1,57 @@
+"""Central Pallas backend dispatch: resolve `interpret=None` per platform.
+
+Every kernel entry point in this package accepts an ``interpret`` argument
+with three states, resolved here to one of three concrete backends:
+
+    interpret=None (default)  auto: the ``jnp`` backend on CPU (the
+                              reference math, one XLA-fused graph — the fast
+                              CPU execution of the kernel semantics), the
+                              compiled ``pallas`` backend on TPU/GPU.
+    interpret=True            the true Pallas interpreter (``interpret=True``
+                              pallas_call).  Bit-level emulation of the grid
+                              machinery; slow, but validates the actual
+                              kernel bodies on any platform — what the
+                              kernel test-suite pins.
+    interpret=False           compiled Pallas (real accelerators).
+
+Callers therefore never hardcode a backend; they pass the tri-state through
+and this module makes the platform call exactly once (cached).  The
+``REPRO_KERNEL_BACKEND`` environment variable (``jnp`` | ``interpret`` |
+``pallas``) overrides the auto decision — useful for forcing the compiled
+path in TPU CI or the interpreter when debugging a miscompile.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+
+_ENV_VAR = "REPRO_KERNEL_BACKEND"
+BACKENDS = ("jnp", "interpret", "pallas")
+
+
+@functools.lru_cache(maxsize=None)
+def _platform_backend() -> str:
+    """Platform half of the decision, cached (jax.devices() is not free)."""
+    return "jnp" if jax.devices()[0].platform == "cpu" else "pallas"
+
+
+def default_backend() -> str:
+    """'pallas' (compiled) on TPU/GPU, 'jnp' on CPU; env-overridable.  The
+    env var is re-read on every call so in-process overrides (monkeypatch,
+    notebooks) take effect; only the platform lookup is cached."""
+    env = os.environ.get(_ENV_VAR, "").strip().lower()
+    if env:
+        if env not in BACKENDS:
+            raise ValueError(f"{_ENV_VAR}={env!r}: expected one of {BACKENDS}")
+        return env
+    return _platform_backend()
+
+
+def resolve_backend(interpret: Optional[bool]) -> str:
+    """Collapse the tri-state `interpret` flag to a concrete backend name."""
+    if interpret is None:
+        return default_backend()
+    return "interpret" if interpret else "pallas"

@@ -19,11 +19,13 @@ schedules (Theorem 2 diminishing stepsizes) work under jit.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.dispatch import resolve_backend
 from repro.kernels.quantize import DEFAULT_TILE_B
 
 
@@ -45,10 +47,17 @@ def _lead_update_kernel(eta_ref, gamma_ref, alpha_ref,
 
 
 def lead_update(x, g, d, h, hw, qh, wqh, eta, gamma, alpha, *,
-                tile_b: int = DEFAULT_TILE_B, interpret: bool = True):
+                tile_b: int = DEFAULT_TILE_B, interpret: Optional[bool] = None):
     """All tensors (nb, block) f32; scalars broadcastable to (1, 1) f32.
 
     Returns (x_new, d_new, h_new, hw_new)."""
+    backend = resolve_backend(interpret)
+    if backend == "jnp":
+        from repro.kernels import ref
+        return tuple(ref.lead_update_ref(x, g, d, h, hw, qh, wqh,
+                                         jnp.asarray(eta, jnp.float32),
+                                         jnp.asarray(gamma, jnp.float32),
+                                         jnp.asarray(alpha, jnp.float32)))
     nb, block = x.shape
     assert nb % tile_b == 0
     grid = (nb // tile_b,)
@@ -62,7 +71,7 @@ def lead_update(x, g, d, h, hw, qh, wqh, eta, gamma, alpha, *,
         in_specs=[smem, smem, smem] + [tile] * 7,
         out_specs=[tile] * 4,
         out_shape=[out_sds] * 4,
-        interpret=interpret,
+        interpret=(backend == "interpret"),
     )(scal(eta), scal(gamma), scal(alpha), x, g, d, h, hw, qh, wqh)
 
 
@@ -79,10 +88,15 @@ def _diff_encode_kernel(eta_ref, x_ref, g_ref, d_ref, h_ref, u_ref,
 
 
 def lead_diff_encode(x, g, d, h, u, eta, *, bits: int = 2,
-                     tile_b: int = DEFAULT_TILE_B, interpret: bool = True):
+                     tile_b: int = DEFAULT_TILE_B, interpret: Optional[bool] = None):
     """Fused Y-difference + quantization (pre-communication pass).
 
     x, g, d, h, u: (nb, block) f32.  Returns (code int8, scale (nb,1) f32)."""
+    backend = resolve_backend(interpret)
+    if backend == "jnp":
+        from repro.kernels import ref
+        return ref.lead_diff_encode_ref(x, g, d, h, u,
+                                        jnp.asarray(eta, jnp.float32), bits)
     nb, block = x.shape
     assert nb % tile_b == 0
     grid = (nb // tile_b,)
@@ -100,5 +114,5 @@ def lead_diff_encode(x, g, d, h, u, eta, *, bits: int = 2,
             jax.ShapeDtypeStruct((nb, block), jnp.int8),
             jax.ShapeDtypeStruct((nb, 1), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=(backend == "interpret"),
     )(jnp.asarray(eta, jnp.float32).reshape(1, 1), x, g, d, h, u)

@@ -2,13 +2,15 @@
 
 These handle the bookkeeping the kernels don't: flattening arbitrary arrays /
 pytrees to the (n_blocks, block) layout, padding to tile multiples, dither
-generation, and unpadding.  `interpret` defaults to True (CPU validation);
-on real TPU pass interpret=False.
+generation, and unpadding.  `interpret` defaults to None (auto): the jnp
+reference math on CPU, compiled Pallas on TPU — see kernels/dispatch.py.
+Pass interpret=True to force the true Pallas interpreter (the kernel-body
+validation path), False to force compiled Pallas.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,7 +47,7 @@ def _pick_tile(n_elements: int, block: int, tile_b: int) -> int:
 @functools.partial(jax.jit, static_argnames=("bits", "block", "tile_b", "interpret"))
 def quantize_encode(key, x: jnp.ndarray, *, bits: int = 2,
                     block: int = DEFAULT_BLOCK, tile_b: int = _q.DEFAULT_TILE_B,
-                    interpret: bool = True):
+                    interpret: Optional[bool] = None):
     """Quantize any-shape x; returns (code (nb, block) int8, scale (nb,1) f32).
     Blocks are the wire payload; decode with the original shape."""
     tile_b = _pick_tile(x.size, block, tile_b)
@@ -56,7 +58,7 @@ def quantize_encode(key, x: jnp.ndarray, *, bits: int = 2,
 
 @functools.partial(jax.jit, static_argnames=("bits", "shape", "dtype", "tile_b", "interpret"))
 def quantize_decode(code, scale, *, shape, bits: int = 2, dtype=jnp.float32,
-                    tile_b: int = _q.DEFAULT_TILE_B, interpret: bool = True):
+                    tile_b: int = _q.DEFAULT_TILE_B, interpret: Optional[bool] = None):
     n = 1
     for s in shape:
         n *= int(s)
@@ -66,7 +68,7 @@ def quantize_decode(code, scale, *, shape, bits: int = 2, dtype=jnp.float32,
 
 
 def quantize_roundtrip(key, x, *, bits: int = 2, block: int = DEFAULT_BLOCK,
-                       interpret: bool = True):
+                       interpret: Optional[bool] = None):
     """compress() semantics via the kernels (used by the kernel-backed
     Compressor in dist/trainer.py)."""
     code, scale = quantize_encode(key, x, bits=bits, block=block, interpret=interpret)
@@ -76,7 +78,7 @@ def quantize_roundtrip(key, x, *, bits: int = 2, block: int = DEFAULT_BLOCK,
 
 @functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
 def lead_update_flat(x, g, d, h, hw, qh, wqh, eta, gamma, alpha, *,
-                     tile_b: int = _q.DEFAULT_TILE_B, interpret: bool = True):
+                     tile_b: int = _q.DEFAULT_TILE_B, interpret: Optional[bool] = None):
     """Fused LEAD post-comm update on flat 1-D vectors (any length)."""
     n = x.shape[0]
     tile_b = _pick_tile(n, DEFAULT_BLOCK, tile_b)
@@ -87,7 +89,7 @@ def lead_update_flat(x, g, d, h, hw, qh, wqh, eta, gamma, alpha, *,
 
 @functools.partial(jax.jit, static_argnames=("bits", "tile_b", "interpret"))
 def lead_diff_encode_flat(key, x, g, d, h, eta, *, bits: int = 2,
-                          tile_b: int = _q.DEFAULT_TILE_B, interpret: bool = True):
+                          tile_b: int = _q.DEFAULT_TILE_B, interpret: Optional[bool] = None):
     """Fused pre-comm pass on flat 1-D vectors; returns (code, scale)."""
     n = x.shape[0]
     tile_b = _pick_tile(n, DEFAULT_BLOCK, tile_b)
@@ -101,12 +103,16 @@ def lead_diff_encode_flat(key, x, g, d, h, eta, *, bits: int = 2,
 
 
 def pack_codes(code: jnp.ndarray, bits: int) -> jnp.ndarray:
-    """Pack b-bit signed codes (stored in int8 lanes) into dense uint8 words —
-    the wire-accurate representation (8/bits codes per byte).
+    """Pack b-bit signed codes (stored in int8 lanes) into dense uint32 lanes —
+    the wire-accurate representation (32 // (bits+1) codes per uint32 word).
 
-    A b-bit code c in [-(2^{b-1}), 2^{b-1}] is stored as the (b+1)-bit
-    two's-complement field; for the roofline we account (bits+1) bits/elem.
-    Packing is a reshape + shift-or over int32 lanes (cheap on the VPU).
+    A b-bit code c in [-(2^{b-1}), 2^{b-1}] is stored as a (bits+1)-bit
+    two's-complement field (the extra bit carries the sign), so the wire
+    accounting — QuantizePNorm.wire_bits and the roofline — charges
+    (bits+1) bits per element, padded up to whole 32-bit words.
+    Packing is a reshape + shift-or over int32 lanes (cheap on the VPU);
+    `unpack_codes(pack_codes(c, b), n, b)` round-trips exactly
+    (tests/test_kernels.py::test_pack_unpack_roundtrip_property).
     """
     width = bits + 1
     per32 = 32 // width

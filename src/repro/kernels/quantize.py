@@ -20,10 +20,13 @@ which also makes the kernels bit-reproducible across backends.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.dispatch import resolve_backend
 
 
 DEFAULT_BLOCK = 512     # paper's quantization block
@@ -47,11 +50,15 @@ def _decode_kernel(code_ref, scale_ref, out_ref, *, bits: int):
 
 
 def encode(x: jnp.ndarray, u: jnp.ndarray, *, bits: int = 2,
-           tile_b: int = DEFAULT_TILE_B, interpret: bool = True):
+           tile_b: int = DEFAULT_TILE_B, interpret: Optional[bool] = None):
     """x, u: (nb, block) f32 with nb % tile_b == 0 (ops.py pads).
 
     Returns (code int8 (nb, block), scale f32 (nb, 1))."""
     assert 1 <= bits <= 7, "int8 code container supports bits in [1, 7]"
+    backend = resolve_backend(interpret)
+    if backend == "jnp":
+        from repro.kernels import ref
+        return ref.quantize_encode_ref(x, u, bits)
     nb, block = x.shape
     assert nb % tile_b == 0, f"nb={nb} must be a multiple of tile_b={tile_b}"
     grid = (nb // tile_b,)
@@ -70,13 +77,17 @@ def encode(x: jnp.ndarray, u: jnp.ndarray, *, bits: int = 2,
             jax.ShapeDtypeStruct((nb, block), jnp.int8),
             jax.ShapeDtypeStruct((nb, 1), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=(backend == "interpret"),
     )(x, u)
 
 
 def decode(code: jnp.ndarray, scale: jnp.ndarray, *, bits: int = 2,
-           tile_b: int = DEFAULT_TILE_B, interpret: bool = True):
+           tile_b: int = DEFAULT_TILE_B, interpret: Optional[bool] = None):
     """code: (nb, block) int8, scale: (nb, 1) f32 -> (nb, block) f32."""
+    backend = resolve_backend(interpret)
+    if backend == "jnp":
+        from repro.kernels import ref
+        return ref.quantize_decode_ref(code, scale, bits)
     nb, block = code.shape
     assert nb % tile_b == 0
     grid = (nb // tile_b,)
@@ -89,5 +100,5 @@ def decode(code: jnp.ndarray, scale: jnp.ndarray, *, bits: int = 2,
         ],
         out_specs=pl.BlockSpec((tile_b, block), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((nb, block), jnp.float32),
-        interpret=interpret,
+        interpret=(backend == "interpret"),
     )(code, scale)

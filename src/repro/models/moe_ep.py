@@ -29,7 +29,10 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+try:                                    # jax >= 0.4.35 top-level alias
+    from jax import shard_map
+except ImportError:                     # older jax: experimental namespace
+    from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 

@@ -1,0 +1,205 @@
+"""Flat-buffer LEAD engine (core/engine.py) vs the pytree reference path.
+
+The flat engine must implement the SAME iteration map as core/lead.py —
+same quantizer draws (dither="match"), same algebra, different layout and
+fusion.  Bit-exact equality across two independently compiled XLA graphs is
+not guaranteed (FMA contraction is a per-graph compiler decision), so the
+equivalence contract is:
+
+  * per-step: from any common state along a real trajectory, one flat step
+    and one tree step agree to atol 1e-5 on every LEADState buffer — for
+    every compressor {Identity, 2-bit, 4-bit} x topology {ring, full};
+  * full-trajectory: for the paper's settings (Identity, 2-bit) the two
+    20-step trajectories agree to atol 1e-5 end to end;
+  * invariants: 1^T D = 0 holds on the flat trajectory for every combo,
+    and both engines' comp_err traces match where trajectories match.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lead as lead_mod, topology
+from repro.core.compression import Identity, QuantizePNorm
+from repro.core.convex import LinearRegression
+from repro.core.engine import FlatLEADEngine, engine_for, fast_uniform
+from repro.core.gossip import DenseGossip
+from repro.core.lead import LEADHyper
+from repro.core.simulator import LEADSim, run, vmap_compress
+
+N, D = 8, 768          # two logical blocks per agent, second one ragged
+STEPS = 20
+ATOL = 1e-5
+
+COMPRESSORS = {
+    "identity": Identity(),
+    "2bit": QuantizePNorm(bits=2, block=512),
+    "4bit": QuantizePNorm(bits=4, block=512),
+}
+TOPOLOGIES = {
+    "ring": topology.ring(N),
+    "full": topology.fully_connected(N),
+}
+
+
+def _setup(W):
+    key = jax.random.PRNGKey(0)
+    prob = LinearRegression.generate(key, n_agents=N, m=64, d=D)
+    gossip = DenseGossip(W=jnp.asarray(W))
+    hyper = LEADHyper(eta=0.05, gamma=1.0, alpha=0.5)
+    return key, prob, gossip, hyper
+
+
+def _steppers(eng, gossip, hyper, comp):
+    tree = jax.jit(lambda s, g, k: lead_mod.step_with_metrics(
+        s, g, k, hyper, gossip.mix, vmap_compress(comp)))
+    flat = jax.jit(lambda s, g, k: eng.step(s, g, k, hyper))
+    return tree, flat
+
+
+def _max_dev(eng, flat_state, tree_state):
+    return max(
+        float(jnp.max(jnp.abs(eng.unblockify(getattr(flat_state, f))
+                              - getattr(tree_state, f))))
+        for f in ("x", "h", "hw", "d"))
+
+
+@pytest.mark.parametrize("topo", sorted(TOPOLOGIES))
+@pytest.mark.parametrize("comp_name", sorted(COMPRESSORS))
+def test_flat_step_equals_tree_step_along_trajectory(comp_name, topo):
+    """From each common state along a 20-step trajectory, the flat step and
+    the tree step produce matching next states (atol 1e-5, all buffers)."""
+    comp = COMPRESSORS[comp_name]
+    key, prob, gossip, hyper = _setup(TOPOLOGIES[topo])
+    eng = engine_for(gossip.W, comp, D)
+    tree_step, flat_step = _steppers(eng, gossip, hyper, comp)
+
+    x0 = jnp.zeros((N, D))
+    g0 = prob.full_grad(x0)
+    st = lead_mod.init(x0, g0, hyper, gossip.mix, h0=x0)
+    for k in range(STEPS):
+        kk = jax.random.fold_in(key, k)
+        g = prob.full_grad(st.x)
+        st_tree, cerr_t = tree_step(st, g, kk)
+        flat_in = eng.init(st.x, jnp.zeros_like(st.x), hyper)._replace(
+            x=eng.blockify(st.x), h=eng.blockify(st.h),
+            hw=eng.blockify(st.hw), d=eng.blockify(st.d), k=st.k)
+        st_flat, cerr_f = flat_step(flat_in, g, kk)
+        dev = _max_dev(eng, st_flat, st_tree)
+        assert dev <= ATOL, f"step {k}: max deviation {dev}"
+        np.testing.assert_allclose(float(cerr_f), float(cerr_t), atol=1e-5)
+        st = st_tree
+
+
+@pytest.mark.parametrize("topo", sorted(TOPOLOGIES))
+@pytest.mark.parametrize("comp_name", ["identity", "2bit"])
+def test_flat_trajectory_equals_tree_trajectory(comp_name, topo):
+    """Paper settings: the two engines' free-running 20-step trajectories
+    coincide (atol 1e-5) — the flat path is a drop-in replacement."""
+    comp = COMPRESSORS[comp_name]
+    key, prob, gossip, hyper = _setup(TOPOLOGIES[topo])
+    eng = engine_for(gossip.W, comp, D)
+    tree_step, flat_step = _steppers(eng, gossip, hyper, comp)
+
+    x0 = jnp.zeros((N, D))
+    g0 = prob.full_grad(x0)
+    st_t = lead_mod.init(x0, g0, hyper, gossip.mix, h0=x0)
+    st_f = eng.init(x0, g0, hyper)
+    for k in range(STEPS):
+        kk = jax.random.fold_in(key, k)
+        st_t, _ = tree_step(st_t, prob.full_grad(st_t.x), kk)
+        st_f, _ = flat_step(st_f, prob.full_grad(eng.unblockify(st_f.x)), kk)
+        dev = _max_dev(eng, st_f, st_t)
+        assert dev <= ATOL, f"step {k}: max deviation {dev}"
+
+
+@pytest.mark.parametrize("topo", sorted(TOPOLOGIES))
+@pytest.mark.parametrize("comp_name", sorted(COMPRESSORS))
+def test_flat_dual_in_range_invariant(comp_name, topo):
+    """1^T D = 0 (D in Range(I-W)) on the flat engine's own trajectory —
+    the implicit-error-compensation property, layout-independent."""
+    comp = COMPRESSORS[comp_name]
+    key, prob, gossip, hyper = _setup(TOPOLOGIES[topo])
+    eng = engine_for(gossip.W, comp, D)
+    _, flat_step = _steppers(eng, gossip, hyper, comp)
+    x0 = jax.random.normal(key, (N, D))
+    st = eng.init(x0, prob.full_grad(x0), hyper)
+    for k in range(STEPS):
+        st, _ = flat_step(st, prob.full_grad(eng.unblockify(st.x)),
+                          jax.random.fold_in(key, k))
+        d = eng.unblockify(st.d)
+        col_sum = float(jnp.max(jnp.abs(jnp.sum(d, axis=0))))
+        scale = 1.0 + float(jnp.max(jnp.abs(d)))
+        assert col_sum < 1e-4 * scale, f"step {k}: {col_sum} vs scale {scale}"
+
+
+def test_flat_engine_converges_through_simulator():
+    """LEADSim(engine='flat') through the scan simulator reaches the same
+    optimum as the tree engine on the paper's linear-regression problem."""
+    key = jax.random.PRNGKey(0)
+    prob = LinearRegression.generate(key, n_agents=8, m=50, d=40)
+    gossip = DenseGossip(W=jnp.asarray(topology.ring(8)))
+    q2 = QuantizePNorm(bits=2)
+    tr_tree = run(LEADSim(gossip=gossip, compressor=q2, eta=0.1),
+                  prob, prob.x_star, iters=200)
+    tr_flat = run(LEADSim(gossip=gossip, compressor=q2, eta=0.1,
+                          engine="flat"), prob, prob.x_star, iters=200)
+    assert tr_flat.dist[-1] < 1e-5
+    np.testing.assert_allclose(np.log10(tr_flat.dist + 1e-12),
+                               np.log10(tr_tree.dist + 1e-12), atol=1.0)
+
+
+def test_flat_engine_fast_dither_statistically_equivalent():
+    """dither='fast' is a different random stream but the same algorithm:
+    it must converge at the same rate as dither='match'."""
+    key = jax.random.PRNGKey(0)
+    prob = LinearRegression.generate(key, n_agents=8, m=50, d=40)
+    gossip = DenseGossip(W=jnp.asarray(topology.ring(8)))
+    q2 = QuantizePNorm(bits=2)
+    tr_m = run(LEADSim(gossip=gossip, compressor=q2, eta=0.1, engine="flat"),
+               prob, prob.x_star, iters=200)
+    tr_f = run(LEADSim(gossip=gossip, compressor=q2, eta=0.1, engine="flat",
+                       dither="fast"), prob, prob.x_star, iters=200)
+    assert tr_f.dist[-1] < 1e-5
+    np.testing.assert_allclose(np.log10(tr_f.dist + 1e-12),
+                               np.log10(tr_m.dist + 1e-12), atol=1.0)
+
+
+def test_fast_uniform_distribution():
+    """The counter-hash dither is uniform enough for quantization: mean,
+    variance, and bin occupancy of U[0,1)."""
+    u = np.asarray(fast_uniform((512, 512), jnp.uint32(123)))
+    assert 0.0 <= u.min() and u.max() < 1.0
+    assert abs(u.mean() - 0.5) < 2e-3
+    assert abs(u.var() - 1.0 / 12.0) < 2e-3
+    hist, _ = np.histogram(u, bins=16, range=(0.0, 1.0))
+    assert hist.min() > 0.9 * u.size / 16
+
+    # distinct seeds give (near-)independent streams
+    v = np.asarray(fast_uniform((512, 512), jnp.uint32(124)))
+    corr = np.corrcoef(u.ravel(), v.ravel())[0, 1]
+    assert abs(corr) < 0.01
+
+
+def test_unsupported_compressor_raises():
+    from repro.core.compression import TopK
+    with pytest.raises(NotImplementedError):
+        engine_for(jnp.asarray(topology.ring(4)), TopK(ratio=0.1), 64)
+
+
+def test_blockify_roundtrip_and_padding_fixed_point():
+    """unblockify(blockify(x)) == x, and padded tail rows stay exactly zero
+    through a step (the layout-contract fixed point)."""
+    W = jnp.asarray(topology.ring(4))
+    eng = FlatLEADEngine(W=W, dim=700, bits=2)   # ragged: 700 = 512 + 188
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (4, 700))
+    np.testing.assert_array_equal(np.asarray(eng.unblockify(eng.blockify(x))),
+                                  np.asarray(x))
+    hyper = LEADHyper(eta=0.05)
+    st = eng.init(x, jnp.zeros_like(x), hyper)
+    st, _ = eng.step(st, jax.random.normal(key, (4, 700)), key, hyper)
+    tail = np.asarray(st.x.reshape(4, -1)[:, 700:])
+    assert np.all(tail == 0.0)
+    tail_d = np.asarray(st.d.reshape(4, -1)[:, 700:])
+    assert np.all(tail_d == 0.0)

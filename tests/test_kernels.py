@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # container image has no hypothesis
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 from repro.kernels.ops import _pick_tile, _to_blocks
@@ -14,7 +17,7 @@ from repro.kernels.ops import _pick_tile, _to_blocks
 @pytest.mark.parametrize("bits", [1, 2, 4])
 def test_encode_matches_ref(n, bits, key):
     x = jax.random.normal(jax.random.fold_in(key, n), (n,))
-    code, scale = ops.quantize_encode(key, x, bits=bits)
+    code, scale = ops.quantize_encode(key, x, bits=bits, interpret=True)
     tb = _pick_tile(n, 512, 256)
     xb, _ = _to_blocks(x, 512, tb)
     u = jax.random.uniform(key, xb.shape, jnp.float32)
@@ -27,8 +30,8 @@ def test_encode_matches_ref(n, bits, key):
 @pytest.mark.parametrize("bits", [2, 6])
 def test_decode_matches_ref(n, bits, key):
     x = jax.random.normal(jax.random.fold_in(key, n + 1), (n,))
-    code, scale = ops.quantize_encode(key, x, bits=bits)
-    got = ops.quantize_decode(code, scale, bits=bits, shape=(n,))
+    code, scale = ops.quantize_encode(key, x, bits=bits, interpret=True)
+    got = ops.quantize_decode(code, scale, bits=bits, shape=(n,), interpret=True)
     rv = ref.quantize_decode_ref(code, scale, bits)
     np.testing.assert_allclose(np.asarray(got), np.asarray(rv).ravel()[:n],
                                rtol=1e-6)
@@ -37,7 +40,7 @@ def test_decode_matches_ref(n, bits, key):
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_roundtrip_dtype_and_bound(dtype, key):
     x = jax.random.normal(key, (3000,), dtype)
-    xh = ops.quantize_roundtrip(key, x, bits=2)
+    xh = ops.quantize_roundtrip(key, x, bits=2, interpret=True)
     assert xh.dtype == dtype
     xb, _ = _to_blocks(x, 512, _pick_tile(3000, 512, 256))
     step = np.repeat(np.max(np.abs(np.asarray(xb, np.float32)), 1), 512) * 0.5
@@ -49,7 +52,7 @@ def test_roundtrip_dtype_and_bound(dtype, key):
 def test_lead_update_matches_ref(n, key):
     arrs = [jax.random.normal(jax.random.fold_in(key, i), (n,)) for i in range(7)]
     for eta, gamma, alpha in [(0.1, 1.0, 0.5), (0.01, 0.3, 0.9)]:
-        got = ops.lead_update_flat(*arrs, eta, gamma, alpha)
+        got = ops.lead_update_flat(*arrs, eta, gamma, alpha, interpret=True)
         want = ref.lead_update_ref(*arrs, eta, gamma, alpha)
         for g, w, nm in zip(got, want, ["x", "d", "h", "hw"]):
             np.testing.assert_allclose(np.asarray(g), np.asarray(w),
@@ -62,9 +65,10 @@ def test_lead_diff_encode_matches_composition(n, key):
     x, g, d, h = (jax.random.normal(jax.random.fold_in(key, i), (n,))
                   for i in range(4))
     eta = 0.07
-    code, scale = ops.lead_diff_encode_flat(key, x, g, d, h, eta, bits=2)
+    code, scale = ops.lead_diff_encode_flat(key, x, g, d, h, eta, bits=2,
+                                            interpret=True)
     diff = x - eta * g - eta * d - h
-    code2, scale2 = ops.quantize_encode(key, diff, bits=2)
+    code2, scale2 = ops.quantize_encode(key, diff, bits=2, interpret=True)
     # same dither => identical codes (both draw uniform from the same key and
     # block layout)
     np.testing.assert_array_equal(np.asarray(code), np.asarray(code2))
@@ -94,6 +98,6 @@ def test_kernel_vs_core_compressor_semantics(key):
     x = jax.random.normal(key, (2048,))
     payload, spec = q.encode(key, x)
     # core draws uniform over the padded block matrix with the same key
-    code_k, scale_k = ops.quantize_encode(key, x, bits=2)
+    code_k, scale_k = ops.quantize_encode(key, x, bits=2, interpret=True)
     np.testing.assert_array_equal(np.asarray(payload["code"]),
                                   np.asarray(code_k)[: payload["code"].shape[0]])
