@@ -2,15 +2,22 @@
 b-bit quantization (p = 1, 2, 3, inf) and vs top-k / random-k at matched
 average bits/element.  Plus kernel timings (Pallas interpret path vs the
 pure-jnp oracle — correctness twins; on real TPU the kernel is the fused
-single-pass implementation)."""
+single-pass implementation) and the flat-engine operator sweep: every
+shipped compressor driven through FlatLEADEngine.step_wire (codes on the
+wire), with the byte-accurate bits/element of the actual payload.
+
+Writes BENCH_compression.json to the CWD (also runs under run.py --json)."""
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_us
-from repro.core.compression import QuantizePNorm, RandK, TopK
+from benchmarks.common import emit, peek_rows, time_us, write_json
+from repro.core import topology
+from repro.core.compression import Identity, QuantizePNorm, RandK, TopK
+from repro.core.engine import engine_for
+from repro.core.lead import LEADHyper
 from repro.kernels import ops, ref
 
 
@@ -61,6 +68,35 @@ def main():
         return ref.lead_update_ref(*arrs, 0.1, 1.0, 0.5)
     us2 = time_us(jax.jit(unfused), iters=3)
     emit("kernels/lead_update_1M_unfused_jnp", us2, "oracle")
+
+    flat_engine_sweep(key)
+    write_json("BENCH_compression.json", "compression", peek_rows())
+
+
+def flat_engine_sweep(key, n=8, d=1 << 16, gossips=("dense", "ring")):
+    """Fig. 6 operators through the flat engine: per-step latency + the
+    actual per-step payload bits/element (codes-on-the-wire accounting)."""
+    operators = {
+        "identity": Identity(),
+        "quant-2bit": QuantizePNorm(bits=2, block=512),
+        "quant-4bit": QuantizePNorm(bits=4, block=512),
+        "randk(25%)": RandK(ratio=0.25),
+        "topk(10%)": TopK(ratio=0.1),
+    }
+    W = jnp.asarray(topology.ring(n))
+    hyper = LEADHyper(eta=0.05, gamma=1.0, alpha=0.5)
+    x0 = jax.random.normal(key, (n, d))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (n, d))
+    for gossip in gossips:
+        for name, comp in operators.items():
+            eng = engine_for(W, comp, d, gossip=gossip)
+            st = eng.init(x0, g, hyper)
+            gb = eng.blockify(g)
+            step = jax.jit(lambda s, gg, k, e=eng: e.step_wire(s, gg, k, hyper))
+            us = time_us(lambda: step(st, gb, key), iters=3)
+            bits = float(step(st, gb, key)[2])
+            emit(f"flat_engine/{gossip}/{name}_d{d}_n{n}", us,
+                 f"payload_bits_per_elem={bits / d:.3f}")
 
 
 if __name__ == "__main__":

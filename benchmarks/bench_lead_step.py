@@ -24,7 +24,7 @@ import numpy as np
 
 from benchmarks.common import emit, peek_rows, write_json
 from repro.core import lead as lead_mod, topology
-from repro.core.compression import QuantizePNorm
+from repro.core.compression import Identity, QuantizePNorm, RandK, TopK
 from repro.core.convex import consensus_error, distance_to_opt
 from repro.core.engine import engine_for
 from repro.core.gossip import DenseGossip
@@ -180,8 +180,37 @@ def bench_driven(iters=6):
     return speedup
 
 
+def bench_flat_operators():
+    """Flat-engine per-step latency for EVERY shipped compressor at the
+    acceptance point — the Fig. 6 operator sweep on the fast path (the tree
+    engine was previously the only way to run RandK/TopK)."""
+    n, d = ACCEPT_N, ACCEPT_D
+    key = jax.random.PRNGKey(0)
+    gossip = DenseGossip(W=jnp.asarray(topology.ring(n)))
+    x0 = jax.random.normal(key, (n, d))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (n, d))
+    operators = {
+        "identity": Identity(),
+        "quant2": QuantizePNorm(bits=2, block=512),
+        "randk25": RandK(ratio=0.25),
+        "topk10": TopK(ratio=0.1),
+    }
+    for name, comp in operators.items():
+        for mode in ("dense", "ring"):
+            eng = engine_for(gossip.W, comp, d, gossip=mode,
+                             dither="fast" if name == "quant2" else "match")
+            st = eng.init(x0, g, HYPER)
+            gb = eng.blockify(g)
+            flat = jax.jit(lambda s, gg, k, e=eng: e.step_wire(s, gg, k, HYPER))
+            us = _best(flat, 3, st, gb, key)
+            bits = float(flat(st, gb, key)[2])
+            emit(f"lead_step/step_flat_{name}_{mode}_d{d}_n{n}", us,
+                 f"payload_bits_per_elem={bits / d:.3f}")
+
+
 def main():
     bare = bench_bare_steps()
+    bench_flat_operators()
     driven = bench_driven()
     emit("lead_step/acceptance", 0.0,
          f"driven_speedup_d{ACCEPT_D}_n{ACCEPT_N}={driven:.2f};"

@@ -1,0 +1,137 @@
+"""jax version-compatibility shims for the distributed runtime.
+
+The production launch/dist code targets the current jax mesh API
+(``jax.sharding.AxisType``, ``jax.make_mesh(..., axis_types=...)``,
+``jax.set_mesh``, ``jax.shard_map(..., axis_names=..., check_vma=...)``,
+``jax.lax.axis_size``).  Older jax releases (e.g. the 0.4.x line this
+container ships) predate all five.  This module is the single place the
+version split is handled; every call site imports the shimmed name from
+here instead of probing jax itself:
+
+    make_mesh(shape, axes, axis_types=...)   drops axis_types on old jax
+                                             (plain jax.make_mesh(shape, axes))
+    set_mesh(mesh)                           jax.set_mesh when present, else
+                                             the Mesh context manager (which
+                                             sets the same ambient mesh that
+                                             with_sharding_constraint and the
+                                             shard_map shim read)
+    shard_map(f, mesh=None, ...)             adapts the new keyword surface
+                                             (axis_names / check_vma /
+                                             mesh-from-context) to the old
+                                             positional-mesh + check_rep API
+    axis_size(name)                          jax.lax.axis_size, else the
+                                             classic psum(1, name) spelling
+                                             (concrete int inside shard_map)
+    AxisType                                 re-export, or a string-valued
+                                             stand-in enum (old meshes have no
+                                             axis types; Auto is implied)
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh
+
+try:                                     # jax >= 0.5: typed mesh axes
+    from jax.sharding import AxisType
+    HAS_AXIS_TYPE = True
+except ImportError:                      # older jax: untyped (implicitly Auto)
+    class AxisType:                      # minimal stand-in; values are only
+        Auto = "auto"                    # ever forwarded to make_mesh, which
+        Explicit = "explicit"            # ignores them on this code path
+        Manual = "manual"
+    HAS_AXIS_TYPE = False
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """jax.make_mesh that tolerates jax versions without ``axis_types``."""
+    kw = {} if devices is None else {"devices": devices}
+    if axis_types is not None and HAS_AXIS_TYPE:
+        try:
+            return jax.make_mesh(axis_shapes, axis_names,
+                                 axis_types=axis_types, **kw)
+        except TypeError:                # AxisType exists but make_mesh is old
+            pass
+    return jax.make_mesh(axis_shapes, axis_names, **kw)
+
+
+def set_mesh(mesh: Mesh):
+    """Context manager making ``mesh`` ambient: ``with set_mesh(mesh): ...``.
+
+    New jax: jax.set_mesh.  Old jax: the Mesh object itself is a context
+    manager that installs the same ambient mesh (read back by
+    with_sharding_constraint and by the shard_map shim's mesh=None path).
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def _ambient_mesh() -> Mesh:
+    from jax._src.mesh import thread_resources
+    m = thread_resources.env.physical_mesh
+    if m.empty:
+        raise ValueError(
+            "shard_map(mesh=None) needs an ambient mesh; wrap the call in "
+            "`with repro.compat.set_mesh(mesh):`")
+    return m
+
+
+_new_shard_map = getattr(jax, "shard_map", None)
+if _new_shard_map is not None:
+    _NEW_PARAMS = frozenset(inspect.signature(_new_shard_map).parameters)
+else:
+    _NEW_PARAMS = frozenset()
+
+
+def shard_map(f, mesh: Optional[Mesh] = None, *, in_specs, out_specs,
+              axis_names=None, check_vma: Optional[bool] = None,
+              check_rep: Optional[bool] = None):
+    """New-style shard_map surface on any jax.
+
+    axis_names: the *manual* axes (new-jax semantics).  On old jax this is
+    translated to ``auto = mesh.axis_names - axis_names`` — note old CPU jax
+    only implements the fully-manual case (auto must come out empty), which
+    is all this repo uses.  check_vma is the new name of check_rep; either
+    spelling is accepted and forwarded appropriately.
+    """
+    check = True
+    if check_rep is not None:
+        check = check_rep
+    if check_vma is not None:
+        check = check_vma
+
+    if _new_shard_map is not None and "axis_names" in _NEW_PARAMS:
+        kw = dict(in_specs=in_specs, out_specs=out_specs)
+        if mesh is not None:
+            kw["mesh"] = mesh
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        if "check_vma" in _NEW_PARAMS:
+            kw["check_vma"] = check
+        else:
+            kw["check_rep"] = check
+        return _new_shard_map(f, **kw)
+
+    from jax.experimental.shard_map import shard_map as _old
+    m = mesh if mesh is not None else _ambient_mesh()
+    kw = dict(in_specs=in_specs, out_specs=out_specs, check_rep=check)
+    if axis_names is not None:
+        auto = frozenset(m.axis_names) - set(axis_names)
+        if auto:                         # partial-auto: pass through and let
+            kw["auto"] = auto            # jax raise if unsupported
+    return _old(f, m, **kw)
+
+
+def axis_size(name) -> int:
+    """Size of a (possibly tuple of) named mesh axis inside shard_map.
+
+    jax.lax.axis_size where available; otherwise the classic psum(1, name),
+    which the tracer folds to a concrete int (usable in shapes).
+    """
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(name)
+    return jax.lax.psum(1, name)

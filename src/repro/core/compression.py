@@ -19,9 +19,29 @@ Every operator implements the `Compressor` protocol:
                                                  wire representation), spec:
                                                  static metadata (shapes etc.)
     decode(payload, spec) -> xhat
-    wire_bits(n_elements) -> float               true bits on the wire, used by
-                                                 the roofline accounting
+    wire_bits(n_elements) -> float               static bits-on-the-wire
+                                                 estimate for d elements
     variance_constant(d)  -> C bound from Assumption 2 (if known)
+
+plus the *flat-layout wire path* used by the flat LEAD engine
+(core/engine.py) and the distributed trainer (dist/trainer.py), operating on
+the kernels' blocked ``(n_agents, nb, block)`` f32 buffers (zero-padded past
+the logical per-agent dimension ``dim``):
+
+    encode_blocks(key, buf, dim) -> (payload, bits)
+        payload: dict of arrays with leading agent axis n — exactly what
+        crosses agents in encoded gossip (RingGossip.mix_encoded /
+        EncodedRingGossip); nothing outside the payload may travel.
+        bits: scalar f32, bits per agent actually on the wire THIS step,
+        computed from the payload (for RandK this is data-dependent).
+    decode_blocks(payload) -> (n, nb, block) f32 decoded estimate.
+
+The shared-randomness contract: encode_blocks splits `key` into one key per
+agent exactly like simulator.vmap_compress does, so flat-engine trajectories
+match the per-agent tree path draw for draw.  RandK's payload contains only
+the kept *values* — the mask is reproducible from the shared per-agent seed,
+so no indices travel (paper App. C.2).  TopK must ship indices; its bits
+charge k * (32 + log2 d).
 
 Unbiasedness (Assumption 2) is property-tested in tests/test_compression.py.
 """
@@ -57,6 +77,41 @@ def _pnorm(x: jnp.ndarray, p, axis=-1, keepdims=True):
     return jnp.sum(jnp.abs(x) ** p, axis=axis, keepdims=keepdims) ** (1.0 / p)
 
 
+def _stochastic_quantize(blocks: jnp.ndarray, u: jnp.ndarray, bits: int, p):
+    """The paper's p-norm b-bit stochastic quantize step (Thm 3), blockwise
+    over the LAST axis.  Single source of truth for the tree (encode) and
+    flat (encode_blocks) wire paths — they must stay formula-identical for
+    the flat/tree trajectory-equivalence contract.
+
+    Returns (code int8, scale f32), shapes (..., block) / (..., 1)."""
+    blocks = blocks.astype(jnp.float32)
+    scale = _pnorm(blocks, p)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    lvl = jnp.floor((2.0 ** (bits - 1)) * jnp.abs(blocks) / safe + u)
+    # levels live in [0, 2^{b-1}]  (inclusive upper end reachable when
+    # |x| == scale and u -> 1), which fits b bits alongside the sign.
+    lvl = jnp.minimum(lvl, 2.0 ** (bits - 1))
+    code = (jnp.sign(blocks) * lvl).astype(jnp.int8)
+    return code, jnp.where(scale > 0, scale, 0.0).astype(jnp.float32)
+
+
+def _nb_logical(dim: int, block: int) -> int:
+    return -(-dim // block)
+
+
+def _flat_to_rows(buf: jnp.ndarray, dim: int):
+    """(n, nb, block) -> (n, dim): drop the zero padding past the logical dim."""
+    n = buf.shape[0]
+    return buf.reshape(n, -1)[:, :dim]
+
+
+def _rows_to_flat(rows: jnp.ndarray, like: jnp.ndarray):
+    """(n, dim) -> (n, nb, block) zero-padded to `like`'s blocked shape."""
+    n, nb, block = like.shape
+    pad = nb * block - rows.shape[1]
+    return jnp.pad(rows, ((0, 0), (0, pad))).reshape(n, nb, block)
+
+
 @dataclasses.dataclass(frozen=True)
 class QuantizePNorm:
     """Unbiased blockwise p-norm b-bit stochastic quantizer (paper Thm 3).
@@ -81,20 +136,10 @@ class QuantizePNorm:
 
     # -- wire path ----------------------------------------------------------
     def encode(self, key, x: jnp.ndarray):
-        b = self.bits
         blocks, n = _block_view(x, self.block)
-        scale = _pnorm(blocks.astype(jnp.float32), self.p)   # (nb, 1)
-        safe = jnp.where(scale > 0, scale, 1.0)
         u = jax.random.uniform(key, blocks.shape, jnp.float32)
-        lvl = jnp.floor((2.0 ** (b - 1)) * jnp.abs(blocks.astype(jnp.float32)) / safe + u)
-        # levels live in [0, 2^{b-1}]  (inclusive upper end reachable when
-        # |x| == scale and u -> 1), which fits b bits alongside the sign.
-        lvl = jnp.minimum(lvl, 2.0 ** (b - 1))
-        code = (jnp.sign(blocks) * lvl).astype(jnp.int8)
-        payload = {
-            "code": code,
-            "scale": jnp.where(scale > 0, scale, 0.0).astype(jnp.float32),
-        }
+        code, scale = _stochastic_quantize(blocks, u, self.bits, self.p)
+        payload = {"code": code, "scale": scale}
         spec = {"n": n, "shape": x.shape, "dtype": jnp.dtype(x.dtype).name}
         return payload, spec
 
@@ -109,6 +154,34 @@ class QuantizePNorm:
         # b-bit quantizer: level in [0, 2^{b-1}]) + one f32 scale per block.
         nb = -(-n_elements // self.block)
         return n_elements * (self.bits + 1) + nb * 32  # +1: sign bit
+
+    # -- flat-layout wire path (engine / dist trainer) ----------------------
+    def encode_blocks(self, key, buf: jnp.ndarray, dim: int,
+                      interpret: Optional[bool] = None):
+        """buf: (n, nb, block) f32, zero-padded past dim.  Per-agent dither is
+        drawn exactly as the tree path does (split key, uniform over the
+        logical (ceil(dim/block), block) block matrix), so the payload matches
+        vmap_compress + encode draw for draw.  (The p=inf engine hot path uses
+        the fused lead_diff_encode kernel instead; this generic path serves
+        p != inf and the dist trainer, where XLA fuses it.)"""
+        del interpret                    # pure-XLA path; kept for protocol
+        n, nb, block = buf.shape
+        assert block == self.block, (block, self.block)
+        nbl = _nb_logical(dim, block)
+        keys = jax.random.split(key, n)
+        u = jax.vmap(lambda kk: jax.random.uniform(
+            kk, (nbl, block), jnp.float32))(keys)
+        u = jnp.pad(u, ((0, 0), (0, nb - nbl), (0, 0)))
+        code, scale = _stochastic_quantize(buf, u, self.bits, self.p)
+        payload = {"code": code, "scale": scale}
+        # actual payload: (b+1)-bit codes for the dim logical elements + one
+        # f32 scale per logical block (the padded tail rows never travel).
+        bits = jnp.asarray(dim * (self.bits + 1) + nbl * 32, jnp.float32)
+        return payload, bits
+
+    def decode_blocks(self, payload: dict) -> jnp.ndarray:
+        return (payload["scale"] * (2.0 ** (1 - self.bits))
+                * payload["code"].astype(jnp.float32))
 
     def variance_constant(self, d_block: Optional[int] = None) -> float:
         """Upper bound on C in  E||x - Q(x)||^2 <= C ||x||^2  (Remark 7).
@@ -126,16 +199,28 @@ class TopK:
 
     ratio: fraction of entries kept.  Index transmission costs log2(d) bits
     per kept entry (no shared-seed trick possible).
+
+    Exactly k entries are kept: the mask comes from jax.lax.top_k *indices*
+    (a magnitude threshold `|x| >= kth` would keep every tied entry, sending
+    more than the k values wire_bits charges).
     """
     ratio: float = 0.1
+
+    def _k(self, d: int) -> int:
+        return max(1, int(d * self.ratio))
+
+    def _mask_rows(self, rows: jnp.ndarray) -> jnp.ndarray:
+        """(n, d) -> boolean keep-mask with exactly k True per row."""
+        n, d = rows.shape
+        _, idx = jax.lax.top_k(jnp.abs(rows), self._k(d))
+        return (jnp.zeros((n, d), bool)
+                .at[jnp.arange(n)[:, None], idx].set(True))
 
     def compress(self, key, x: jnp.ndarray) -> jnp.ndarray:
         del key
         flat = jnp.ravel(x)
-        k = max(1, int(flat.shape[0] * self.ratio))
-        thresh = jnp.sort(jnp.abs(flat))[-k]
-        mask = jnp.abs(flat) >= thresh
-        return jnp.reshape(flat * mask, x.shape)
+        mask = self._mask_rows(flat[None])[0]
+        return jnp.reshape(jnp.where(mask, flat, 0.0), x.shape)
 
     def encode(self, key, x):
         return {"dense": self.compress(key, x)}, {}
@@ -144,8 +229,29 @@ class TopK:
         return payload["dense"]
 
     def wire_bits(self, n_elements: int) -> float:
-        k = max(1, int(n_elements * self.ratio))
+        k = self._k(n_elements)
         return k * (32 + math.log2(max(n_elements, 2)))
+
+    # -- flat-layout wire path ----------------------------------------------
+    def encode_blocks(self, key, buf: jnp.ndarray, dim: int,
+                      interpret: Optional[bool] = None):
+        """Threshold+mask over the logical rows: per-agent exact-k mask from
+        top_k indices, applied by the fused kernels.sparsify.mask_apply pass;
+        payload = masked values in block layout (k values + k indices on the
+        wire; the dense zeros are layout, not traffic)."""
+        del key
+        from repro.kernels.sparsify import mask_apply
+        n, nb, block = buf.shape
+        mask = _rows_to_flat(
+            self._mask_rows(_flat_to_rows(buf, dim)).astype(jnp.float32), buf)
+        vals = mask_apply(buf.reshape(n * nb, block),
+                          mask.reshape(n * nb, block), interpret=interpret)
+        payload = {"values": vals.reshape(n, nb, block)}
+        bits = jnp.asarray(self.wire_bits(dim), jnp.float32)
+        return payload, bits
+
+    def decode_blocks(self, payload: dict) -> jnp.ndarray:
+        return payload["values"]
 
     def variance_constant(self, d_block=None):
         return None  # biased: Assumption 2 does not hold
@@ -174,6 +280,38 @@ class RandK:
     def wire_bits(self, n_elements: int) -> float:
         return n_elements * self.ratio * 32
 
+    # -- flat-layout wire path ----------------------------------------------
+    def encode_blocks(self, key, buf: jnp.ndarray, dim: int,
+                      interpret: Optional[bool] = None):
+        """Shared-seed mask: the per-agent keep-mask u < ratio is
+        reproducible from `key` on both sides of the wire, so the payload is
+        values-only (no indices travel — paper App. C.2).  The mask-and-scale
+        is the fused kernels.sparsify.randk_encode pass (the mask never
+        round-trips to memory).  Bits are data-dependent: 32 per
+        actually-kept entry, averaged over agents.
+
+        The per-agent dither draw matches the tree path's
+        jax.random.bernoulli(key_i, ratio, (dim,)) — bernoulli IS
+        uniform(key) < p — so flat and tree trajectories coincide."""
+        from repro.kernels.sparsify import randk_encode
+        n, nb, block = buf.shape
+        keys = jax.random.split(key, n)
+        u = jax.vmap(lambda kk: jax.random.uniform(
+            kk, (dim,), jnp.float32))(keys)
+        # pad with 1.0 (>= ratio): the layout tail is never kept
+        u_blocks = jnp.pad(u, ((0, 0), (0, nb * block - dim)),
+                           constant_values=1.0)
+        vals = randk_encode(buf.reshape(n * nb, block),
+                            u_blocks.reshape(n * nb, block), ratio=self.ratio,
+                            rescale=self.rescale, interpret=interpret)
+        payload = {"values": vals.reshape(n, nb, block)}
+        bits = jnp.mean(jnp.sum((u < self.ratio).astype(jnp.float32),
+                                axis=1)) * 32.0
+        return payload, bits
+
+    def decode_blocks(self, payload: dict) -> jnp.ndarray:
+        return payload["values"]
+
     def variance_constant(self, d_block=None):
         # E||x - Q(x)||^2 = (1/ratio - 1)||x||^2 for the rescaled variant.
         return 1.0 / self.ratio - 1.0
@@ -195,6 +333,15 @@ class Identity:
 
     def wire_bits(self, n_elements: int) -> float:
         return n_elements * 32
+
+    # -- flat-layout wire path ----------------------------------------------
+    def encode_blocks(self, key, buf: jnp.ndarray, dim: int,
+                      interpret: Optional[bool] = None):
+        del key, interpret
+        return {"values": buf}, jnp.asarray(dim * 32, jnp.float32)
+
+    def decode_blocks(self, payload: dict) -> jnp.ndarray:
+        return payload["values"]
 
     def variance_constant(self, d_block=None):
         return 0.0

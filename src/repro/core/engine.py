@@ -7,37 +7,58 @@ contiguous ``(n_agents, nb, block)`` f32 buffers in the kernels' native
 block layout (see kernels/__init__.py for the layout contract) and runs the
 iteration as exactly two fused passes:
 
-  * kernels.lead_update.lead_diff_encode — pre-communication: fused
-    Y-difference + blockwise quantization, one read of (X, G, D, H, dither),
-    one write of int8 codes + per-block scales;
+  * pre-communication — fused Y-difference + encode.  For the p=inf
+    quantizer this is kernels.lead_update.lead_diff_encode (one read of
+    (X, G, D, H, dither), one write of int8 codes + per-block scales); every
+    other operator goes through its ``encode_blocks`` flat wire path (see
+    core/compression.py), one XLA-fused pass over the same buffers.
   * kernels.lead_update.lead_update — post-communication: fused
     H / H_w / D / X update, one read of (X, G, D, H, H_w, Qh, WQh), one
     write of the four new state buffers.
 
-Agents are batched along the kernel row axis — ``(n * nb, block)`` — so
-each pass is a single ``pallas_call`` (no per-agent dispatch).  The dense
-gossip mixing is applied directly on the decoded codes, between the two
-passes; this is the only inter-agent operation.
+Codes on the wire
+-----------------
+The engine is generic over the Compressor flat protocol
+(``encode_blocks(key, buf, dim) -> (payload, bits)`` / ``decode_blocks``):
+between the two passes only the *payload* exists, and the gossip stage is
+pluggable:
+
+  * ``gossip="dense"`` — W @ decode(payload) on the local decoded buffer
+    (the mixing-matrix simulator path, any topology);
+  * ``gossip="ring"``  — EncodedRingGossip.mix_encoded: the payload is
+    rolled to the two ring neighbors and decoded at the receiver, the
+    single-device model of RingGossip.mix_encoded's multi-host wire path.
+    Requires W to be the uniform ring (topology.ring).
+
+``step_wire`` additionally returns the bits each agent put on the wire this
+step, computed from the actual payload (data-dependent for RandK) — the
+byte-accurate x-axis of the paper's Fig. 1b/6, replacing static
+``wire_bits(d)`` estimates.
 
 Bit-compatibility with the tree path
 ------------------------------------
-The engine draws dither exactly the way ``simulator.vmap_compress`` +
-``QuantizePNorm`` do — one key per agent via ``jax.random.split``, uniform
-over the *logical* ``(ceil(d/block), block)`` block matrix — and the fused
-kernels use the same left-to-right subtraction order as ``lead.step``, so
-``engine="flat"`` and ``engine="tree"`` produce matching ``LEADState``
-trajectories (tests/test_engine.py asserts atol <= 1e-5 over 20 steps).
-Zero rows are a fixed point of both kernels, so the tile padding past the
-logical blocks never leaks into the trajectory.
+The engine draws per-operator randomness exactly the way
+``simulator.vmap_compress`` does — one key per agent via
+``jax.random.split``, draws over the *logical* per-agent shape — and the
+fused kernels use the same left-to-right subtraction order as ``lead.step``,
+so ``engine="flat"`` and ``engine="tree"`` produce matching ``LEADState``
+trajectories for every shipped compressor (tests/test_engine.py asserts
+atol <= 1e-5 over 20 steps).  Zero rows are a fixed point of both passes,
+so the tile padding past the logical blocks never leaks into the trajectory.
+``dither="fast"`` (fused quantizer path only) swaps the threefry dither for
+the counter-hash generator below — statistically equivalent, much cheaper,
+but a different random stream.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.gossip import EncodedRingGossip
 from repro.core.lead import LEADHyper, _at
 from repro.kernels import lead_update as _lu
 from repro.kernels import quantize as _q
@@ -73,29 +94,52 @@ class FlatLEADState(NamedTuple):
     k: jnp.ndarray
 
 
+def _is_fused_quantizer(comp) -> bool:
+    """True when the compressor is exactly what the fused Pallas kernels
+    implement: the blockwise p=inf b-bit quantizer."""
+    from repro.core.compression import QuantizePNorm
+    return (isinstance(comp, QuantizePNorm)
+            and comp.p in (jnp.inf, math.inf, "inf"))
+
+
 @dataclasses.dataclass(frozen=True)
 class FlatLEADEngine:
     """init/step over flat buffers; mirrors core/lead.py semantics exactly.
 
-    bits=None runs the Identity compressor (Qh = Y - H, no quantization);
-    otherwise bits is the quantizer bit-width (paper: 2).  `interpret` is
-    the kernels' tri-state backend flag (None = auto-dispatch).
+    compressor=None runs Identity (Qh = Y - H, no encode stage).  The p=inf
+    QuantizePNorm takes the fused diff+encode kernel; every other operator
+    (RandK, TopK, p != inf) goes through its encode_blocks wire path.
+    `interpret` is the kernels' tri-state backend flag (None = auto).
+
+    gossip="dense" mixes W @ decode(payload); gossip="ring" rolls the
+    encoded payload to ring neighbors and decodes at the receiver
+    (EncodedRingGossip) — W must be the uniform ring.
 
     dither="match" draws the quantizer dither exactly as the tree path does
     (per-agent threefry; trajectories match engine="tree" bit for bit modulo
     compiler rounding).  dither="fast" uses the counter-hash generator above
     — statistically equivalent, much cheaper, but a different random stream,
-    so trajectories equal the tree path's only in distribution.
+    so trajectories equal the tree path's only in distribution.  It applies
+    to the fused quantizer path; other operators always draw threefry inside
+    encode_blocks (their cost is not dither-dominated).
     """
     W: Any                             # (n, n) mixing matrix
     dim: int                           # logical per-agent dimension d
-    bits: Optional[int] = 2
+    compressor: Any = None             # None -> Identity
     block: int = DEFAULT_BLOCK
     interpret: Optional[bool] = None
     dither: str = "match"              # "match" | "fast"
+    gossip: str = "dense"              # "dense" | "ring"
 
     def __post_init__(self):
         assert self.dither in ("match", "fast"), self.dither
+        assert self.gossip in ("dense", "ring"), self.gossip
+        if self.gossip == "ring":
+            import numpy as np
+            from repro.core import topology
+            W = np.asarray(self.W)
+            assert np.allclose(W, topology.ring(W.shape[0]), atol=1e-6), \
+                "gossip='ring' requires the uniform ring mixing matrix"
 
     @property
     def n(self) -> int:
@@ -149,10 +193,11 @@ class FlatLEADEngine:
                              k=jnp.zeros((), jnp.int32))
 
     def _dither(self, key: jax.Array, k: jnp.ndarray) -> jnp.ndarray:
-        """U[0,1) dither (n, nb, block).  "match": per-agent threefry over
-        the logical blocks, matching the tree path's split-then-vmap draw
-        bit for bit (tile padding rows get zeros — codes there are zero
-        regardless of dither).  "fast": one counter-hash pass."""
+        """U[0,1) dither (n, nb, block) for the fused quantizer path.
+        "match": per-agent threefry over the logical blocks, matching the
+        tree path's split-then-vmap draw bit for bit (tile padding rows get
+        zeros — codes there are zero regardless of dither).  "fast": one
+        counter-hash pass."""
         if self.dither == "fast":
             raw = (key if jnp.issubdtype(key.dtype, jnp.integer)
                    else jax.random.key_data(key))
@@ -164,34 +209,81 @@ class FlatLEADEngine:
         u = jax.vmap(lambda kk: jax.random.uniform(kk, shape, jnp.float32))(keys)
         return jnp.pad(u, ((0, 0), (0, self.nb - self.nb_logical), (0, 0)))
 
-    def step(self, state: FlatLEADState, g: jnp.ndarray, key: jax.Array,
-             hyper: LEADHyper):
+    # -- wire stages --------------------------------------------------------
+    def _encode(self, state: FlatLEADState, gb: jnp.ndarray, eta, key):
+        """Pre-communication pass: (payload, decode, wire_bits).
+
+        payload is everything that may cross agents; decode maps it back to
+        the (n, nb, block) estimate Qh.  For the fused p=inf quantizer the
+        Y-difference and the encode happen in one kernel; other compressors
+        compute the difference in XLA and call their encode_blocks."""
+        comp = self.compressor
+        if comp is None or not hasattr(comp, "encode_blocks"):
+            raise NotImplementedError(
+                f"{type(comp).__name__} does not implement the flat "
+                "encode_blocks/decode_blocks wire protocol")
+
+        if _is_fused_quantizer(comp):
+            code, scale = _lu.lead_diff_encode(
+                self._rows(state.x), self._rows(gb), self._rows(state.d),
+                self._rows(state.h), self._rows(self._dither(key, state.k)),
+                eta, bits=comp.bits, tile_b=self.tile_b,
+                interpret=self.interpret)
+            shape3 = (self.n, self.nb, self.block)
+            payload = {"code": code.reshape(shape3),
+                       "scale": scale.reshape(self.n, self.nb, 1)}
+
+            def decode(pl):
+                rows = _q.decode(pl["code"].reshape(-1, self.block),
+                                 pl["scale"].reshape(-1, 1), bits=comp.bits,
+                                 tile_b=self.tile_b, interpret=self.interpret)
+                return rows.reshape(shape3)
+
+            bits = jnp.asarray(self.dim * (comp.bits + 1)
+                               + self.nb_logical * 32, jnp.float32)
+            return payload, decode, bits
+
+        y = state.x - eta * gb - eta * state.d
+        payload, bits = comp.encode_blocks(key, y - state.h, self.dim,
+                                           interpret=self.interpret)
+        return payload, comp.decode_blocks, bits
+
+    def _gossip(self, payload, decode):
+        """Communication stage: (Qh, W Qh).  Only `payload` crosses agents."""
+        if self.gossip == "ring":
+            ring = EncodedRingGossip.weights_from(self.W)
+            return decode(payload), ring.mix_encoded(payload, decode)
+        qh = decode(payload)
+        return qh, self._mix(qh)
+
+    def step_wire(self, state: FlatLEADState, g: jnp.ndarray, key: jax.Array,
+                  hyper: LEADHyper):
         """One LEAD iteration on flat buffers; g: gradients at state.x,
         either (n, d) (blockified here) or already (n, nb, block) — the
         engine's native layout, which skips the per-step padding copy.
-        Returns (new_state, comp_err) with comp_err = ||Qh - (Y-H)|| / ||Y||,
-        the error this step incurred (jit callers that drop it get the
-        extra passes DCE'd)."""
+
+        Returns (new_state, comp_err, wire_bits):
+          comp_err  = ||Qh - (Y-H)|| / ||Y||, the compression error this
+                      step incurred;
+          wire_bits = bits per agent on the wire this step, from the actual
+                      payload.
+        jit callers that drop a metric get its extra passes DCE'd."""
         eta = _at(hyper.eta, state.k)
         gamma = _at(hyper.gamma, state.k)
         alpha = _at(hyper.alpha, state.k)
         gb = g if g.ndim == 3 else self.blockify(g)
 
-        if self.bits is None:
-            # Identity compression: Qh = Y - H exactly (one fused XLA pass).
+        from repro.core.compression import Identity
+        if self.compressor is None or isinstance(self.compressor, Identity):
+            # Identity: Qh = Y - H exactly (one fused XLA pass); the payload
+            # on the wire is the raw difference (d * 32 bits).
             y = state.x - eta * gb - eta * state.d
-            qh = y - state.h
+            payload = {"values": y - state.h}
+            qh, wqh = self._gossip(payload, lambda pl: pl["values"])
+            bits = jnp.asarray(self.dim * 32, jnp.float32)
         else:
-            code, scale = _lu.lead_diff_encode(
-                self._rows(state.x), self._rows(gb), self._rows(state.d),
-                self._rows(state.h), self._rows(self._dither(key, state.k)),
-                eta, bits=self.bits, tile_b=self.tile_b,
-                interpret=self.interpret)
-            qh_rows = _q.decode(code, scale, bits=self.bits,
-                                tile_b=self.tile_b, interpret=self.interpret)
-            qh = qh_rows.reshape(self.n, self.nb, self.block)
-
-        wqh = self._mix(qh)                 # the single gossip exchange
+            payload, decode, bits = self._encode(state, gb, eta, key)
+            qh, wqh = self._gossip(payload, decode)
 
         xo, do, ho, hwo = _lu.lead_update(
             self._rows(state.x), self._rows(gb), self._rows(state.d),
@@ -207,31 +299,36 @@ class FlatLEADEngine:
         diff = y - state.h
         comp_err = (jnp.linalg.norm(jnp.ravel(qh - diff))
                     / (jnp.linalg.norm(jnp.ravel(y)) + 1e-12))
+        return new, comp_err, bits
+
+    def step(self, state: FlatLEADState, g: jnp.ndarray, key: jax.Array,
+             hyper: LEADHyper):
+        """step_wire without the wire accounting: (new_state, comp_err)."""
+        new, comp_err, _ = self.step_wire(state, g, key, hyper)
         return new, comp_err
 
 
 def engine_for(gossip_W, compressor, dim: int,
                interpret: Optional[bool] = None,
-               dither: str = "match") -> FlatLEADEngine:
+               dither: str = "match", gossip: str = "dense") -> FlatLEADEngine:
     """Build a FlatLEADEngine matching a simulator compressor.
 
-    Supports QuantizePNorm(p=inf) — the kernels implement exactly that
-    quantizer — and Identity.  Anything else (TopK, RandK, p != inf) has no
-    fused kernel; callers should fall back to engine="tree".
-    """
+    Every shipped compressor runs flat: the p=inf QuantizePNorm through the
+    fused kernels, Identity through the exact no-encode shortcut, and
+    everything else (RandK, TopK, p != inf quantizers) through its
+    encode_blocks wire path.  Only an object without that protocol is
+    rejected."""
     from repro.core.compression import Identity, QuantizePNorm
 
     if isinstance(compressor, Identity) or compressor is None:
-        return FlatLEADEngine(W=gossip_W, dim=dim, bits=None,
-                              interpret=interpret, dither=dither)
-    if isinstance(compressor, QuantizePNorm):
-        import math
-        if compressor.p not in (jnp.inf, math.inf, "inf"):
-            raise NotImplementedError(
-                "flat engine kernels implement the p=inf quantizer only; "
-                f"got p={compressor.p!r} (use engine='tree')")
-        return FlatLEADEngine(W=gossip_W, dim=dim, bits=compressor.bits,
-                              block=compressor.block, interpret=interpret,
-                              dither=dither)
-    raise NotImplementedError(
-        f"no fused kernel for {type(compressor).__name__}; use engine='tree'")
+        return FlatLEADEngine(W=gossip_W, dim=dim, compressor=None,
+                              interpret=interpret, dither=dither,
+                              gossip=gossip)
+    if not hasattr(compressor, "encode_blocks"):
+        raise NotImplementedError(
+            f"{type(compressor).__name__} lacks the encode_blocks/"
+            "decode_blocks flat wire protocol; use engine='tree'")
+    block = getattr(compressor, "block", DEFAULT_BLOCK)
+    return FlatLEADEngine(W=gossip_W, dim=dim, compressor=compressor,
+                          block=block, interpret=interpret, dither=dither,
+                          gossip=gossip)

@@ -10,8 +10,14 @@ Two interchangeable implementations of `mix`:
   mesh axes so that consecutive neighbors are intra-pod except at the two
   pod-boundary edges — the compressed payload is the only traffic that
   crosses pods.
+* EncodedRingGossip — the single-device analogue of RingGossip.mix_encoded
+  for the flat LEAD engine: agents live on the *leading array axis*, the
+  encoded payload is rolled to ring neighbors, and each agent decodes
+  locally.  This is the simulator-side model of codes-on-the-wire mixing —
+  only the payload arrays cross the (virtual) agent boundary, so per-step
+  wire accounting can be read off the actual payload.
 
-Both back-ends operate on pytrees leaf-wise.
+All back-ends operate on pytrees leaf-wise.
 """
 from __future__ import annotations
 
@@ -21,6 +27,7 @@ from typing import Any, Callable, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import axis_size
 from repro.utils.tree import Pytree, tree_map
 
 
@@ -44,6 +51,55 @@ class DenseGossip:
     def i_minus_w(self, tree: Pytree) -> Pytree:
         mixed = self.mix(tree)
         return tree_map(jnp.subtract, tree, mixed)
+
+
+@dataclasses.dataclass(frozen=True)
+class EncodedRingGossip:
+    """Ring mixing on the leading (agent) axis with codes on the wire.
+
+    Single-device counterpart of RingGossip.mix_encoded: the per-agent
+    encoded payload (e.g. int8 code planes + per-block scales) is rolled one
+    step each way around the agent axis and decoded *at the receiver* — the
+    dense tensors never cross agents.  With the paper's uniform ring
+    (w_self = w_neighbor = 1/3) this computes exactly W @ decode(payload)
+    for W = topology.ring(n), up to summation order.
+    """
+    w_self: float = 1.0 / 3.0
+    w_neighbor: float = 1.0 / 3.0
+
+    @staticmethod
+    def weights_from(W) -> "EncodedRingGossip":
+        """Read (w_self, w_neighbor) off a uniform ring mixing matrix."""
+        import numpy as np
+        Wn = np.asarray(W)
+        return EncodedRingGossip(w_self=float(Wn[0, 0]),
+                                 w_neighbor=float(Wn[0, 1 % Wn.shape[0]]))
+
+    def shift(self, payload: Pytree, direction: int) -> Pytree:
+        """Roll every payload leaf by one agent (this IS the wire traffic)."""
+        return tree_map(lambda a: jnp.roll(a, -direction, axis=0), payload)
+
+    def mix_encoded(self, payload: Pytree,
+                    decode: Callable[[Pytree], Pytree]) -> Pytree:
+        """w_self * decode(own) + w_neighbor * (decode(right) + decode(left));
+        only `payload` crosses agents, decode runs per receiving agent.
+
+        Degenerate rings (topology.ring): n == 2 has ONE neighbor (both
+        shifts would deliver the same agent — summing them double-counts),
+        n == 1 has none."""
+        n = jax.tree_util.tree_leaves(payload)[0].shape[0]
+        own = decode(payload)
+        if n == 1:
+            return own
+        right = decode(self.shift(payload, +1))
+        if n == 2:
+            return tree_map(
+                lambda o, r: self.w_self * o + self.w_neighbor * r,
+                own, right)
+        left = decode(self.shift(payload, -1))
+        return tree_map(
+            lambda o, r, l: self.w_self * o + self.w_neighbor * (r + l),
+            own, right, left)
 
 
 def _ring_perms(n: int) -> Tuple[list, list]:
@@ -70,11 +126,11 @@ class RingGossip:
         return self.axes if len(self.axes) > 1 else self.axes[0]
 
     def n_agents(self) -> jnp.ndarray:
-        return jax.lax.axis_size(self.axis_name)
+        return axis_size(self.axis_name)
 
     def shift(self, tree: Pytree, direction: int) -> Pytree:
         """ppermute every leaf by +1/-1 around the ring (wire traffic!)."""
-        n = jax.lax.axis_size(self.axis_name)
+        n = axis_size(self.axis_name)
         fwd, bwd = _ring_perms(n)
         perm = fwd if direction > 0 else bwd
 

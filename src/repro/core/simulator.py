@@ -6,21 +6,22 @@ paper's metrics per iteration:
 
     dist:      (1/n) sum ||x_i - x*||^2          (Fig. 1a, 2a, 3a)
     consensus: (1/n) sum ||x_i - xbar||^2        (Fig. 1c)
-    comp_err:  ||Qh - (Y-H)|| / ||Y||            (Fig. 1d)  [LEAD: recorded
-               from inside the step — the error the iteration actually
-               incurred, not a fresh re-compression]
+    comp_err:  ||Q(m) - m|| / ||Y||              (Fig. 1d)  [see Trace]
     loss:      average local loss
     bits:      cumulative transmitted bits per agent (Fig. 1b, x-axis)
 
 The whole trace is one ``jax.lax.scan``: a 300-iteration run compiles once,
 executes sync-free on device (metrics accumulate in the scan carry), and
-performs a single device->host transfer at the end.  ``record_every`` is
-applied by slicing the on-device trace after the fact.
+performs a single device->host transfer at the end.  With
+``record_every > 1`` the metric pass itself is gated behind ``lax.cond`` so
+skipped iterations pay only the step, not the metric reductions.
 
 The LEAD adapter wraps core/lead.py with a DenseGossip and a per-agent
 (vmapped) compressor so that blocks never straddle agents; with
 ``engine="flat"`` it instead drives the fused flat-buffer engine
-(core/engine.py) holding state in the kernels' (n, nb, block) layout.
+(core/engine.py) holding state in the kernels' (n, nb, block) layout, with
+codes-on-the-wire gossip (``engine_gossip="ring"``) and byte-accurate
+per-step wire accounting from the actual payload.
 """
 from __future__ import annotations
 
@@ -55,6 +56,8 @@ class LEADSim:
     same algorithm, state blockified to the kernels' native layout.
     dither/interpret are forwarded to the flat engine (see its docstring);
     the default dither="match" keeps flat trajectories aligned with tree.
+    engine_gossip selects the flat engine's communication stage: "dense"
+    (W @ decoded) or "ring" (encoded payload travels, decode at receiver).
     """
     gossip: DenseGossip
     compressor: Any
@@ -64,6 +67,7 @@ class LEADSim:
     engine: str = "tree"
     dither: str = "match"
     interpret: Optional[bool] = None
+    engine_gossip: str = "dense"
     dim: Optional[int] = None   # logical per-agent d; run() binds it for
                                 # engine="flat" (needed to unblockify states)
 
@@ -76,7 +80,8 @@ class LEADSim:
 
     def _flat_engine(self, dim: int):
         return engine_for(self.gossip.W, self.compressor, dim,
-                          interpret=self.interpret, dither=self.dither)
+                          interpret=self.interpret, dither=self.dither,
+                          gossip=self.engine_gossip)
 
     def init(self, x0, g0, key):
         if self.engine == "flat":
@@ -88,21 +93,33 @@ class LEADSim:
         new, _ = self.step_with_metrics(state, g, key)
         return new
 
+    def _dim_of(self, g) -> int:
+        if self.dim is not None:
+            return self.dim
+        assert g.ndim == 2, (
+            "gradients in the native (n, nb, block) layout need "
+            "LEADSim(dim=...) to recover the logical dimension")
+        return g.shape[1]
+
     def step_with_metrics(self, state, g, key):
         """Returns (new_state, comp_err) with comp_err = ||Qh-(Y-H)||/||Y||
         computed inside the step (the error this iteration incurred)."""
+        new, cerr, _ = self.step_with_wire(state, g, key)
+        return new, cerr
+
+    def step_with_wire(self, state, g, key):
+        """(new_state, comp_err, wire_bits): wire_bits is the per-agent bits
+        this step put on the wire — from the actual payload on the flat
+        engine (data-dependent for RandK), the static wire_bits(d) estimate
+        on the tree path (which never materializes a payload)."""
         if self.engine == "flat":
-            if self.dim is not None:
-                dim = self.dim
-            else:
-                assert g.ndim == 2, (
-                    "gradients in the native (n, nb, block) layout need "
-                    "LEADSim(dim=...) to recover the logical dimension")
-                dim = g.shape[1]
-            return self._flat_engine(dim).step(state, g, key, self.hyper)
-        return lead_mod.step_with_metrics(state, g, key, self.hyper,
-                                          self.gossip.mix,
-                                          vmap_compress(self.compressor))
+            dim = self._dim_of(g)
+            return self._flat_engine(dim).step_wire(state, g, key, self.hyper)
+        new, cerr = lead_mod.step_with_metrics(state, g, key, self.hyper,
+                                               self.gossip.mix,
+                                               vmap_compress(self.compressor))
+        bits = jnp.asarray(self.compressor.wire_bits(g.shape[1]), jnp.float32)
+        return new, cerr, bits
 
     def x_of(self, state):
         """Current iterates as (n, d) regardless of engine layout."""
@@ -115,6 +132,25 @@ class LEADSim:
 
 
 class Trace(NamedTuple):
+    """Host-side metric traces, one entry per recorded iteration.
+
+    Conventions (shared across LEAD and the baselines so Fig. 1d curves are
+    comparable):
+
+    comp_err is ``||Q(m) - m|| / ||Y||`` where ``m`` is the message the
+    algorithm transmitted THIS iteration (LEAD: the difference Y - H;
+    CHOCO-style baselines: x - xhat; plain baselines: x) and ``Y`` is the
+    full pre-communication iterate the message reconstructs (LEAD:
+    Y = X - eta g - eta D, evaluated at the pre-step state; baselines: the
+    pre-step X).  LEAD paths record it from inside the step — the error the
+    iteration actually incurred; baselines re-compress the transmitted
+    quantity of the pre-step state with the step's key.
+
+    bits_per_agent is cumulative bits each agent has put on the wire up to
+    and including the iteration.  Flat-engine LEAD accumulates the *actual*
+    per-step payload size (data-dependent for RandK); other paths add the
+    compressor's static ``wire_bits(d)`` estimate per iteration.
+    """
     dist: np.ndarray
     consensus: np.ndarray
     loss: np.ndarray
@@ -131,9 +167,11 @@ def run(algo, problem, x_star, *, iters=300, key=None, stochastic=False,
     Assumption 3 (minibatch quadratics have state-dependent variance).
 
     The trace is computed by one jitted ``lax.scan``: metrics for every
-    iteration accumulate on device and cross to the host once at the end —
-    zero per-iteration host syncs.  Metrics are evaluated every iteration
-    (record_every subsamples the on-device trace by slicing)."""
+    recorded iteration accumulate on device and cross to the host once at
+    the end — zero per-iteration host syncs.  With record_every > 1 the
+    metric reductions of skipped iterations are gated off with ``lax.cond``
+    (the on-device trace still has `iters` rows; recorded rows are sliced
+    out afterwards)."""
     key = key if key is not None else jax.random.PRNGKey(0)
     n, d = problem.n, problem.d
     x0 = jnp.zeros((n, d))
@@ -154,48 +192,65 @@ def run(algo, problem, x_star, *, iters=300, key=None, stochastic=False,
     g0 = grad_at(x0, k0)
     state = algo.init(x0, g0, k0)
 
-    # bits per iteration per agent (model exchange of d elements)
+    # static per-iteration estimate (paths that never materialize a payload)
     comp = getattr(algo, "compressor", None)
-    bits_per_iter = comp.wire_bits(d) if comp is not None else d * 32
+    static_bits = jnp.asarray(
+        comp.wire_bits(d) if comp is not None else d * 32, jnp.float32)
 
     x_of = getattr(algo, "x_of", lambda s: s.x)
+    step_with_wire = getattr(algo, "step_with_wire", None)
     step_with_metrics = getattr(algo, "step_with_metrics", None)
     xs = jnp.asarray(x_star)
 
-    def body(carry, _):
-        state, k = carry
+    def body(carry, it):
+        state, k, bits_acc = carry
         k, sub = jax.random.split(k)
         g = grad_at(x_of(state), sub)
         step_key = jax.random.fold_in(sub, 2)
-        if step_with_metrics is not None:
+        if step_with_wire is not None:
+            new, cerr, bits = step_with_wire(state, g, step_key)
+        elif step_with_metrics is not None:
             new, cerr = step_with_metrics(state, g, step_key)
+            bits = static_bits
         else:
             new = algo.step(state, g, step_key)
-            cerr = _compression_error(algo, new, problem, step_key)
-        X = x_of(new)
-        metrics = (distance_to_opt(X, xs), consensus_error(X),
-                   problem.loss(X), cerr)
-        return (new, k), metrics
+            cerr = _compression_error(algo, state, problem, step_key)
+            bits = static_bits
+        bits_acc = bits_acc + bits
+
+        def measure():
+            X = x_of(new)
+            return (distance_to_opt(X, xs), consensus_error(X),
+                    problem.loss(X), cerr)
+
+        if record_every > 1:
+            m = jax.lax.cond(it % record_every == 0, measure,
+                             lambda: (jnp.zeros(()),) * 4)
+        else:
+            m = measure()
+        return (new, k, bits_acc), (*m, bits_acc)
 
     @jax.jit
     def trace(state, key):
-        (state, _), ms = jax.lax.scan(body, (state, key), None, length=iters)
+        carry = (state, key, jnp.zeros((), jnp.float32))
+        _, ms = jax.lax.scan(body, carry, jnp.arange(iters))
         return ms
 
-    dist, cons, loss, cerr = trace(state, key)
+    dist, cons, loss, cerr, bits = trace(state, key)
     # single device->host transfer for the whole trace
-    dist, cons, loss, cerr = (np.asarray(m) for m in (dist, cons, loss, cerr))
+    dist, cons, loss, cerr, bits = (
+        np.asarray(m, np.float64) for m in (dist, cons, loss, cerr, bits))
     sel = slice(0, iters, record_every)
-    bits = (np.arange(iters, dtype=np.float64)[sel] + 1.0) * bits_per_iter
     return Trace(dist=dist[sel], consensus=cons[sel], loss=loss[sel],
-                 bits_per_agent=bits, comp_err=cerr[sel])
+                 bits_per_agent=bits[sel], comp_err=cerr[sel])
 
 
 def _compression_error(algo, state, problem, key) -> jnp.ndarray:
     """Relative compression error of the quantity a *baseline* transmits
-    (traced, on-device).  LEAD paths record the exact in-step error via
-    step_with_metrics instead; this fallback re-compresses the transmitted
-    quantity with the step's key to approximate the incurred error."""
+    (traced, on-device), under the Trace convention: re-compress the
+    pre-step state's transmitted message m with the step's key and normalize
+    by the pre-step iterate norm ||Y|| = ||X|| (the baseline analogue of
+    LEAD's Y; LEAD paths record the exact in-step error instead)."""
     comp = getattr(algo, "compressor", None)
     if comp is None:
         return jnp.zeros(())

@@ -1,0 +1,3 @@
+"""Distributed runtime: sharding profiles, the decentralized trainer
+(LEAD / NIDS / DGD / allreduce over ring ppermute gossip with codes on the
+wire), and the serving entry points (prefill / decode)."""

@@ -1,0 +1,94 @@
+"""Serving entry points: prefill and decode over a GSPMD mesh.
+
+Serving runs ONE model (no agent stacking): params replicated over the
+mesh (TP weight sharding slots into serve_param_spec when a profile needs
+it), the batch dim of tokens / KV caches sharded over the "data" axis.
+Each builder returns
+
+    (fn, sds, shardings, cfg)
+
+where `sds` are ShapeDtypeStructs for lowering without allocation (the
+dry-run path) and `shardings` the matching NamedSharding pytrees — the
+contract launch/dryrun.py and the dist tests consume.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding as shr
+from repro.models import transformer as tfm
+
+
+def _replicated(mesh, sds_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, P(*([None] * len(s.shape)))), sds_tree)
+
+
+def _batched(mesh, sds_tree, batch: int):
+    """Shard dim 0 over "data" for leaves carrying the batch dim; replicate
+    scalars/metadata (e.g. the cache position counter)."""
+    def one(s):
+        if len(s.shape) >= 1 and s.shape[0] == batch:
+            return NamedSharding(mesh,
+                                 shr.serve_batch_spec(mesh, len(s.shape), batch))
+        return NamedSharding(mesh, P(*([None] * len(s.shape))))
+    return jax.tree_util.tree_map(one, sds_tree)
+
+
+def make_decode(cfg, mesh, prof: shr.ShardingProfile, shape):
+    """Single-token decode step over a prefilled cache.
+
+    shape: InputShape with global_batch=B and seq_len=cache length."""
+    B, cache_len = shape.global_batch, shape.seq_len
+    key = jax.random.PRNGKey(0)
+    params_sds = jax.eval_shape(lambda k: tfm.init_params(cfg, k), key)
+    cache_sds = jax.eval_shape(lambda: tfm.init_cache(cfg, B, cache_len))
+    sds = {
+        "params": params_sds,
+        "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "cache": cache_sds,
+    }
+    shardings = {
+        "params": _replicated(mesh, params_sds),
+        "token": NamedSharding(mesh, shr.serve_batch_spec(mesh, 2, B)),
+        "cache": _batched(mesh, cache_sds, B),
+    }
+
+    def fn(params, token, cache):
+        return tfm.decode_step(params, cfg, token, cache)
+
+    return fn, sds, shardings, cfg
+
+
+def make_prefill(cfg, mesh, prof: shr.ShardingProfile, shape):
+    """Full-prompt prefill: (last-token logits, populated cache)."""
+    B, S = shape.global_batch, shape.seq_len
+    key = jax.random.PRNGKey(0)
+    params_sds = jax.eval_shape(lambda k: tfm.init_params(cfg, k), key)
+    sds = {
+        "params": params_sds,
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    shardings = {
+        "params": _replicated(mesh, params_sds),
+        "tokens": NamedSharding(mesh, shr.serve_batch_spec(mesh, 2, B)),
+    }
+    needs_memory = cfg.family in ("vlm", "audio")
+    if needs_memory:
+        M = cfg.vis_tokens if cfg.family == "vlm" else cfg.n_audio_frames
+        sds["memory"] = jax.ShapeDtypeStruct((B, M, cfg.d_model), jnp.float32)
+        shardings["memory"] = NamedSharding(
+            mesh, shr.serve_batch_spec(mesh, 3, B))
+
+        def fn(params, tokens, memory):
+            return tfm.prefill(params, cfg, tokens, memory=memory,
+                               cache_len=S)
+    else:
+        def fn(params, tokens):
+            return tfm.prefill(params, cfg, tokens, cache_len=S)
+
+    return fn, sds, shardings, cfg

@@ -1,0 +1,88 @@
+"""Mesh-axis roles and PartitionSpec rules for the distributed runtime.
+
+The decentralized layout has two orthogonal roles:
+
+  * *agent* axes — the decentralized ring.  Each device slice along these
+    axes holds ONE agent's full model replica (its LEAD states ride along
+    with the same leading-axis sharding).  Default profile: every mesh axis
+    except the tensor-parallel one (so ("data",) on a single pod and
+    ("pod", "data") multi-pod — the ring is laid out pod-major, giving
+    exactly two inter-pod edges; see core/gossip.RingGossip).
+  * the *tp* axis ("model") — tensor/sequence parallelism inside one agent.
+    Weights stay replicated over it in the reduced CPU tests; activations
+    are sharded over it when DistConfig.seq_parallel is on (the model's
+    _seq_shard constraint).
+
+The "xxl" profile (deepseek-scale) instead rings agents over "pod" only,
+freeing "data" for FSDP/EP inside an agent.
+
+All rules are *prefix* rules on the stacked layout: every train-state leaf
+and batch leaf carries the agent axis as its leading dimension.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingProfile:
+    agent_axes: Tuple[str, ...]          # mesh axes forming the agent ring
+    tp_axis: Optional[str]               # tensor-parallel axis (or None)
+
+
+def make_profile(cfg, axis_names: Sequence[str]) -> ShardingProfile:
+    names = tuple(axis_names)
+    tp = "model" if "model" in names else None
+    if getattr(cfg, "sharding_profile", "default") == "xxl" and "pod" in names:
+        agents = ("pod",)
+    else:
+        agents = tuple(a for a in names if a != tp) or names[:1]
+    return ShardingProfile(agent_axes=agents, tp_axis=tp)
+
+
+# the mesh the rules resolve against; set once per launch/test before
+# building shardings (mirrors how the launch drivers call us).
+_MESH = None
+
+
+def set_mesh_for_rules(mesh) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def mesh_for_rules():
+    assert _MESH is not None, "call set_mesh_for_rules(mesh) first"
+    return _MESH
+
+
+def train_batch_spec(prof: ShardingProfile, ndim: int = 3) -> P:
+    """Batch leaves are (A, B, S[, ...]): agents sharded, rest replicated."""
+    return P(prof.agent_axes, *([None] * (ndim - 1)))
+
+
+def stacked_leaf_spec(prof: ShardingProfile, ndim: int) -> P:
+    """A train-state leaf stacked to (A, ...): agent axis on dim 0.  Weight
+    dims stay replicated over tp (the reduced test models fit; TP weight
+    sharding slots in here when a profile needs it)."""
+    if ndim == 0:
+        return P()
+    return P(prof.agent_axes, *([None] * (ndim - 1)))
+
+
+def state_shardings_of(mesh, prof: ShardingProfile, sds_tree):
+    """NamedSharding pytree for a stacked train-state ShapeDtypeStruct tree."""
+    def one(sds):
+        return NamedSharding(mesh, stacked_leaf_spec(prof, len(sds.shape)))
+    return jax.tree_util.tree_map(one, sds_tree)
+
+
+def serve_batch_spec(mesh, ndim: int, batch: int) -> P:
+    """Serving tensors are (B, ...): batch over "data" when it divides."""
+    data = mesh.shape.get("data") if "data" in mesh.axis_names else None
+    if ndim >= 1 and data and batch % data == 0:
+        return P("data", *([None] * (ndim - 1)))
+    return P(*([None] * ndim))

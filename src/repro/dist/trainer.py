@@ -1,0 +1,283 @@
+"""Decentralized multi-device trainer: LEAD / NIDS / DGD / allreduce over
+ring ppermute gossip, with codes on the wire.
+
+Layout: every train-state leaf is *stacked* — leading axis A = number of
+agents, sharded over the profile's agent mesh axes (one agent per device
+slice; see dist/sharding.py).  Gradients come from a vmapped AD pass over
+the stacked params (GSPMD parallelizes it along the agent axis); the
+inter-agent communication is a fully-manual shard_map over ALL mesh axes in
+which core/gossip.RingGossip exchanges with the two ring neighbors via
+``jax.lax.ppermute`` — the only collective of an iteration, and the reason
+the lowering contains collective-permute ops.
+
+Codes on the wire (LEAD): the difference Y - H is blockwise-quantized
+per leaf with the Compressor flat protocol (``QuantizePNorm.encode_blocks``,
+core/compression.py) *before* the shard_map; inside it only the int8 code
+planes + per-block f32 scales cross agents (``RingGossip.mix_encoded``
+decodes at the receiver).  With ``wire_pack=True`` the codes additionally
+travel as dense uint32 words (kernels.ops.pack_codes) — the byte-accurate
+ICI payload.
+
+Beyond-paper knobs: ``seq_parallel`` shards the residual stream's sequence
+dim over the tp axis (the model's _seq_shard constraint), ``microbatches``
+re-schedules the gradient pass as an accumulating scan, ``compute_dtype`` /
+``state_dtype`` select bf16 compute/state.
+
+Invariants mirror core/lead.py: 1^T D = 0 to roundoff for any compression
+error (tests/dist_worker.py asserts it after 20 distributed steps), and the
+ring mixing equals the dense ``topology.ring`` matrix multiply
+(nids_equivalence asserts the trajectories match).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core.compression import QuantizePNorm
+from repro.core.gossip import RingGossip
+from repro.core.lead import LEADHyper, _at
+from repro.dist import sharding as shr
+from repro.kernels.ops import pack_codes, unpack_codes
+from repro.models import transformer as tfm
+from repro.optim.optimizers import SGD
+from repro.utils.tree import tree_map, tree_zeros_like
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class DistConfig:
+    """Distributed-run configuration (algorithm + wire + schedule knobs)."""
+    algorithm: str = "lead"              # lead | nids | dgd | allreduce
+    bits: int = 2                        # LEAD quantizer bit-width
+    block: int = 512                     # quantization block (paper: 512)
+    hyper: LEADHyper = LEADHyper(eta=0.03, gamma=1.0, alpha=0.5)
+    optimizer: Any = SGD()
+    seq_parallel: bool = False           # shard seq dim over tp between blocks
+    wire_pack: bool = False              # ship codes as packed uint32 words
+    microbatches: int = 1                # grad accumulation over batch chunks
+    compute_dtype: str = "float32"
+    state_dtype: str = "float32"
+
+    def __post_init__(self):
+        assert self.algorithm in ("lead", "nids", "dgd", "allreduce"), \
+            self.algorithm
+
+
+class TrainState(NamedTuple):
+    """All leaves stacked (A, ...): one slice per agent along the ring."""
+    params: Pytree                       # X — per-agent model replicas
+    h: Pytree                            # LEAD compression reference H
+    hw: Pytree                           # H_w = W H (tracked, no comms)
+    d: Pytree                            # dual variable, in Range(I - W)
+    opt: Any                             # optimizer state (stacked)
+    step: jnp.ndarray
+
+
+def n_agents_of(mesh, prof: shr.ShardingProfile) -> int:
+    return int(np.prod([mesh.shape[a] for a in prof.agent_axes]))
+
+
+def state_shardings(cfg, mesh, prof: shr.ShardingProfile, state_sds):
+    """NamedSharding pytree for a TrainState ShapeDtypeStruct tree."""
+    del cfg
+    return shr.state_shardings_of(mesh, prof, state_sds)
+
+
+def init_train_state(cfg, mesh, prof: shr.ShardingProfile, dc: DistConfig,
+                     key) -> TrainState:
+    """Consensus start: every agent holds the same replica, so H_w = W H = H
+    exactly (W is row-stochastic and all rows are identical) — no init
+    communication needed."""
+    A = n_agents_of(mesh, prof)
+    p0 = tfm.init_params(cfg, key)
+    sd = jnp.dtype(dc.state_dtype)
+
+    def stack(l):
+        l = l.astype(sd) if jnp.issubdtype(l.dtype, jnp.floating) else l
+        return jnp.broadcast_to(l[None], (A,) + l.shape)
+
+    params = tree_map(stack, p0)
+    return TrainState(params=params, h=params, hw=params,
+                      d=tree_zeros_like(params),
+                      opt=dc.optimizer.init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# wire helpers (LEAD difference compression, per leaf)
+# ---------------------------------------------------------------------------
+
+def _leaf_blocks(l: jnp.ndarray, block: int):
+    """Stacked leaf (A, ...) -> ((A, nb, block) f32, d_leaf)."""
+    A = l.shape[0]
+    flat = l.reshape(A, -1).astype(jnp.float32)
+    d_leaf = flat.shape[1]
+    nb = -(-d_leaf // block)
+    pad = nb * block - d_leaf
+    return jnp.pad(flat, ((0, 0), (0, pad))).reshape(A, nb, block), d_leaf
+
+
+def _leaf_unblocks(buf: jnp.ndarray, like: jnp.ndarray) -> jnp.ndarray:
+    A = like.shape[0]
+    flat = buf.reshape(A, -1)[:, :like[0].size]
+    return flat.reshape(like.shape).astype(like.dtype)
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg, mesh, prof: shr.ShardingProfile, dc: DistConfig):
+    """Returns step(state, batch, key) -> (state, metrics).
+
+    batch: {tokens, labels[, memory]} with leading (A, B_local, ...) dims.
+    """
+    cfg_fwd = cfg
+    if dc.seq_parallel and prof.tp_axis and cfg.seq_shard_axis is None:
+        cfg_fwd = dataclasses.replace(cfg, seq_shard_axis=prof.tp_axis)
+    cdt = jnp.dtype(dc.compute_dtype)
+    hyper = dc.hyper
+    ring = RingGossip(axes=prof.agent_axes)
+    spec = P(prof.agent_axes)            # leading agent axis; rest replicated
+    smap = functools.partial(compat.shard_map, mesh=mesh,
+                             axis_names=set(mesh.axis_names), check_vma=False)
+    quantizer = QuantizePNorm(bits=dc.bits, block=dc.block)
+
+    # -- gradients ----------------------------------------------------------
+    def loss_of(p, b):
+        if cdt != jnp.float32:
+            p = tree_map(lambda l: l.astype(cdt)
+                         if jnp.issubdtype(l.dtype, jnp.floating) else l, p)
+        return tfm.loss_fn(p, cfg_fwd, b)[0]
+
+    def agent_grad(p, b):
+        if dc.microbatches > 1:
+            mb = dc.microbatches
+
+            def chunked(l):
+                return l.reshape(mb, l.shape[0] // mb, *l.shape[1:])
+
+            chunks = tree_map(chunked, b)
+
+            def accum(acc, bi):
+                g = jax.grad(loss_of)(p, bi)
+                return tree_map(jnp.add, acc, g), None
+
+            acc, _ = jax.lax.scan(accum, tree_zeros_like(p), chunks)
+            return tree_map(lambda l: l / mb, acc)
+        return jax.grad(loss_of)(p, b)
+
+    # -- communication stages (the only collectives) ------------------------
+    def mix_tree(tree):
+        """W @ tree over the agent ring: uncompressed ppermute exchange."""
+        return smap(ring.mix, in_specs=(spec,), out_specs=spec)(tree)
+
+    def pmean_tree(tree):
+        axis = prof.agent_axes if len(prof.agent_axes) > 1 \
+            else prof.agent_axes[0]
+        return smap(lambda t: tree_map(
+            lambda l: jax.lax.pmean(l, axis), t),
+            in_specs=(spec,), out_specs=spec)(tree)
+
+    def mix_encoded_payloads(payloads):
+        """RingGossip.mix_encoded per leaf: only codes+scales cross agents
+        (packed into uint32 words when wire_pack)."""
+        def body(pls):
+            outs = []
+            for pl in pls:
+                code_shape = pl["code"].shape          # local (1, nb, block)
+
+                def dec(w, shape=code_shape):
+                    code = (unpack_codes(w["packed"], int(np.prod(shape)),
+                                         dc.bits).reshape(shape)
+                            if dc.wire_pack else w["code"])
+                    return quantizer.decode_blocks(
+                        {"code": code, "scale": w["scale"]})
+
+                wire = ({"packed": pack_codes(pl["code"], dc.bits),
+                         "scale": pl["scale"]} if dc.wire_pack else pl)
+                outs.append(ring.mix_encoded(wire, dec))
+            return outs
+        return smap(body, in_specs=(spec,), out_specs=spec)(payloads)
+
+    # -- the step -----------------------------------------------------------
+    def step(state: TrainState, batch: Dict[str, jnp.ndarray], key):
+        eta = _at(hyper.eta, state.step)
+        gamma = _at(hyper.gamma, state.step)
+        alpha = _at(hyper.alpha, state.step)
+
+        g = jax.vmap(agent_grad)(state.params, batch)
+        g = tree_map(lambda l: l.astype(jnp.float32), g)
+        direction, opt_state = dc.optimizer.update(g, state.opt, state.params)
+        gnorm = jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2)
+                             for l in jax.tree_util.tree_leaves(direction)))
+        metrics = {"grad_norm": gnorm}
+
+        x, h, hw, d = state.params, state.h, state.hw, state.d
+
+        if dc.algorithm == "allreduce":
+            g_avg = pmean_tree(direction)
+            x_new = tree_map(lambda xl, gl: xl - eta * gl, x, g_avg)
+            new = TrainState(params=x_new, h=h, hw=hw, d=d, opt=opt_state,
+                             step=state.step + 1)
+            return new, metrics
+
+        if dc.algorithm == "dgd":
+            x_new = tree_map(lambda ml, gl: ml - eta * gl, mix_tree(x),
+                             direction)
+            new = TrainState(params=x_new, h=h, hw=hw, d=d, opt=opt_state,
+                             step=state.step + 1)
+            return new, metrics
+
+        # y = x - eta (g + d)   (paper line 4, NIDS/LEAD shared)
+        y = tree_map(lambda xl, gl, dl: xl - eta * (gl + dl), x, direction, d)
+
+        if dc.algorithm == "nids":
+            my = mix_tree(y)
+            d_new = tree_map(
+                lambda dl, yl, ml: dl + gamma / (2 * eta) * (yl - ml),
+                d, y, my)
+            x_new = tree_map(lambda xl, gl, dl: xl - eta * (gl + dl),
+                             x, direction, d_new)
+            new = TrainState(params=x_new, h=h, hw=hw, d=d_new, opt=opt_state,
+                             step=state.step + 1)
+            return new, metrics
+
+        # -- LEAD: difference compression, codes on the wire ----------------
+        leaves_y, treedef = jax.tree_util.tree_flatten(y)
+        leaves_h = treedef.flatten_up_to(h)
+        keys = jax.random.split(key, max(len(leaves_y), 1))
+        payloads, qh_leaves = [], []
+        for kk, ly, lh in zip(keys, leaves_y, leaves_h):
+            diff, d_leaf = _leaf_blocks(ly - lh.astype(ly.dtype), dc.block)
+            payload, _bits = quantizer.encode_blocks(kk, diff, d_leaf)
+            payloads.append(payload)
+            qh_leaves.append(_leaf_unblocks(
+                quantizer.decode_blocks(payload), ly))
+        wqh_leaves = mix_encoded_payloads(payloads)
+        qh = jax.tree_util.tree_unflatten(treedef, qh_leaves)
+        wqh = jax.tree_util.tree_unflatten(
+            treedef, [_leaf_unblocks(w, ly)
+                      for w, ly in zip(wqh_leaves, leaves_y)])
+
+        yh = tree_map(jnp.add, h, qh)
+        yhw = tree_map(jnp.add, hw, wqh)
+        h_new = tree_map(lambda a, b: (1 - alpha) * a + alpha * b, h, yh)
+        hw_new = tree_map(lambda a, b: (1 - alpha) * a + alpha * b, hw, yhw)
+        d_new = tree_map(
+            lambda dl, a, b: dl + gamma / (2 * eta) * (a - b), d, yh, yhw)
+        x_new = tree_map(lambda xl, gl, dl: xl - eta * (gl + dl),
+                         x, direction, d_new)
+        new = TrainState(params=x_new, h=h_new, hw=hw_new, d=d_new,
+                         opt=opt_state, step=state.step + 1)
+        return new, metrics
+
+    return step

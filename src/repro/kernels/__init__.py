@@ -2,6 +2,7 @@
 
 quantize:     blockwise inf-norm b-bit stochastic quantization (paper Thm 3)
 lead_update:  fused LEAD state update + fused diff-encode (Alg. 1 lines 4-7)
+sparsify:     fused RandK (shared-seed mask) / TopK (threshold+mask) encodes
 ops:          jit'd public wrappers (padding, dither, pytree plumbing)
 dispatch:     backend resolution (interpret vs compiled Pallas)
 ref:          pure-jnp oracles the tests assert against
@@ -35,10 +36,34 @@ flat-buffer LEAD engine in core/engine.py) may stack agents along the row
 axis — ``(n_agents * nb, block)`` — and make a single kernel call.  Zero
 rows are a fixed point of every kernel (codes/scales/updates stay zero),
 which is what makes the zero-padding safe.
+
+Encoded-payload interface (codes on the wire)
+---------------------------------------------
+Every compressor exposes a flat wire path over the same blocked layout
+(core/compression.py): ``encode_blocks(key, (n, nb, block), dim) ->
+(payload, bits)`` / ``decode_blocks(payload)``.  The payload is the ONLY
+thing that may cross agents — the gossip stages (core/gossip.py
+RingGossip.mix_encoded on mesh axes, EncodedRingGossip on the flat agent
+axis) permute payload leaves and decode at the receiver, and `bits` is the
+per-agent wire cost of the actual payload.  The kernels here are the fused
+producers of those payloads:
+
+    QuantizePNorm(p=inf)  lead_update.lead_diff_encode -> {code int8 (rows,
+                          block), scale f32 (rows, 1)}; quantize.decode at
+                          the receiver; ops.pack_codes turns the int8 lanes
+                          into the dense (bits+1)-bit uint32 wire words.
+    RandK                 sparsify.randk_encode -> {values f32}: keep-mask
+                          u < ratio computed in-kernel from the shared-seed
+                          dither plane; no indices travel.
+    TopK                  sparsify.mask_apply  -> {values f32}: applies the
+                          exact-k mask built from jax.lax.top_k indices
+                          (ties must not inflate the payload past the k
+                          values the accounting charges).
 """
-from repro.kernels import dispatch, ops, ref
+from repro.kernels import dispatch, ops, ref, sparsify
 from repro.kernels.dispatch import default_backend, resolve_backend
 from repro.kernels.ops import (
     lead_diff_encode_flat, lead_update_flat, pack_codes, quantize_decode,
     quantize_encode, quantize_roundtrip, unpack_codes,
 )
+from repro.kernels.sparsify import mask_apply, randk_encode

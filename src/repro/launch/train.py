@@ -22,9 +22,10 @@ import time
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import AxisType, NamedSharding
+from jax.sharding import NamedSharding
 
 from repro import checkpoint as ckpt
+from repro.compat import AxisType, make_mesh, set_mesh
 from repro.configs.registry import get_config
 from repro.core.lead import LEADHyper
 from repro.data.synthetic import LMStreamConfig, lm_batch, stub_memory
@@ -64,8 +65,8 @@ def main():
     else:
         shape = tuple(int(x) for x in (args.mesh_shape or "4,2").split(","))
         axes = ("pod", "data", "model")[-len(shape):]
-        mesh = jax.make_mesh(shape, axes,
-                             axis_types=(AxisType.Auto,) * len(shape))
+        mesh = make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(shape))
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -83,7 +84,7 @@ def main():
     key = jax.random.PRNGKey(0)
     state_sds = jax.eval_shape(lambda k: init_train_state(cfg, mesh, prof, dc, k), key)
     shardings = state_shardings(cfg, mesh, prof, state_sds)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         state = jax.jit(lambda k: init_train_state(cfg, mesh, prof, dc, k),
                         out_shardings=shardings)(key)
         start = 0

@@ -29,11 +29,9 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-try:                                    # jax >= 0.4.35 top-level alias
-    from jax import shard_map
-except ImportError:                     # older jax: experimental namespace
-    from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import axis_size, shard_map
 
 
 def _slots(ids, n_bins, cap_slots):
@@ -52,8 +50,8 @@ def _moe_ep_body(x_loc, router, wg, wu, wd, *, top_k, cap, ep_axis, tp_axis,
     router (d_loc, E)         wg/wu (E_loc, d, f_loc)   wd (E_loc, f_loc, d)
     """
     B, S, d_loc = x_loc.shape
-    nsh = jax.lax.axis_size(ep_axis)
-    ntp = jax.lax.axis_size(tp_axis)
+    nsh = axis_size(ep_axis)
+    ntp = axis_size(tp_axis)
     E_loc = wg.shape[0]
 
     # 1. gather expert weights over TP once (amortized over all chunks).

@@ -78,6 +78,48 @@ def test_topk_keeps_largest(key):
     assert bool(jnp.all(jnp.abs(x)[kept] >= thresh))
 
 
+def test_topk_tied_magnitudes_keep_exactly_k(key):
+    """Regression: tied |x| values must not inflate the kept count past the
+    k entries wire_bits charges (a `|x| >= thresh` mask keeps every tie)."""
+    t = TopK(ratio=0.1)
+    # 50 entries tied at |x| = 1, the rest strictly smaller: a threshold
+    # mask would keep all 50; exact-k keeps 10.
+    x = jnp.concatenate([jnp.ones(25), -jnp.ones(25),
+                         0.5 * jnp.ones(50)])
+    xh = t.compress(key, x)
+    kept = int(jnp.sum(jnp.abs(xh) > 0))
+    k = max(1, int(x.shape[0] * t.ratio))
+    assert kept == k, (kept, k)
+    assert t.wire_bits(x.shape[0]) == k * (32 + np.log2(100))
+    # kept entries are all from the tied-max set
+    assert bool(jnp.all(jnp.abs(xh)[jnp.abs(xh) > 0] == 1.0))
+
+    # all-tied input, ragged k
+    x2 = jnp.ones(37)
+    xh2 = TopK(ratio=0.2).compress(key, x2)
+    assert int(jnp.sum(jnp.abs(xh2) > 0)) == max(1, int(37 * 0.2))
+
+
+def test_encode_blocks_matches_compress_rows(key):
+    """Flat wire path == tree path: encode_blocks/decode_blocks over the
+    blocked (n, nb, block) layout reproduce vmap'd compress() on the logical
+    rows, with the shared per-agent key split."""
+    n, d, block = 4, 700, 512            # ragged second block
+    nb = 2
+    x = jax.random.normal(key, (n, d))
+    buf = jnp.pad(x, ((0, 0), (0, nb * block - d))).reshape(n, nb, block)
+    from repro.core.compression import RandK, TopK as TK
+    for comp in (QuantizePNorm(bits=2, block=block), RandK(ratio=0.25),
+                 TK(ratio=0.1), Identity()):
+        keys = jax.random.split(key, n)
+        tree = jax.vmap(comp.compress)(keys, x)
+        payload, bits = comp.encode_blocks(key, buf, d)
+        flat = comp.decode_blocks(payload).reshape(n, -1)[:, :d]
+        np.testing.assert_allclose(np.asarray(flat), np.asarray(tree),
+                                   atol=1e-6, err_msg=type(comp).__name__)
+        assert float(bits) > 0
+
+
 def test_identity_exact(key):
     x = jax.random.normal(key, (77,))
     assert bool(jnp.all(Identity().compress(key, x) == x))

@@ -20,7 +20,7 @@ import numpy as np
 import pytest
 
 from repro.core import lead as lead_mod, topology
-from repro.core.compression import Identity, QuantizePNorm
+from repro.core.compression import Identity, QuantizePNorm, RandK, TopK
 from repro.core.convex import LinearRegression
 from repro.core.engine import FlatLEADEngine, engine_for, fast_uniform
 from repro.core.gossip import DenseGossip
@@ -35,6 +35,8 @@ COMPRESSORS = {
     "identity": Identity(),
     "2bit": QuantizePNorm(bits=2, block=512),
     "4bit": QuantizePNorm(bits=4, block=512),
+    "randk": RandK(ratio=0.25),
+    "topk": TopK(ratio=0.1),
 }
 TOPOLOGIES = {
     "ring": topology.ring(N),
@@ -92,7 +94,7 @@ def test_flat_step_equals_tree_step_along_trajectory(comp_name, topo):
 
 
 @pytest.mark.parametrize("topo", sorted(TOPOLOGIES))
-@pytest.mark.parametrize("comp_name", ["identity", "2bit"])
+@pytest.mark.parametrize("comp_name", ["identity", "2bit", "randk", "topk"])
 def test_flat_trajectory_equals_tree_trajectory(comp_name, topo):
     """Paper settings: the two engines' free-running 20-step trajectories
     coincide (atol 1e-5) — the flat path is a drop-in replacement."""
@@ -181,17 +183,166 @@ def test_fast_uniform_distribution():
     assert abs(corr) < 0.01
 
 
-def test_unsupported_compressor_raises():
-    from repro.core.compression import TopK
+def test_engine_for_covers_every_shipped_compressor():
+    """The NotImplementedError wall is gone: every shipped compressor gets a
+    flat engine (only objects without the wire protocol are rejected)."""
+    W = jnp.asarray(topology.ring(4))
+    for comp in (None, Identity(), QuantizePNorm(bits=2),
+                 QuantizePNorm(bits=3, p=2.0), RandK(ratio=0.3),
+                 TopK(ratio=0.2)):
+        eng = engine_for(W, comp, 64)
+        assert isinstance(eng, FlatLEADEngine)
+
+    class NotACompressor:
+        pass
+
     with pytest.raises(NotImplementedError):
-        engine_for(jnp.asarray(topology.ring(4)), TopK(ratio=0.1), 64)
+        engine_for(W, NotACompressor(), 64)
+
+
+def test_encoded_ring_gossip_matches_dense_gossip():
+    """gossip='ring' (payload travels, decode at the receiver) computes the
+    same step as gossip='dense' (W @ decoded) on the uniform ring.  From any
+    common state along a real trajectory the two steps agree to ATOL (the
+    encode stage is identical — same dither — so only the mixing's summation
+    order separates them), and the free-running encoded trajectory converges
+    to the same optimum."""
+    key, prob, gossip, hyper = _setup(TOPOLOGIES["ring"])
+    comp = QuantizePNorm(bits=2, block=512)
+    eng_d = engine_for(gossip.W, comp, D, gossip="dense")
+    eng_r = engine_for(gossip.W, comp, D, gossip="ring")
+    step_d = jax.jit(lambda s, g, k: eng_d.step(s, g, k, hyper))
+    step_r = jax.jit(lambda s, g, k: eng_r.step(s, g, k, hyper))
+
+    x0 = jnp.zeros((N, D))
+    g0 = prob.full_grad(x0)
+    st = eng_d.init(x0, g0, hyper)
+    for k in range(STEPS):
+        kk = jax.random.fold_in(key, k)
+        g = prob.full_grad(eng_d.unblockify(st.x))
+        st_d, cerr_d = step_d(st, g, kk)
+        st_r, cerr_r = step_r(st, g, kk)
+        dev = max(float(jnp.max(jnp.abs(getattr(st_r, f) - getattr(st_d, f))))
+                  for f in ("x", "h", "hw", "d"))
+        assert dev <= ATOL, f"step {k}: max deviation {dev}"
+        np.testing.assert_allclose(float(cerr_r), float(cerr_d), atol=1e-5)
+        st = st_d
+
+    # free-running encoded-gossip LEAD reaches the optimum through run()
+    prob_s = LinearRegression.generate(key, n_agents=8, m=50, d=40)
+    gossip_s = DenseGossip(W=jnp.asarray(topology.ring(8)))
+    tr = run(LEADSim(gossip=gossip_s, compressor=comp, eta=0.1, engine="flat",
+                     engine_gossip="ring"), prob_s, prob_s.x_star, iters=200)
+    assert tr.dist[-1] < 1e-5
+
+
+def test_ring_gossip_rejects_non_ring_w():
+    with pytest.raises(AssertionError):
+        engine_for(jnp.asarray(topology.fully_connected(4)),
+                   QuantizePNorm(bits=2), 64, gossip="ring")
+
+
+@pytest.mark.parametrize("n", [1, 2, 3])
+def test_encoded_ring_gossip_degenerate_rings(n):
+    """Regression: n=2 has ONE ring neighbor (both shifts deliver the same
+    agent — naive left+right double-counts it) and n=1 has none; mix_encoded
+    must equal the dense W @ x for topology.ring(n)."""
+    from repro.core.gossip import EncodedRingGossip
+    W = jnp.asarray(topology.ring(n), jnp.float32)
+    ring = EncodedRingGossip.weights_from(W)
+    x = jnp.arange(1.0, n + 1.0)[:, None] * jnp.asarray([1.0, -2.0])
+    got = ring.mix_encoded({"values": x}, lambda pl: pl["values"])
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(jnp.tensordot(W, x, axes=([1], [0]))),
+                               rtol=1e-6)
+
+
+def test_flat_sparsifiers_run_on_interpret_backend():
+    """Regression: TopK/RandK flat encodes must run on the non-jnp kernel
+    backends too (the tile must fit the engine's row count)."""
+    W = jnp.asarray(topology.ring(8))
+    hyper = LEADHyper(eta=0.05)
+    key = jax.random.PRNGKey(0)
+    x0 = jax.random.normal(key, (8, 4096))
+    g0 = jax.random.normal(jax.random.fold_in(key, 1), (8, 4096))
+    for comp in (TopK(ratio=0.1), RandK(ratio=0.25)):
+        eng = engine_for(W, comp, 4096, interpret=True)
+        st = eng.init(x0, g0, hyper)
+        st, _, bits = eng.step_wire(st, g0, key, hyper)
+        assert bool(jnp.all(jnp.isfinite(st.x))) and float(bits) > 0
+
+
+@pytest.mark.parametrize("gossip", ["dense", "ring"])
+def test_payload_bits_match_wire_bits(gossip):
+    """Per-step wire bits computed from the actual payload agree with the
+    static wire_bits(d) accounting: exactly for the deterministic-size
+    operators, statistically for RandK's data-dependent payload."""
+    key, prob, gs, hyper = _setup(TOPOLOGIES["ring"])
+    x0 = jax.random.normal(key, (N, D))
+    g0 = prob.full_grad(x0)
+
+    def bits_of(comp):
+        eng = engine_for(gs.W, comp, D, gossip=gossip)
+        st = eng.init(x0, g0, hyper)
+        _, _, bits = jax.jit(lambda s, g, k: eng.step_wire(s, g, k, hyper))(
+            st, g0, key)
+        return float(bits)
+
+    for comp in (Identity(), QuantizePNorm(bits=2, block=512),
+                 QuantizePNorm(bits=4, block=512), TopK(ratio=0.1)):
+        assert bits_of(comp) == pytest.approx(comp.wire_bits(D))
+
+    ratio = 0.25
+    got = bits_of(RandK(ratio=ratio))
+    expect = RandK(ratio=ratio).wire_bits(D)      # = ratio * D * 32
+    sd = 32.0 * np.sqrt(D * ratio * (1 - ratio) / N)   # mean over N agents
+    assert abs(got - expect) < 5 * sd
+
+
+def test_simulator_accumulates_actual_payload_bits():
+    """run() x-axis: the flat engine's bits trace is the cumulative sum of
+    actual payload sizes — for RandK it differs step to step, for the
+    quantizer it equals the static estimate exactly."""
+    key = jax.random.PRNGKey(0)
+    prob = LinearRegression.generate(key, n_agents=8, m=50, d=40)
+    gossip = DenseGossip(W=jnp.asarray(topology.ring(8)))
+
+    q2 = QuantizePNorm(bits=2)
+    tr = run(LEADSim(gossip=gossip, compressor=q2, eta=0.1, engine="flat"),
+             prob, prob.x_star, iters=10)
+    np.testing.assert_allclose(
+        tr.bits_per_agent, (np.arange(10) + 1) * q2.wire_bits(40))
+
+    rk = RandK(ratio=0.25)
+    tr_rk = run(LEADSim(gossip=gossip, compressor=rk, eta=0.05, engine="flat"),
+                prob, prob.x_star, iters=10)
+    per_step = np.diff(np.concatenate([[0.0], tr_rk.bits_per_agent]))
+    assert np.all(per_step >= 0)
+    assert len(np.unique(per_step)) > 1, "RandK payload should vary per step"
+    assert abs(per_step.mean() - rk.wire_bits(40)) < 0.5 * rk.wire_bits(40)
+
+
+def test_record_every_gated_metrics_match_dense_trace():
+    """record_every > 1 (lax.cond-gated metric pass) records exactly the
+    rows the dense trace records at those iterations."""
+    key = jax.random.PRNGKey(0)
+    prob = LinearRegression.generate(key, n_agents=8, m=50, d=40)
+    gossip = DenseGossip(W=jnp.asarray(topology.ring(8)))
+    sim = LEADSim(gossip=gossip, compressor=QuantizePNorm(bits=2), eta=0.1,
+                  engine="flat")
+    tr1 = run(sim, prob, prob.x_star, iters=20, record_every=1)
+    tr5 = run(sim, prob, prob.x_star, iters=20, record_every=5)
+    np.testing.assert_allclose(tr5.dist, tr1.dist[::5], rtol=1e-6)
+    np.testing.assert_allclose(tr5.loss, tr1.loss[::5], rtol=1e-6)
+    np.testing.assert_allclose(tr5.bits_per_agent, tr1.bits_per_agent[::5])
 
 
 def test_blockify_roundtrip_and_padding_fixed_point():
     """unblockify(blockify(x)) == x, and padded tail rows stay exactly zero
     through a step (the layout-contract fixed point)."""
     W = jnp.asarray(topology.ring(4))
-    eng = FlatLEADEngine(W=W, dim=700, bits=2)   # ragged: 700 = 512 + 188
+    eng = FlatLEADEngine(W=W, dim=700,
+                         compressor=QuantizePNorm(bits=2))  # 700 = 512 + 188
     key = jax.random.PRNGKey(3)
     x = jax.random.normal(key, (4, 700))
     np.testing.assert_array_equal(np.asarray(eng.unblockify(eng.blockify(x))),

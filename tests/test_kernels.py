@@ -75,6 +75,53 @@ def test_lead_diff_encode_matches_composition(n, key):
     np.testing.assert_allclose(np.asarray(scale), np.asarray(scale2), rtol=1e-5)
 
 
+@pytest.mark.parametrize("ratio", [0.1, 0.5])
+def test_randk_encode_matches_ref(ratio, key):
+    """Interpreted sparsify.randk_encode == the jnp oracle (fused in-kernel
+    mask from the dither plane)."""
+    from repro.kernels import sparsify
+    nb, block = 4, 512
+    x = jax.random.normal(key, (nb, block))
+    u = jax.random.uniform(jax.random.fold_in(key, 1), (nb, block))
+    got = sparsify.randk_encode(x, u, ratio=ratio, tile_b=4, interpret=True)
+    want = ref.randk_encode_ref(x, u, ratio, 1.0 / ratio)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+    # unkept entries are exactly zero; kept are rescaled
+    kept = np.asarray(u) < ratio
+    assert np.all(np.asarray(got)[~kept] == 0.0)
+
+
+def test_mask_apply_matches_ref(key):
+    from repro.kernels import sparsify
+    nb, block = 4, 512
+    x = jax.random.normal(key, (nb, block))
+    mask = (jax.random.uniform(jax.random.fold_in(key, 2),
+                               (nb, block)) < 0.3).astype(jnp.float32)
+    got = sparsify.mask_apply(x, mask, tile_b=4, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.mask_apply_ref(x, mask)))
+
+
+@pytest.mark.parametrize("nb", [3, 6, 64])
+def test_sparsify_fits_tile_to_arbitrary_row_counts(nb, key):
+    """Regression: row counts that don't divide the default tile must not
+    crash the non-jnp backends (callers outside the engine hand arbitrary
+    nb; the tile auto-shrinks to a divisor)."""
+    from repro.kernels import sparsify
+    block = 512
+    x = jax.random.normal(key, (nb, block))
+    u = jax.random.uniform(jax.random.fold_in(key, 1), (nb, block))
+    got = sparsify.randk_encode(x, u, ratio=0.3, interpret=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.randk_encode_ref(x, u, 0.3,
+                                                               1 / 0.3)),
+                               rtol=1e-6)
+    m = (u < 0.5).astype(jnp.float32)
+    got2 = sparsify.mask_apply(x, m, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got2),
+                                  np.asarray(ref.mask_apply_ref(x, m)))
+
+
 @settings(max_examples=15, deadline=None)
 @given(n=st.integers(1, 5000), bits=st.sampled_from([1, 2, 3, 4]),
        seed=st.integers(0, 2**29))
