@@ -1,0 +1,103 @@
+"""Baseline-family step latency: tree references vs flat engines.
+
+The Fig. 2-4 comparison harness runs every paper algorithm; this bench
+records, per algorithm at the acceptance point (d=2^16, n=8):
+
+  * step_tree_<algo>        the core/baselines.py reference step, jitted and
+                            driven under an 8-iteration lax.scan (the same
+                            driver run() uses — isolates the iteration map
+                            from python dispatch).
+  * step_flat_<algo>_dense  the flat engine (core/engines/baselines.py) in
+                            the kernels' (n, nb, block) layout, dither="fast"
+                            production mode, dense gossip; derived carries
+                            speedup_vs_tree and the actual payload
+                            bits/element from step_with_wire.
+  * step_flat_<algo>_ring   the same engine with EncodedRingGossip — only
+                            the encoded payload crosses agents.
+
+Tree and flat measurements are interleaved rep by rep so machine-throughput
+drift on shared boxes affects both equally (best-of over all reps).
+
+Writes BENCH_baselines.json to the CWD when run directly; under
+benchmarks/run.py --json it is collected like every other module.
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, peek_rows, write_json
+from repro.core import topology
+from repro.core.baselines import (CHOCO_SGD, D2, DCD_SGD, DGD, EXTRA, NIDS,
+                                  DeepSqueeze, QDGD)
+from repro.core.compression import QuantizePNorm
+from repro.core.engines import flat_twin
+from repro.core.gossip import DenseGossip
+
+D, N, K = 2 ** 16, 8, 8
+REPS = 14
+
+
+def _algos(gossip):
+    q2 = QuantizePNorm(bits=2, block=512)
+    return {
+        "choco": CHOCO_SGD(gossip=gossip, compressor=q2, eta=0.05, gamma=0.8),
+        "deepsqueeze": DeepSqueeze(gossip=gossip, compressor=q2, eta=0.05,
+                                   gamma=0.2),
+        "qdgd": QDGD(gossip=gossip, compressor=q2, eta=0.05, gamma=0.2),
+        "dcd": DCD_SGD(gossip=gossip, compressor=q2, eta=0.05),
+        "dgd": DGD(gossip=gossip, eta=0.05),
+        "nids": NIDS(gossip=gossip, eta=0.05),
+        "extra": EXTRA(gossip=gossip, eta=0.05),
+        "d2": D2(gossip=gossip, eta=0.05),
+    }
+
+
+def _scan_stepper(step, state, g, key):
+    """Jit an 8-step scan of the bare iteration map (fresh key per step)."""
+    def body(carry, i):
+        return step(carry, g, jax.random.fold_in(key, i)), None
+
+    f = jax.jit(lambda s: jax.lax.scan(body, s, jnp.arange(K))[0])
+    jax.block_until_ready(f(state))          # compile + warm
+    return f
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    gossip = DenseGossip(W=jnp.asarray(topology.ring(N)))
+    x0 = jax.random.normal(key, (N, D))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (N, D))
+
+    for name, tree in _algos(gossip).items():
+        st_t = tree.init(x0, g, key)
+        fns = {"tree": (_scan_stepper(tree.step, st_t, g, key), st_t)}
+        bits = {}
+        for mode in ("dense", "ring"):
+            eng = dataclasses.replace(flat_twin(tree, D, gossip=mode),
+                                      dither="fast")
+            st_f = eng.init(x0, g, key)
+            gb = eng.blockify(g)
+            fns[mode] = (_scan_stepper(eng.step, st_f, gb, key), st_f)
+            bits[mode] = float(jax.jit(eng.step_with_wire)(st_f, gb, key)[2])
+
+        best = {k: float("inf") for k in fns}
+        for _ in range(REPS):                 # interleave against drift
+            for k, (f, st) in fns.items():
+                t0 = time.perf_counter()
+                jax.block_until_ready(f(st))
+                best[k] = min(best[k], time.perf_counter() - t0)
+        us = {k: v / K * 1e6 for k, v in best.items()}
+
+        emit(f"baselines/step_tree_{name}_d{D}_n{N}", us["tree"],
+             "pytree reference under scan")
+        for mode in ("dense", "ring"):
+            emit(f"baselines/step_flat_{name}_{mode}_d{D}_n{N}", us[mode],
+                 f"speedup_vs_tree={us['tree'] / us[mode]:.2f};"
+                 f"payload_bits_per_elem={bits[mode] / D:.3f}")
+
+
+if __name__ == "__main__":
+    main()
+    write_json("BENCH_baselines.json", "baselines", peek_rows())

@@ -67,7 +67,7 @@ def bench_bare_steps():
             eng = engine_for(gossip.W, comp, d, dither="fast")
             st_f = eng.init(x0, g, HYPER)
             gb = eng.blockify(g)       # native layout in, native layout out
-            flat = jax.jit(lambda s, gg, k: eng.step(s, gg, k, HYPER)[0])
+            flat = jax.jit(lambda s, gg, k: eng.step(s, gg, k, HYPER))
             us_f = _best(flat, iters, st_f, gb, key)
 
             emit(f"lead_step/step_tree_d{d}_n{n}", us_t, "pytree+threefry")
@@ -142,7 +142,8 @@ def bench_driven(iters=6):
         state, k = carry
         k, sub = jax.random.split(k)
         g = state.x - Tb                                   # blocked gradients
-        new, cerr = eng.step(state, g, jax.random.fold_in(sub, 2), HYPER)
+        new, cerr, _ = eng.step_wire(state, g, jax.random.fold_in(sub, 2),
+                                     HYPER)
         X = new.x
         dist = jnp.mean(jnp.sum((X - xs_b[None]) ** 2, (1, 2)))
         xbar = jnp.mean(X, 0, keepdims=True)
@@ -194,6 +195,9 @@ def bench_flat_operators():
         "quant2": QuantizePNorm(bits=2, block=512),
         "randk25": RandK(ratio=0.25),
         "topk10": TopK(ratio=0.1),
+        # sampled-quantile threshold: O(d/block) per block instead of a full
+        # per-agent top_k over d (the ROADMAP's blockwise approximate mode)
+        "topk10approx": TopK(ratio=0.1, approx_threshold=True),
     }
     for name, comp in operators.items():
         for mode in ("dense", "ring"):

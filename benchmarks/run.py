@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
     bench_nn            Fig 4 proxy (non-convex LM, hom/het)
     bench_roofline      §Roofline aggregation from reports/dryrun
     bench_lead_step     flat-buffer engine vs pytree path step latency
+    bench_baselines     flat engine family vs tree baselines (Fig 2-4 sweep)
 
 ``--json OUT``: additionally write one machine-readable ``BENCH_<name>.json``
 per executed module into directory OUT (rows: name, us_per_call, derived) so
@@ -18,8 +19,8 @@ import os
 import sys
 import traceback
 
-from benchmarks import (bench_compression, bench_lead_step, bench_linreg,
-                        bench_logreg, bench_nn, bench_roofline,
+from benchmarks import (bench_baselines, bench_compression, bench_lead_step,
+                        bench_linreg, bench_logreg, bench_nn, bench_roofline,
                         bench_sensitivity, bench_theory)
 from benchmarks.common import drain_rows, write_json
 
@@ -32,6 +33,7 @@ ALL = {
     "theory": bench_theory.main,
     "roofline": bench_roofline.main,
     "lead_step": bench_lead_step.main,
+    "baselines": bench_baselines.main,
 }
 
 

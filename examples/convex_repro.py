@@ -14,22 +14,29 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import topology
-from repro.core.baselines import CHOCO_SGD, DGD, NIDS, DeepSqueeze, QDGD
 from repro.core.compression import QuantizePNorm
 from repro.core.convex import LinearRegression, LogisticRegression
+from repro.core.engines import engine_for
 from repro.core.gossip import DenseGossip
 from repro.core.simulator import LEADSim, run
 
 
-def algos(gossip, eta):
+def algos(gossip, d, eta):
+    """The Fig. 2 sweep, every algorithm on the flat engine registry
+    (core/engines): scan-compiled fast path, Trace.bits_per_agent from the
+    actual encoded payloads."""
     q2 = QuantizePNorm(bits=2, block=512)
+    W = gossip.W
     return {
-        "LEAD": LEADSim(gossip=gossip, compressor=q2, eta=eta, gamma=1.0, alpha=0.5),
-        "NIDS": NIDS(gossip=gossip, eta=eta),
-        "DGD": DGD(gossip=gossip, eta=eta),
-        "CHOCO-SGD": CHOCO_SGD(gossip=gossip, compressor=q2, eta=eta, gamma=0.6),
-        "DeepSqueeze": DeepSqueeze(gossip=gossip, compressor=q2, eta=eta, gamma=0.2),
-        "QDGD": QDGD(gossip=gossip, compressor=q2, eta=eta, gamma=0.2),
+        "LEAD": LEADSim(gossip=gossip, compressor=q2, eta=eta, gamma=1.0,
+                        alpha=0.5, engine="flat"),
+        "NIDS": engine_for(W, None, d, algorithm="nids", eta=eta),
+        "DGD": engine_for(W, None, d, algorithm="dgd", eta=eta),
+        "CHOCO-SGD": engine_for(W, q2, d, algorithm="choco", eta=eta,
+                                gamma=0.6),
+        "DeepSqueeze": engine_for(W, q2, d, algorithm="deepsqueeze", eta=eta,
+                                  gamma=0.2),
+        "QDGD": engine_for(W, q2, d, algorithm="qdgd", eta=eta, gamma=0.2),
     }
 
 
@@ -51,7 +58,8 @@ def main():
     experiments["logreg_hom"] = (hom, hom.solve_x_star(), False)
 
     for exp, (prob, x_star, stoch) in experiments.items():
-        for name, algo in algos(gossip, eta=0.05 if exp == "linreg" else 0.1).items():
+        for name, algo in algos(gossip, prob.d,
+                                eta=0.05 if exp == "linreg" else 0.1).items():
             tr = run(algo, prob, x_star, iters=args.iters, key=key,
                      stochastic=stoch)
             path = os.path.join(args.out, f"{exp}__{name}.csv")

@@ -16,7 +16,21 @@ Implemented (source in brackets):
 
 Each algorithm exposes  init(x0, g0, key) -> state  and
 step(state, g, key) -> state, where g = grad F(state.x; xi).  A uniform
-`state.x` field holds the current iterates so drivers can be generic.
+`state.x` field holds the current iterates so drivers can be generic.  The
+compressed algorithms additionally expose
+step_with_metrics(state, g, key) -> (state, comp_err) with comp_err the
+*exact in-step* relative compression error of the quantity the algorithm
+transmitted this iteration (the Trace convention in core/simulator.py) —
+CHOCO: x_half - xhat, DeepSqueeze: the error-compensated v = x - eta g + e,
+QDGD: x, DCD: the post-gossip x - xhat.
+
+Engine-family representation: every algorithm here also has a *flat twin*
+in core/engines/baselines.py running on the scan-compiled codes-on-the-wire
+substrate — state in the kernels' (n, nb, block) block layout, the encoded
+payload as the only cross-agent traffic (dense or ring gossip), and actual
+per-step payload bits.  The classes in this module are the tree references
+those engines are tested against (tests/test_flat_baselines.py); build a
+twin with core.engines.flat_twin(algo, dim).
 """
 from __future__ import annotations
 
@@ -26,6 +40,7 @@ from typing import Any, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.compression import rel_err as _rel_err
 from repro.core.gossip import DenseGossip
 
 
@@ -147,14 +162,21 @@ class CHOCO_SGD:
         return HatState(x=x0, xhat=xhat, xhat_w=self.gossip.mix(xhat),
                         k=jnp.zeros((), jnp.int32))
 
-    def step(self, s: HatState, g, key):
+    def step_with_metrics(self, s: HatState, g, key):
+        """(new_state, comp_err): comp_err = ||q - (x_half - xhat)|| /
+        ||x_half||, the error of the message this step transmitted."""
         x_half = s.x - self.eta * g
+        diff = x_half - s.xhat
         keys = jax.random.split(key, s.x.shape[0])
-        q = jax.vmap(self.compressor.compress)(keys, x_half - s.xhat)
+        q = jax.vmap(self.compressor.compress)(keys, diff)
         xhat = s.xhat + q
         xhat_w = s.xhat_w + self.gossip.mix(q)
         x = x_half + self.gamma * (xhat_w - xhat)
-        return HatState(x=x, xhat=xhat, xhat_w=xhat_w, k=s.k + 1)
+        new = HatState(x=x, xhat=xhat, xhat_w=xhat_w, k=s.k + 1)
+        return new, _rel_err(q, diff, x_half)
+
+    def step(self, s: HatState, g, key):
+        return self.step_with_metrics(s, g, key)[0]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -173,13 +195,19 @@ class DeepSqueeze:
     def init(self, x0, g0, key):
         return ErrorState(x=x0, e=jnp.zeros_like(x0), k=jnp.zeros((), jnp.int32))
 
-    def step(self, s: ErrorState, g, key):
+    def step_with_metrics(self, s: ErrorState, g, key):
+        """(new_state, comp_err): the transmitted message is the
+        error-compensated v = x - eta g + e, NOT the raw iterate —
+        comp_err = ||c - v|| / ||v||."""
         v = s.x - self.eta * g + s.e
         keys = jax.random.split(key, s.x.shape[0])
         c = jax.vmap(self.compressor.compress)(keys, v)
         e = v - c
         x = c + self.gamma * (self.gossip.mix(c) - c)
-        return ErrorState(x=x, e=e, k=s.k + 1)
+        return ErrorState(x=x, e=e, k=s.k + 1), _rel_err(c, v, v)
+
+    def step(self, s: ErrorState, g, key):
+        return self.step_with_metrics(s, g, key)[0]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -197,11 +225,16 @@ class QDGD:
     def init(self, x0, g0, key):
         return SimpleState(x=x0, k=jnp.zeros((), jnp.int32))
 
-    def step(self, s: SimpleState, g, key):
+    def step_with_metrics(self, s: SimpleState, g, key):
+        """(new_state, comp_err): comp_err = ||q - x|| / ||x|| for the
+        directly-transmitted quantized model."""
         keys = jax.random.split(key, s.x.shape[0])
         q = jax.vmap(self.compressor.compress)(keys, s.x)
         x = s.x + self.gamma * (self.gossip.mix(q) - q) - self.eta * g
-        return SimpleState(x=x, k=s.k + 1)
+        return SimpleState(x=x, k=s.k + 1), _rel_err(q, s.x, s.x)
+
+    def step(self, s: SimpleState, g, key):
+        return self.step_with_metrics(s, g, key)[0]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -220,10 +253,17 @@ class DCD_SGD:
         return HatState(x=x0, xhat=x0, xhat_w=self.gossip.mix(x0),
                         k=jnp.zeros((), jnp.int32))
 
-    def step(self, s: HatState, g, key):
+    def step_with_metrics(self, s: HatState, g, key):
+        """(new_state, comp_err): comp_err = ||q - (x+ - xhat)|| / ||x+||
+        for the compressed difference of the post-gossip iterate."""
         x = s.xhat_w - self.eta * g
+        diff = x - s.xhat
         keys = jax.random.split(key, s.x.shape[0])
-        q = jax.vmap(self.compressor.compress)(keys, x - s.xhat)
+        q = jax.vmap(self.compressor.compress)(keys, diff)
         xhat = s.xhat + q
         xhat_w = s.xhat_w + self.gossip.mix(q)
-        return HatState(x=x, xhat=xhat, xhat_w=xhat_w, k=s.k + 1)
+        new = HatState(x=x, xhat=xhat, xhat_w=xhat_w, k=s.k + 1)
+        return new, _rel_err(q, diff, x)
+
+    def step(self, s: HatState, g, key):
+        return self.step_with_metrics(s, g, key)[0]

@@ -57,6 +57,18 @@ import jax.numpy as jnp
 from repro.utils.tree import Pytree
 
 
+def rel_err(q: jnp.ndarray, target: jnp.ndarray,
+            ref: jnp.ndarray) -> jnp.ndarray:
+    """||q - target|| / ||ref||: relative compression error of a transmitted
+    message `target` with estimate `q`, normalized by the pre-communication
+    iterate `ref` that carries it.  The single source of the Trace comp_err
+    convention (core/simulator.py), shared by the tree baselines
+    (core/baselines.py) and the flat engine family (core/engines/) so their
+    traces stay comparable to 1e-5."""
+    return (jnp.linalg.norm(jnp.ravel(q - target))
+            / (jnp.linalg.norm(jnp.ravel(ref)) + 1e-12))
+
+
 def _block_view(x: jnp.ndarray, block: int):
     """Pad a flattened array to a multiple of `block` and reshape to (nb, block)."""
     flat = jnp.ravel(x)
@@ -203,8 +215,21 @@ class TopK:
     Exactly k entries are kept: the mask comes from jax.lax.top_k *indices*
     (a magnitude threshold `|x| >= kth` would keep every tied entry, sending
     more than the k values wire_bits charges).
+
+    approx_threshold=True switches the *flat* path (encode_blocks) to a
+    sampled-quantile threshold: instead of a per-agent lax.top_k over all d
+    elements (O(d log d), the dominant cost of the flat TopK step — see
+    bench_lead_step/step_flat_topk*), each agent draws sample_per_block
+    random elements per logical block (m = sample_per_block * ceil(d/block)
+    total, O(d/block) per block) and keeps everything at or above the
+    sample's ratio-quantile.  The kept count is then only approximately k,
+    so the payload bits become data-dependent (counted from the actual
+    mask); the decoded estimate keeps the largest entries with high
+    probability.  The tree path (compress/encode) always stays exact-k.
     """
     ratio: float = 0.1
+    approx_threshold: bool = False
+    sample_per_block: int = 8
 
     def _k(self, d: int) -> int:
         return max(1, int(d * self.ratio))
@@ -232,22 +257,49 @@ class TopK:
         k = self._k(n_elements)
         return k * (32 + math.log2(max(n_elements, 2)))
 
+    def _approx_mask_rows(self, key, rows: jnp.ndarray) -> jnp.ndarray:
+        """(n, d) -> keep-mask from a sampled-quantile threshold: per agent,
+        sample m = sample_per_block * ceil(d/block) random magnitudes, take
+        the (k*m/d)-th largest as the threshold, keep |x| >= threshold.
+        O(m log m) instead of O(d log d) — the kept count is ~k, not exact."""
+        from repro.kernels.quantize import DEFAULT_BLOCK
+        n, d = rows.shape
+        m = min(self.sample_per_block * _nb_logical(d, DEFAULT_BLOCK), d)
+        rank = min(max(1, round(self._k(d) * m / d)), m)
+        idx = jax.random.randint(key, (n, m), 0, d)
+        sample = jnp.abs(jnp.take_along_axis(rows, idx, axis=1))
+        thr = jax.lax.top_k(sample, rank)[0][:, -1:]
+        a = jnp.abs(rows)
+        # strict-positive guard: an all-zero sample row must not keep the
+        # whole (zero) vector and charge d entries of wire traffic for it
+        return (a >= thr) & (a > 0.0)
+
     # -- flat-layout wire path ----------------------------------------------
     def encode_blocks(self, key, buf: jnp.ndarray, dim: int,
                       interpret: Optional[bool] = None):
-        """Threshold+mask over the logical rows: per-agent exact-k mask from
-        top_k indices, applied by the fused kernels.sparsify.mask_apply pass;
-        payload = masked values in block layout (k values + k indices on the
-        wire; the dense zeros are layout, not traffic)."""
-        del key
+        """Threshold+mask over the logical rows: per-agent keep-mask applied
+        by the fused kernels.sparsify.mask_apply pass; payload = masked
+        values in block layout (kept values + indices on the wire; the dense
+        zeros are layout, not traffic).
+
+        Exact mode (default) builds the mask from top_k indices (exactly k
+        kept, static wire bits); approx_threshold=True uses the sampled
+        quantile above — data-dependent kept count, bits counted from the
+        actual mask."""
         from repro.kernels.sparsify import mask_apply
         n, nb, block = buf.shape
-        mask = _rows_to_flat(
-            self._mask_rows(_flat_to_rows(buf, dim)).astype(jnp.float32), buf)
+        rows = _flat_to_rows(buf, dim)
+        if self.approx_threshold:
+            maskr = self._approx_mask_rows(key, rows)
+            bits = jnp.mean(jnp.sum(maskr.astype(jnp.float32), axis=1)) \
+                * (32.0 + math.log2(max(dim, 2)))
+        else:
+            maskr = self._mask_rows(rows)
+            bits = jnp.asarray(self.wire_bits(dim), jnp.float32)
+        mask = _rows_to_flat(maskr.astype(jnp.float32), buf)
         vals = mask_apply(buf.reshape(n * nb, block),
                           mask.reshape(n * nb, block), interpret=interpret)
         payload = {"values": vals.reshape(n, nb, block)}
-        bits = jnp.asarray(self.wire_bits(dim), jnp.float32)
         return payload, bits
 
     def decode_blocks(self, payload: dict) -> jnp.ndarray:

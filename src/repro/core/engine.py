@@ -1,334 +1,17 @@
-"""Flat-buffer LEAD engine: the fused-kernel hot path of the simulator.
+"""Compatibility shim — the flat engine moved into the core/engines/ family.
 
-The pytree path (core/lead.py) touches every parameter element with ~12
-separate elementwise ops per iteration (Alg. 1 lines 4-7) — each an HBM
-round trip on a memory-bound update.  This engine keeps the LEAD state as
-contiguous ``(n_agents, nb, block)`` f32 buffers in the kernels' native
-block layout (see kernels/__init__.py for the layout contract) and runs the
-iteration as exactly two fused passes:
-
-  * pre-communication — fused Y-difference + encode.  For the p=inf
-    quantizer this is kernels.lead_update.lead_diff_encode (one read of
-    (X, G, D, H, dither), one write of int8 codes + per-block scales); every
-    other operator goes through its ``encode_blocks`` flat wire path (see
-    core/compression.py), one XLA-fused pass over the same buffers.
-  * kernels.lead_update.lead_update — post-communication: fused
-    H / H_w / D / X update, one read of (X, G, D, H, H_w, Qh, WQh), one
-    write of the four new state buffers.
-
-Codes on the wire
------------------
-The engine is generic over the Compressor flat protocol
-(``encode_blocks(key, buf, dim) -> (payload, bits)`` / ``decode_blocks``):
-between the two passes only the *payload* exists, and the gossip stage is
-pluggable:
-
-  * ``gossip="dense"`` — W @ decode(payload) on the local decoded buffer
-    (the mixing-matrix simulator path, any topology);
-  * ``gossip="ring"``  — EncodedRingGossip.mix_encoded: the payload is
-    rolled to the two ring neighbors and decoded at the receiver, the
-    single-device model of RingGossip.mix_encoded's multi-host wire path.
-    Requires W to be the uniform ring (topology.ring).
-
-``step_wire`` additionally returns the bits each agent put on the wire this
-step, computed from the actual payload (data-dependent for RandK) — the
-byte-accurate x-axis of the paper's Fig. 1b/6, replacing static
-``wire_bits(d)`` estimates.
-
-Bit-compatibility with the tree path
-------------------------------------
-The engine draws per-operator randomness exactly the way
-``simulator.vmap_compress`` does — one key per agent via
-``jax.random.split``, draws over the *logical* per-agent shape — and the
-fused kernels use the same left-to-right subtraction order as ``lead.step``,
-so ``engine="flat"`` and ``engine="tree"`` produce matching ``LEADState``
-trajectories for every shipped compressor (tests/test_engine.py asserts
-atol <= 1e-5 over 20 steps).  Zero rows are a fixed point of both passes,
-so the tile padding past the logical blocks never leaks into the trajectory.
-``dither="fast"`` (fused quantizer path only) swaps the threefry dither for
-the counter-hash generator below — statistically equivalent, much cheaper,
-but a different random stream.
+PR 3 split the original flat LEAD engine into a generic engine family:
+the shared substrate (block layout, encode/decode wire stage, dense|ring
+gossip, payload-bit accounting) lives in core/engines/base.py, the LEAD
+engine in core/engines/lead.py, and flat twins of every paper baseline in
+core/engines/baselines.py.  ``engine_for`` is now a registry dispatching
+``(algorithm, compressor, gossip)`` — importing it from here still builds
+LEAD engines by default, so existing callers keep working unchanged.
+Import from ``repro.core.engines`` in new code.
 """
-from __future__ import annotations
+from repro.core.engines import engine_for, flat_twin
+from repro.core.engines.base import FlatEngineBase, fast_uniform
+from repro.core.engines.lead import FlatLEADEngine, FlatLEADState
 
-import dataclasses
-import math
-from typing import Any, NamedTuple, Optional
-
-import jax
-import jax.numpy as jnp
-
-from repro.core.gossip import EncodedRingGossip
-from repro.core.lead import LEADHyper, _at
-from repro.kernels import lead_update as _lu
-from repro.kernels import quantize as _q
-from repro.kernels.ops import DEFAULT_BLOCK, _pick_tile
-
-
-def fast_uniform(shape, seed: jnp.ndarray) -> jnp.ndarray:
-    """Counter-based U[0,1) dither: murmur3-style integer finalizer over an
-    iota, keyed by a uint32 seed.  One hash per element (~5 int ops) versus
-    ~dozens for threefry — the production dither of the flat engine's
-    ``dither="fast"`` mode (the fused-kernel analogue of TPU's on-device
-    pltpu.prng_random_bits path).  Quality is ample for quantization dither;
-    it is NOT a cryptographic or jax.random-compatible stream."""
-    m = 1
-    for s in shape:
-        m *= int(s)
-    cnt = jax.lax.iota(jnp.uint32, m).reshape(shape)
-    z = (cnt + seed.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)) \
-        * jnp.uint32(0x85EBCA6B)
-    z = (z ^ (z >> 13)) * jnp.uint32(0xC2B2AE35)
-    z = z ^ (z >> 16)
-    # top 24 bits -> [0, 1) with full f32 mantissa coverage
-    return (z >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
-
-
-class FlatLEADState(NamedTuple):
-    """LEAD state in the kernels' block layout: all buffers (n, nb, block)
-    f32, zero-padded past the logical dimension d."""
-    x: jnp.ndarray
-    h: jnp.ndarray
-    hw: jnp.ndarray
-    d: jnp.ndarray
-    k: jnp.ndarray
-
-
-def _is_fused_quantizer(comp) -> bool:
-    """True when the compressor is exactly what the fused Pallas kernels
-    implement: the blockwise p=inf b-bit quantizer."""
-    from repro.core.compression import QuantizePNorm
-    return (isinstance(comp, QuantizePNorm)
-            and comp.p in (jnp.inf, math.inf, "inf"))
-
-
-@dataclasses.dataclass(frozen=True)
-class FlatLEADEngine:
-    """init/step over flat buffers; mirrors core/lead.py semantics exactly.
-
-    compressor=None runs Identity (Qh = Y - H, no encode stage).  The p=inf
-    QuantizePNorm takes the fused diff+encode kernel; every other operator
-    (RandK, TopK, p != inf) goes through its encode_blocks wire path.
-    `interpret` is the kernels' tri-state backend flag (None = auto).
-
-    gossip="dense" mixes W @ decode(payload); gossip="ring" rolls the
-    encoded payload to ring neighbors and decodes at the receiver
-    (EncodedRingGossip) — W must be the uniform ring.
-
-    dither="match" draws the quantizer dither exactly as the tree path does
-    (per-agent threefry; trajectories match engine="tree" bit for bit modulo
-    compiler rounding).  dither="fast" uses the counter-hash generator above
-    — statistically equivalent, much cheaper, but a different random stream,
-    so trajectories equal the tree path's only in distribution.  It applies
-    to the fused quantizer path; other operators always draw threefry inside
-    encode_blocks (their cost is not dither-dominated).
-    """
-    W: Any                             # (n, n) mixing matrix
-    dim: int                           # logical per-agent dimension d
-    compressor: Any = None             # None -> Identity
-    block: int = DEFAULT_BLOCK
-    interpret: Optional[bool] = None
-    dither: str = "match"              # "match" | "fast"
-    gossip: str = "dense"              # "dense" | "ring"
-
-    def __post_init__(self):
-        assert self.dither in ("match", "fast"), self.dither
-        assert self.gossip in ("dense", "ring"), self.gossip
-        if self.gossip == "ring":
-            import numpy as np
-            from repro.core import topology
-            W = np.asarray(self.W)
-            assert np.allclose(W, topology.ring(W.shape[0]), atol=1e-6), \
-                "gossip='ring' requires the uniform ring mixing matrix"
-
-    @property
-    def n(self) -> int:
-        return self.W.shape[0]
-
-    @property
-    def nb_logical(self) -> int:
-        """Blocks the tree-path compressor sees: ceil(d / block)."""
-        return -(-self.dim // self.block)
-
-    @property
-    def tile_b(self) -> int:
-        return _pick_tile(self.dim, self.block, _q.DEFAULT_TILE_B)
-
-    @property
-    def nb(self) -> int:
-        """nb_logical rounded up to a tile multiple (kernel grid constraint)."""
-        return -(-self.nb_logical // self.tile_b) * self.tile_b
-
-    # -- layout ------------------------------------------------------------
-    def blockify(self, arr: jnp.ndarray) -> jnp.ndarray:
-        """(n, d) -> (n, nb, block), zero-padded past d."""
-        n = arr.shape[0]
-        pad = self.nb * self.block - self.dim
-        flat = jnp.pad(arr.astype(jnp.float32), ((0, 0), (0, pad)))
-        return flat.reshape(n, self.nb, self.block)
-
-    def unblockify(self, buf: jnp.ndarray) -> jnp.ndarray:
-        """(n, nb, block) -> (n, d)."""
-        return buf.reshape(buf.shape[0], -1)[:, :self.dim]
-
-    def _mix(self, buf: jnp.ndarray) -> jnp.ndarray:
-        """W @ buf along the agent axis (pads are zero -> stay zero)."""
-        W = jnp.asarray(self.W, buf.dtype)
-        return jnp.tensordot(W, buf, axes=([1], [0]))
-
-    def _rows(self, buf: jnp.ndarray) -> jnp.ndarray:
-        """(n, nb, block) -> (n*nb, block): one kernel call for all agents."""
-        return buf.reshape(self.n * self.nb, self.block)
-
-    # -- algorithm ---------------------------------------------------------
-    def init(self, x0: jnp.ndarray, g0: jnp.ndarray,
-             hyper: LEADHyper) -> FlatLEADState:
-        """Paper init: X^1 = X^0 - eta0 g(X^0); H^1 = X^0; H_w^1 = W H^1;
-        D^1 = 0.  x0, g0: (n, d)."""
-        eta0 = _at(hyper.eta, jnp.zeros((), jnp.int32))
-        xb, gb = self.blockify(x0), self.blockify(g0)
-        h1 = xb
-        return FlatLEADState(x=xb - eta0 * gb, h=h1, hw=self._mix(h1),
-                             d=jnp.zeros_like(xb),
-                             k=jnp.zeros((), jnp.int32))
-
-    def _dither(self, key: jax.Array, k: jnp.ndarray) -> jnp.ndarray:
-        """U[0,1) dither (n, nb, block) for the fused quantizer path.
-        "match": per-agent threefry over the logical blocks, matching the
-        tree path's split-then-vmap draw bit for bit (tile padding rows get
-        zeros — codes there are zero regardless of dither).  "fast": one
-        counter-hash pass."""
-        if self.dither == "fast":
-            raw = (key if jnp.issubdtype(key.dtype, jnp.integer)
-                   else jax.random.key_data(key))
-            seed = jnp.bitwise_xor(jnp.ravel(raw)[-1].astype(jnp.uint32),
-                                   k.astype(jnp.uint32))
-            return fast_uniform((self.n, self.nb, self.block), seed)
-        keys = jax.random.split(key, self.n)
-        shape = (self.nb_logical, self.block)
-        u = jax.vmap(lambda kk: jax.random.uniform(kk, shape, jnp.float32))(keys)
-        return jnp.pad(u, ((0, 0), (0, self.nb - self.nb_logical), (0, 0)))
-
-    # -- wire stages --------------------------------------------------------
-    def _encode(self, state: FlatLEADState, gb: jnp.ndarray, eta, key):
-        """Pre-communication pass: (payload, decode, wire_bits).
-
-        payload is everything that may cross agents; decode maps it back to
-        the (n, nb, block) estimate Qh.  For the fused p=inf quantizer the
-        Y-difference and the encode happen in one kernel; other compressors
-        compute the difference in XLA and call their encode_blocks."""
-        comp = self.compressor
-        if comp is None or not hasattr(comp, "encode_blocks"):
-            raise NotImplementedError(
-                f"{type(comp).__name__} does not implement the flat "
-                "encode_blocks/decode_blocks wire protocol")
-
-        if _is_fused_quantizer(comp):
-            code, scale = _lu.lead_diff_encode(
-                self._rows(state.x), self._rows(gb), self._rows(state.d),
-                self._rows(state.h), self._rows(self._dither(key, state.k)),
-                eta, bits=comp.bits, tile_b=self.tile_b,
-                interpret=self.interpret)
-            shape3 = (self.n, self.nb, self.block)
-            payload = {"code": code.reshape(shape3),
-                       "scale": scale.reshape(self.n, self.nb, 1)}
-
-            def decode(pl):
-                rows = _q.decode(pl["code"].reshape(-1, self.block),
-                                 pl["scale"].reshape(-1, 1), bits=comp.bits,
-                                 tile_b=self.tile_b, interpret=self.interpret)
-                return rows.reshape(shape3)
-
-            bits = jnp.asarray(self.dim * (comp.bits + 1)
-                               + self.nb_logical * 32, jnp.float32)
-            return payload, decode, bits
-
-        y = state.x - eta * gb - eta * state.d
-        payload, bits = comp.encode_blocks(key, y - state.h, self.dim,
-                                           interpret=self.interpret)
-        return payload, comp.decode_blocks, bits
-
-    def _gossip(self, payload, decode):
-        """Communication stage: (Qh, W Qh).  Only `payload` crosses agents."""
-        if self.gossip == "ring":
-            ring = EncodedRingGossip.weights_from(self.W)
-            return decode(payload), ring.mix_encoded(payload, decode)
-        qh = decode(payload)
-        return qh, self._mix(qh)
-
-    def step_wire(self, state: FlatLEADState, g: jnp.ndarray, key: jax.Array,
-                  hyper: LEADHyper):
-        """One LEAD iteration on flat buffers; g: gradients at state.x,
-        either (n, d) (blockified here) or already (n, nb, block) — the
-        engine's native layout, which skips the per-step padding copy.
-
-        Returns (new_state, comp_err, wire_bits):
-          comp_err  = ||Qh - (Y-H)|| / ||Y||, the compression error this
-                      step incurred;
-          wire_bits = bits per agent on the wire this step, from the actual
-                      payload.
-        jit callers that drop a metric get its extra passes DCE'd."""
-        eta = _at(hyper.eta, state.k)
-        gamma = _at(hyper.gamma, state.k)
-        alpha = _at(hyper.alpha, state.k)
-        gb = g if g.ndim == 3 else self.blockify(g)
-
-        from repro.core.compression import Identity
-        if self.compressor is None or isinstance(self.compressor, Identity):
-            # Identity: Qh = Y - H exactly (one fused XLA pass); the payload
-            # on the wire is the raw difference (d * 32 bits).
-            y = state.x - eta * gb - eta * state.d
-            payload = {"values": y - state.h}
-            qh, wqh = self._gossip(payload, lambda pl: pl["values"])
-            bits = jnp.asarray(self.dim * 32, jnp.float32)
-        else:
-            payload, decode, bits = self._encode(state, gb, eta, key)
-            qh, wqh = self._gossip(payload, decode)
-
-        xo, do, ho, hwo = _lu.lead_update(
-            self._rows(state.x), self._rows(gb), self._rows(state.d),
-            self._rows(state.h), self._rows(state.hw), self._rows(qh),
-            self._rows(wqh), eta, gamma, alpha,
-            tile_b=self.tile_b, interpret=self.interpret)
-        shape3 = (self.n, self.nb, self.block)
-        new = FlatLEADState(x=xo.reshape(shape3), d=do.reshape(shape3),
-                            h=ho.reshape(shape3), hw=hwo.reshape(shape3),
-                            k=state.k + 1)
-
-        y = state.x - eta * gb - eta * state.d
-        diff = y - state.h
-        comp_err = (jnp.linalg.norm(jnp.ravel(qh - diff))
-                    / (jnp.linalg.norm(jnp.ravel(y)) + 1e-12))
-        return new, comp_err, bits
-
-    def step(self, state: FlatLEADState, g: jnp.ndarray, key: jax.Array,
-             hyper: LEADHyper):
-        """step_wire without the wire accounting: (new_state, comp_err)."""
-        new, comp_err, _ = self.step_wire(state, g, key, hyper)
-        return new, comp_err
-
-
-def engine_for(gossip_W, compressor, dim: int,
-               interpret: Optional[bool] = None,
-               dither: str = "match", gossip: str = "dense") -> FlatLEADEngine:
-    """Build a FlatLEADEngine matching a simulator compressor.
-
-    Every shipped compressor runs flat: the p=inf QuantizePNorm through the
-    fused kernels, Identity through the exact no-encode shortcut, and
-    everything else (RandK, TopK, p != inf quantizers) through its
-    encode_blocks wire path.  Only an object without that protocol is
-    rejected."""
-    from repro.core.compression import Identity, QuantizePNorm
-
-    if isinstance(compressor, Identity) or compressor is None:
-        return FlatLEADEngine(W=gossip_W, dim=dim, compressor=None,
-                              interpret=interpret, dither=dither,
-                              gossip=gossip)
-    if not hasattr(compressor, "encode_blocks"):
-        raise NotImplementedError(
-            f"{type(compressor).__name__} lacks the encode_blocks/"
-            "decode_blocks flat wire protocol; use engine='tree'")
-    block = getattr(compressor, "block", DEFAULT_BLOCK)
-    return FlatLEADEngine(W=gossip_W, dim=dim, compressor=compressor,
-                          block=block, interpret=interpret, dither=dither,
-                          gossip=gossip)
+__all__ = ["FlatEngineBase", "FlatLEADEngine", "FlatLEADState",
+           "engine_for", "fast_uniform", "flat_twin"]

@@ -1,0 +1,119 @@
+"""Flat engine family: scan-compiled codes-on-the-wire substrate for every
+paper algorithm.
+
+    base.py       shared substrate (block layout, encode/decode wire stage,
+                  dense|ring gossip, payload-bit accounting, fast dither)
+    lead.py       FlatLEADEngine — the fused-kernel LEAD hot path
+    baselines.py  flat twins of every baseline: CHOCO-SGD, DeepSqueeze,
+                  QDGD, DCD-SGD (compressed) and DGD, NIDS, EXTRA, D2
+                  (exact, no encode stage)
+
+``engine_for`` is the registry front door: it dispatches
+``(algorithm, compressor, gossip)`` to the matching engine so the whole
+Fig. 2-4 sweep runs on the flat substrate with byte-accurate wire bits.
+``flat_twin`` builds the flat engine mirroring a tree baseline instance
+(same W, compressor, and hyper-parameters) — the one-line migration path
+for drivers that hold core/baselines.py objects.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.engines.base import FlatEngineBase, fast_uniform
+from repro.core.engines.baselines import (
+    ExtraState, FlatCHOCOEngine, FlatD2Engine, FlatDCDEngine, FlatDGDEngine,
+    FlatDeepSqueezeEngine, FlatEXTRAEngine, FlatNIDSEngine, FlatQDGDEngine,
+)
+from repro.core.engines.lead import FlatLEADEngine, FlatLEADState
+from repro.kernels.ops import DEFAULT_BLOCK
+
+# registry: algorithm name -> engine class (aliases share one class)
+ENGINES = {
+    "lead": FlatLEADEngine,
+    "choco": FlatCHOCOEngine,
+    "choco-sgd": FlatCHOCOEngine,
+    "deepsqueeze": FlatDeepSqueezeEngine,
+    "qdgd": FlatQDGDEngine,
+    "dcd": FlatDCDEngine,
+    "dcd-sgd": FlatDCDEngine,
+    "dgd": FlatDGDEngine,
+    "nids": FlatNIDSEngine,
+    "extra": FlatEXTRAEngine,
+    "d2": FlatD2Engine,
+}
+
+# exact baselines take no compressor (their payload is the raw buffer)
+_EXACT = (FlatDGDEngine, FlatNIDSEngine, FlatEXTRAEngine, FlatD2Engine)
+
+# tree-class name (core/baselines.py) -> registry key, for flat_twin
+_TREE_TWINS = {
+    "CHOCO_SGD": "choco",
+    "DeepSqueeze": "deepsqueeze",
+    "QDGD": "qdgd",
+    "DCD_SGD": "dcd",
+    "DGD": "dgd",
+    "NIDS": "nids",
+    "EXTRA": "extra",
+    "D2": "d2",
+}
+
+
+def engine_for(gossip_W, compressor, dim: int,
+               interpret: Optional[bool] = None,
+               dither: str = "match", gossip: str = "dense",
+               algorithm: str = "lead", **hyper) -> FlatEngineBase:
+    """Registry dispatch: (algorithm, compressor, gossip) -> flat engine.
+
+    Every shipped compressor runs flat on every compressed algorithm: the
+    p=inf QuantizePNorm through LEAD's fused kernels (or its encode_blocks
+    path on the baselines), Identity through the exact no-encode shortcut,
+    and everything else (RandK, TopK, p != inf quantizers) through its
+    encode_blocks wire path.  Only an object without that protocol is
+    rejected.  `dither` selects the quantizer dither stream for every
+    engine's fused p=inf path ("match" = tree-equivalent threefry, "fast" =
+    counter-hash); `hyper` forwards algorithm hyper-parameters to the
+    engine's fields (eta/gamma for the baselines; eta/gamma/alpha for LEAD,
+    which LEADSim instead overrides with a LEADHyper per step — schedules
+    included).  Every returned engine is directly drivable by
+    core/simulator.py run().
+    """
+    from repro.core.compression import Identity
+
+    key = algorithm.lower().replace("_", "-")
+    if key not in ENGINES:
+        raise KeyError(f"unknown algorithm {algorithm!r}; registry has "
+                       f"{sorted(set(ENGINES))}")
+    cls = ENGINES[key]
+
+    if isinstance(compressor, Identity):
+        compressor = None
+    if issubclass(cls, _EXACT) and compressor is not None:
+        raise ValueError(f"{cls.__name__} is an exact baseline; it does not "
+                         "take a compressor")
+    if compressor is not None and not hasattr(compressor, "encode_blocks"):
+        raise NotImplementedError(
+            f"{type(compressor).__name__} lacks the encode_blocks/"
+            "decode_blocks flat wire protocol; use engine='tree'")
+
+    block = getattr(compressor, "block", DEFAULT_BLOCK)
+    return cls(W=gossip_W, dim=dim, compressor=compressor, block=block,
+               interpret=interpret, gossip=gossip, dither=dither, **hyper)
+
+
+def flat_twin(algo, dim: int, *, gossip: str = "dense",
+              interpret: Optional[bool] = None) -> FlatEngineBase:
+    """Flat engine mirroring a tree baseline instance from core/baselines.py
+    — same mixing matrix, compressor, and hyper-parameters, ready to hand to
+    core/simulator.py run() in its place."""
+    name = type(algo).__name__
+    if name not in _TREE_TWINS:
+        raise KeyError(f"no flat twin registered for {name}; registry has "
+                       f"{sorted(_TREE_TWINS)}")
+    cls = ENGINES[_TREE_TWINS[name]]
+    fields = {f.name for f in dataclasses.fields(cls)}
+    hyper = {k: getattr(algo, k) for k in ("eta", "gamma")
+             if k in fields and hasattr(algo, k)}
+    return engine_for(algo.gossip.W, getattr(algo, "compressor", None), dim,
+                      interpret=interpret, gossip=gossip,
+                      algorithm=_TREE_TWINS[name], **hyper)

@@ -1,0 +1,265 @@
+"""Shared substrate of the flat engine family.
+
+Every flat engine — LEAD (engines/lead.py) and the paper's baselines
+(engines/baselines.py) — keeps its per-agent state as contiguous
+``(n_agents, nb, block)`` f32 buffers in the kernels' native block layout
+(see kernels/__init__.py for the layout contract) and runs its iteration as
+a handful of fused passes over those buffers.  This module holds everything
+the family shares:
+
+  * layout       — blockify/unblockify between the logical (n, d) view and
+                   the padded (n, nb, block) buffers; zero rows are a fixed
+                   point of every kernel, so the tile padding never leaks.
+  * wire         — ``encode_payload``: the pre-communication stage.  The
+                   compressor's flat wire protocol (``encode_blocks`` /
+                   ``decode_blocks``, core/compression.py) turns the message
+                   buffer into the *payload* — the only thing that may cross
+                   agents — plus the byte-accurate per-agent bits it costs.
+                   Identity/None short-circuits to a raw-values payload
+                   (d * 32 bits), so the exact baselines ride the same path
+                   with no encode stage.
+  * gossip       — ``mix_payload``: pluggable communication stage.
+                   ``gossip="dense"`` computes W @ decode(payload) on the
+                   locally decoded buffer (any topology); ``gossip="ring"``
+                   rolls the encoded payload to the two ring neighbors and
+                   decodes at the receiver (EncodedRingGossip) — codes on
+                   the wire, W must be the uniform ring.
+  * dither       — the quantizer dither plane.  ``dither="match"`` draws
+                   per-agent threefry over the logical blocks, matching the
+                   tree path's split-then-vmap draw bit for bit;
+                   ``dither="fast"`` uses the counter-hash ``fast_uniform``
+                   generator — statistically equivalent, much cheaper, a
+                   different random stream.  For the paper's p=inf b-bit
+                   quantizer, ``encode_payload`` feeds the plane straight
+                   into the fused ``kernels.quantize.encode`` pass, so every
+                   engine in the family (not just LEAD) gets the fused
+                   kernel + fast-dither hot path.
+
+Engines driven directly by the scan simulator (core/simulator.py run())
+implement the baseline driver protocol on top of this base:
+
+    init(x0, g0, key)            -> state        (state.x blocked)
+    step_with_wire(state, g, key) -> (new_state, comp_err, wire_bits)
+
+with ``comp_err`` the *exact in-step* relative compression error of the
+quantity the algorithm transmitted this iteration and ``wire_bits`` the
+per-agent bits of the actual payload (data-dependent for RandK).  The base
+derives ``step`` / ``step_with_metrics`` / ``x_of`` from that one method.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gossip import EncodedRingGossip
+from repro.kernels import quantize as _q
+from repro.kernels.ops import DEFAULT_BLOCK, _pick_tile
+
+
+def _is_fused_quantizer(comp) -> bool:
+    """True when the compressor is exactly what the fused Pallas kernels
+    implement: the blockwise p=inf b-bit quantizer."""
+    from repro.core.compression import QuantizePNorm
+    return (isinstance(comp, QuantizePNorm)
+            and comp.p in (jnp.inf, math.inf, "inf"))
+
+
+def fast_uniform(shape, seed: jnp.ndarray) -> jnp.ndarray:
+    """Counter-based U[0,1) dither: murmur3-style integer finalizer over an
+    iota, keyed by a uint32 seed.  One hash per element (~5 int ops) versus
+    ~dozens for threefry — the production dither of the flat engine's
+    ``dither="fast"`` mode (the fused-kernel analogue of TPU's on-device
+    pltpu.prng_random_bits path).  Quality is ample for quantization dither;
+    it is NOT a cryptographic or jax.random-compatible stream."""
+    m = 1
+    for s in shape:
+        m *= int(s)
+    cnt = jax.lax.iota(jnp.uint32, m).reshape(shape)
+    z = (cnt + seed.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)) \
+        * jnp.uint32(0x85EBCA6B)
+    z = (z ^ (z >> 13)) * jnp.uint32(0xC2B2AE35)
+    z = z ^ (z >> 16)
+    # top 24 bits -> [0, 1) with full f32 mantissa coverage
+    return (z >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatEngineBase:
+    """Layout + wire + gossip substrate shared by every flat engine.
+
+    compressor=None (or Identity) means no encode stage: the raw message
+    buffer is the payload (d * 32 bits on the wire).  `interpret` is the
+    kernels' tri-state backend flag (None = auto).  gossip="dense" mixes
+    W @ decode(payload); gossip="ring" rolls the encoded payload to ring
+    neighbors and decodes at the receiver — W must be the uniform ring.
+    dither selects the quantizer dither stream (see module docstring);
+    "match" keeps trajectories aligned with the tree references, "fast" is
+    the cheaper production stream.
+    """
+    W: Any                             # (n, n) mixing matrix
+    dim: int                           # logical per-agent dimension d
+    compressor: Any = None             # None -> Identity (no encode stage)
+    block: int = DEFAULT_BLOCK
+    interpret: Optional[bool] = None
+    gossip: str = "dense"              # "dense" | "ring"
+    dither: str = "match"              # "match" | "fast"
+
+    def __post_init__(self):
+        assert self.gossip in ("dense", "ring"), self.gossip
+        assert self.dither in ("match", "fast"), self.dither
+        if self.gossip == "ring":
+            import numpy as np
+            from repro.core import topology
+            W = np.asarray(self.W)
+            assert np.allclose(W, topology.ring(W.shape[0]), atol=1e-6), \
+                "gossip='ring' requires the uniform ring mixing matrix"
+
+    @property
+    def n(self) -> int:
+        return self.W.shape[0]
+
+    @property
+    def nb_logical(self) -> int:
+        """Blocks the tree-path compressor sees: ceil(d / block)."""
+        return -(-self.dim // self.block)
+
+    @property
+    def tile_b(self) -> int:
+        return _pick_tile(self.dim, self.block, _q.DEFAULT_TILE_B)
+
+    @property
+    def nb(self) -> int:
+        """nb_logical rounded up to a tile multiple (kernel grid constraint)."""
+        return -(-self.nb_logical // self.tile_b) * self.tile_b
+
+    # -- layout ------------------------------------------------------------
+    def blockify(self, arr: jnp.ndarray) -> jnp.ndarray:
+        """(n, d) -> (n, nb, block), zero-padded past d."""
+        n = arr.shape[0]
+        pad = self.nb * self.block - self.dim
+        flat = jnp.pad(arr.astype(jnp.float32), ((0, 0), (0, pad)))
+        return flat.reshape(n, self.nb, self.block)
+
+    def unblockify(self, buf: jnp.ndarray) -> jnp.ndarray:
+        """(n, nb, block) -> (n, d)."""
+        return buf.reshape(buf.shape[0], -1)[:, :self.dim]
+
+    def _blockify_g(self, g: jnp.ndarray) -> jnp.ndarray:
+        """Gradients arrive either (n, d) or already in the native
+        (n, nb, block) layout, which skips the per-step padding copy."""
+        return g if g.ndim == 3 else self.blockify(g)
+
+    def _mix(self, buf: jnp.ndarray) -> jnp.ndarray:
+        """W @ buf along the agent axis (pads are zero -> stay zero).
+        Flattened to one 2-D matmul so the lowering matches the tree path's
+        (n, d) mix exactly."""
+        W = jnp.asarray(self.W, buf.dtype)
+        return (W @ buf.reshape(buf.shape[0], -1)).reshape(buf.shape)
+
+    def _rows(self, buf: jnp.ndarray) -> jnp.ndarray:
+        """(n, nb, block) -> (n*nb, block): one kernel call for all agents."""
+        return buf.reshape(self.n * self.nb, self.block)
+
+    # -- dither ------------------------------------------------------------
+    def _dither_plane(self, key: jax.Array, k: jnp.ndarray) -> jnp.ndarray:
+        """U[0,1) dither (n, nb, block) for the fused quantizer path.
+        "match": per-agent threefry over the logical blocks, matching the
+        tree path's split-then-vmap draw bit for bit (tile padding rows get
+        zeros — codes there are zero regardless of dither).  "fast": one
+        counter-hash pass seeded from (key, iteration counter k)."""
+        if self.dither == "fast":
+            raw = (key if jnp.issubdtype(key.dtype, jnp.integer)
+                   else jax.random.key_data(key))
+            seed = jnp.bitwise_xor(jnp.ravel(raw)[-1].astype(jnp.uint32),
+                                   k.astype(jnp.uint32))
+            return fast_uniform((self.n, self.nb, self.block), seed)
+        keys = jax.random.split(key, self.n)
+        shape = (self.nb_logical, self.block)
+        u = jax.vmap(lambda kk: jax.random.uniform(kk, shape, jnp.float32))(keys)
+        return jnp.pad(u, ((0, 0), (0, self.nb - self.nb_logical), (0, 0)))
+
+    # -- wire --------------------------------------------------------------
+    def encode_payload(self, key: jax.Array, buf: jnp.ndarray, k=None):
+        """Pre-communication stage: (payload, decode, wire_bits) for the
+        message `buf` (n, nb, block).
+
+        payload is everything that may cross agents; decode maps it back to
+        the (n, nb, block) estimate; wire_bits is the per-agent bits of the
+        actual payload.  Identity/None ships the raw buffer (d * 32 bits).
+        The paper's p=inf quantizer takes the fused kernels.quantize.encode
+        pass fed by the engine's dither plane (`k` seeds dither="fast");
+        every other operator goes through its encode_blocks wire path."""
+        comp = self.compressor
+        from repro.core.compression import Identity
+        if comp is None or isinstance(comp, Identity):
+            bits = jnp.asarray(self.dim * 32, jnp.float32)
+            return {"values": buf}, (lambda pl: pl["values"]), bits
+        if not hasattr(comp, "encode_blocks"):
+            raise NotImplementedError(
+                f"{type(comp).__name__} does not implement the flat "
+                "encode_blocks/decode_blocks wire protocol")
+        if _is_fused_quantizer(comp):
+            kk = jnp.zeros((), jnp.int32) if k is None else k
+            u = self._dither_plane(key, kk)
+            code, scale = _q.encode(self._rows(buf), self._rows(u),
+                                    bits=comp.bits, tile_b=self.tile_b,
+                                    interpret=self.interpret)
+            return self.quant_payload(code, scale, comp.bits)
+        payload, bits = comp.encode_blocks(key, buf, self.dim,
+                                           interpret=self.interpret)
+        return payload, comp.decode_blocks, bits
+
+    def quant_payload(self, code: jnp.ndarray, scale: jnp.ndarray,
+                      bits: int):
+        """(payload, decode, wire_bits) for fused-quantizer outputs: code
+        int8 / scale f32 in row layout (n*nb, ...).  Single source of truth
+        for the quantizer's payload shape, receiver decode, and wire-bit
+        accounting across the family (LEAD's lead_diff_encode and the
+        base's quantize.encode both land here)."""
+        shape3 = (self.n, self.nb, self.block)
+        payload = {"code": code.reshape(shape3),
+                   "scale": scale.reshape(self.n, self.nb, 1)}
+
+        def decode(pl):
+            rows = _q.decode(pl["code"].reshape(-1, self.block),
+                             pl["scale"].reshape(-1, 1), bits=bits,
+                             tile_b=self.tile_b, interpret=self.interpret)
+            return rows.reshape(shape3)
+
+        wire = jnp.asarray(self.dim * (bits + 1) + self.nb_logical * 32,
+                           jnp.float32)
+        return payload, decode, wire
+
+    def mix_payload(self, payload, decode):
+        """Communication stage: (q, W q) with q = decode(payload).  Only
+        `payload` crosses agents; under gossip="ring" the receiver decodes."""
+        if self.gossip == "ring":
+            ring = EncodedRingGossip.weights_from(self.W)
+            return decode(payload), ring.mix_encoded(payload, decode)
+        q = decode(payload)
+        return q, self._mix(q)
+
+    @staticmethod
+    def rel_err(q: jnp.ndarray, target: jnp.ndarray,
+                ref: jnp.ndarray) -> jnp.ndarray:
+        """Exact in-step compression error of the transmitted message under
+        the Trace convention — delegates to the single-source
+        core.compression.rel_err (shared with the tree baselines)."""
+        from repro.core.compression import rel_err
+        return rel_err(q, target, ref)
+
+    # -- baseline driver protocol (engines driven directly by run()) --------
+    def x_of(self, state):
+        """Current iterates as (n, d) regardless of the blocked layout."""
+        return self.unblockify(state.x)
+
+    def step_with_metrics(self, state, g, key):
+        new, comp_err, _ = self.step_with_wire(state, g, key)
+        return new, comp_err
+
+    def step(self, state, g, key):
+        return self.step_with_wire(state, g, key)[0]

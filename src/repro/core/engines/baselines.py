@@ -1,0 +1,267 @@
+"""Flat engines for the paper's baseline algorithms (Figs. 2-4 sweep).
+
+Every baseline from core/baselines.py gets a twin on the scan-compiled
+codes-on-the-wire substrate (engines/base.py): state lives in the kernels'
+``(n_agents, nb, block)`` f32 layout, the compressed algorithms ship only
+their encoded payload across agents (``gossip="dense"`` mixes the decoded
+buffer, ``gossip="ring"`` rolls the payload to ring neighbors and decodes at
+the receiver), and every step returns the *actual* per-agent payload bits —
+so the paper's bits-transmitted x-axis is byte-accurate for the whole
+algorithm family, not just LEAD.
+
+Compressed baselines (encode stage = compressor.encode_blocks):
+
+  * FlatCHOCOEngine        CHOCO-SGD   — difference compression of
+                           x_half - xhat; public copies xhat/xhat_w updated
+                           from the decoded payload.
+  * FlatDeepSqueezeEngine  DeepSqueeze — error-compensated direct
+                           compression of v = x - eta g + e.
+  * FlatQDGDEngine         QDGD        — direct compression of the iterate.
+  * FlatDCDEngine          DCD-SGD     — difference compression of the
+                           post-gossip iterate against the public copies.
+
+Exact baselines (no encode stage; the raw buffer is the payload, d * 32
+bits on the wire):
+
+  * FlatDGDEngine, FlatNIDSEngine, FlatEXTRAEngine, FlatD2Engine
+
+All engines implement the baseline driver protocol (init/step/
+step_with_wire/x_of — see engines/base.py), so core/simulator.py run()
+scan-compiles them directly and accumulates the actual wire bits into
+Trace.bits_per_agent.  comp_err is the exact in-step relative error of the
+transmitted message (the quantity the Trace docstring names), not a
+re-compression estimate.
+
+Randomness contract: the encode stage splits the step key into one key per
+agent exactly like simulator.vmap_compress does, so each flat engine's
+trajectory matches its tree baseline draw for draw
+(tests/test_flat_baselines.py asserts atol 1e-5 over 15 steps for RandK and
+the p=inf quantizer under both gossip modes).  EXTRA caches W x from the
+previous step instead of re-mixing x_prev — one transmission per iteration,
+same algebra.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.baselines import (DualState, ErrorState, HatState,
+                                  PrevGradState, SimpleState)
+from repro.core.engines.base import FlatEngineBase
+
+
+class ExtraState(NamedTuple):
+    """EXTRA state in block layout; wx_prev caches W x from the previous
+    step (the tree path re-mixes x_prev — same value, second transmission)."""
+    x: jnp.ndarray
+    x_prev: jnp.ndarray
+    wx_prev: jnp.ndarray
+    g_prev: jnp.ndarray
+    k: jnp.ndarray
+
+
+def _zero_err():
+    return jnp.zeros((), jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatCHOCOEngine(FlatEngineBase):
+    """CHOCO-SGD [Koloskova et al. 2019] on the flat substrate.
+
+    x_half = x - eta g
+    q      = decode(encode(x_half - xhat))     (payload on the wire)
+    xhat  += q;  xhat_w += W q
+    x+     = x_half + gamma * (xhat_w - xhat)
+    """
+    eta: float = 0.1
+    gamma: float = 0.8
+
+    def init(self, x0, g0, key):
+        xb = self.blockify(x0)
+        z = jnp.zeros_like(xb)
+        return HatState(x=xb, xhat=z, xhat_w=z, k=jnp.zeros((), jnp.int32))
+
+    def step_with_wire(self, s: HatState, g, key):
+        gb = self._blockify_g(g)
+        x_half = s.x - self.eta * gb
+        diff = x_half - s.xhat
+        payload, decode, bits = self.encode_payload(key, diff, k=s.k)
+        q, wq = self.mix_payload(payload, decode)
+        xhat = s.xhat + q
+        xhat_w = s.xhat_w + wq
+        x = x_half + self.gamma * (xhat_w - xhat)
+        new = HatState(x=x, xhat=xhat, xhat_w=xhat_w, k=s.k + 1)
+        return new, self.rel_err(q, diff, x_half), bits
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatDeepSqueezeEngine(FlatEngineBase):
+    """DeepSqueeze [Tang et al. 2019a] on the flat substrate.
+
+    v   = x - eta g + e          (compensate last step's compression error)
+    c   = decode(encode(v));  e+ = v - c
+    x+  = c + gamma * (W c - c)
+    """
+    eta: float = 0.1
+    gamma: float = 0.2
+
+    def init(self, x0, g0, key):
+        xb = self.blockify(x0)
+        return ErrorState(x=xb, e=jnp.zeros_like(xb),
+                          k=jnp.zeros((), jnp.int32))
+
+    def step_with_wire(self, s: ErrorState, g, key):
+        gb = self._blockify_g(g)
+        v = s.x - self.eta * gb + s.e
+        payload, decode, bits = self.encode_payload(key, v, k=s.k)
+        c, wc = self.mix_payload(payload, decode)
+        e = v - c
+        x = c + self.gamma * (wc - c)
+        new = ErrorState(x=x, e=e, k=s.k + 1)
+        # the transmitted message IS v (error-compensated), not state.x
+        return new, self.rel_err(c, v, v), bits
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatQDGDEngine(FlatEngineBase):
+    """QDGD [Reisizadeh et al. 2019a] on the flat substrate.
+
+    q  = decode(encode(x))       (direct quantized model exchange)
+    x+ = x + gamma * (W q - q) - eta g
+    """
+    eta: float = 0.1
+    gamma: float = 0.2
+
+    def init(self, x0, g0, key):
+        return SimpleState(x=self.blockify(x0), k=jnp.zeros((), jnp.int32))
+
+    def step_with_wire(self, s: SimpleState, g, key):
+        gb = self._blockify_g(g)
+        payload, decode, bits = self.encode_payload(key, s.x, k=s.k)
+        q, wq = self.mix_payload(payload, decode)
+        x = s.x + self.gamma * (wq - q) - self.eta * gb
+        return SimpleState(x=x, k=s.k + 1), self.rel_err(q, s.x, s.x), bits
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatDCDEngine(FlatEngineBase):
+    """DCD-SGD [Tang et al. 2018a] on the flat substrate.
+
+    x+    = xhat_w - eta g
+    q     = decode(encode(x+ - xhat));  xhat += q;  xhat_w += W q
+    (unstable under aggressive compression — reproduced as in the paper.)
+    """
+    eta: float = 0.1
+
+    def init(self, x0, g0, key):
+        xb = self.blockify(x0)
+        return HatState(x=xb, xhat=xb, xhat_w=self._mix(xb),
+                        k=jnp.zeros((), jnp.int32))
+
+    def step_with_wire(self, s: HatState, g, key):
+        gb = self._blockify_g(g)
+        x = s.xhat_w - self.eta * gb
+        diff = x - s.xhat
+        payload, decode, bits = self.encode_payload(key, diff, k=s.k)
+        q, wq = self.mix_payload(payload, decode)
+        new = HatState(x=x, xhat=s.xhat + q, xhat_w=s.xhat_w + wq, k=s.k + 1)
+        return new, self.rel_err(q, diff, x), bits
+
+
+# -- exact baselines: no encode stage, the raw buffer is the payload --------
+
+@dataclasses.dataclass(frozen=True)
+class _FlatExactEngine(FlatEngineBase):
+    """Shared base of the exact (uncompressed) flat wrappers: the message
+    buffer itself is the payload — d * 32 bits per transmission, decode is
+    the identity, and comp_err is exactly zero."""
+    eta: float = 0.1
+
+    def __post_init__(self):
+        super().__post_init__()
+        from repro.core.compression import Identity
+        assert self.compressor is None or isinstance(self.compressor,
+                                                     Identity), (
+            f"{type(self).__name__} is an exact baseline; it does not "
+            f"compress (got {type(self.compressor).__name__})")
+
+    def _wire_mix(self, buf):
+        """(W buf, wire_bits): ship the raw buffer, mix at the receiver."""
+        payload, decode, bits = self.encode_payload(None, buf)
+        _, w = self.mix_payload(payload, decode)
+        return w, bits
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatDGDEngine(_FlatExactEngine):
+    """DGD / D-PSGD: X+ = W X - eta g."""
+
+    def init(self, x0, g0, key):
+        return SimpleState(x=self.blockify(x0), k=jnp.zeros((), jnp.int32))
+
+    def step_with_wire(self, s: SimpleState, g, key):
+        gb = self._blockify_g(g)
+        wx, bits = self._wire_mix(s.x)
+        return (SimpleState(x=wx - self.eta * gb, k=s.k + 1),
+                _zero_err(), bits)
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatNIDSEngine(_FlatExactEngine):
+    """NIDS two-step primal-dual form (paper eqs. (4)-(5))."""
+
+    def init(self, x0, g0, key):
+        xb, gb = self.blockify(x0), self.blockify(g0)
+        return DualState(x=xb - self.eta * gb, d=jnp.zeros_like(xb),
+                         k=jnp.zeros((), jnp.int32))
+
+    def step_with_wire(self, s: DualState, g, key):
+        gb = self._blockify_g(g)
+        y = s.x - self.eta * gb - self.eta * s.d
+        wy, bits = self._wire_mix(y)
+        d = s.d + (y - wy) / (2.0 * self.eta)
+        x = s.x - self.eta * gb - self.eta * d
+        return DualState(x=x, d=d, k=s.k + 1), _zero_err(), bits
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatEXTRAEngine(_FlatExactEngine):
+    """EXTRA [Shi et al. 2015]:
+    X^{k+2} = (I+W) X^{k+1} - Wtilde X^k - eta (g^{k+1} - g^k),
+    Wtilde = (I+W)/2.  W x_prev is carried over from the previous step's
+    transmission (wx_prev), so each iteration ships exactly one vector."""
+
+    def init(self, x0, g0, key):
+        xb, gb = self.blockify(x0), self.blockify(g0)
+        wx0 = self._mix(xb)
+        return ExtraState(x=wx0 - self.eta * gb, x_prev=xb, wx_prev=wx0,
+                          g_prev=gb, k=jnp.zeros((), jnp.int32))
+
+    def step_with_wire(self, s: ExtraState, g, key):
+        gb = self._blockify_g(g)
+        wx, bits = self._wire_mix(s.x)
+        wtx_prev = 0.5 * (s.x_prev + s.wx_prev)
+        x = s.x + wx - wtx_prev - self.eta * (gb - s.g_prev)
+        new = ExtraState(x=x, x_prev=s.x, wx_prev=wx, g_prev=gb, k=s.k + 1)
+        return new, _zero_err(), bits
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatD2Engine(_FlatExactEngine):
+    """D2 [Tang et al. 2018b], paper eq. (15):
+    X^{k+1} = (I+W)/2 (2 X^k - X^{k-1} - eta g^k + eta g^{k-1})."""
+
+    def init(self, x0, g0, key):
+        xb, gb = self.blockify(x0), self.blockify(g0)
+        return PrevGradState(x=xb - self.eta * gb, x_prev=xb, g_prev=gb,
+                             k=jnp.zeros((), jnp.int32))
+
+    def step_with_wire(self, s: PrevGradState, g, key):
+        gb = self._blockify_g(g)
+        inner = 2.0 * s.x - s.x_prev - self.eta * gb + self.eta * s.g_prev
+        winner, bits = self._wire_mix(inner)
+        x = 0.5 * (inner + winner)
+        new = PrevGradState(x=x, x_prev=s.x, g_prev=gb, k=s.k + 1)
+        return new, _zero_err(), bits

@@ -1,0 +1,180 @@
+"""Flat-buffer LEAD engine: the fused-kernel hot path of the simulator.
+
+The pytree path (core/lead.py) touches every parameter element with ~12
+separate elementwise ops per iteration (Alg. 1 lines 4-7) — each an HBM
+round trip on a memory-bound update.  This engine keeps the LEAD state as
+contiguous ``(n_agents, nb, block)`` f32 buffers in the kernels' native
+block layout (see kernels/__init__.py for the layout contract) and runs the
+iteration as exactly two fused passes:
+
+  * pre-communication — fused Y-difference + encode.  For the p=inf
+    quantizer this is kernels.lead_update.lead_diff_encode (one read of
+    (X, G, D, H, dither), one write of int8 codes + per-block scales); every
+    other operator goes through its ``encode_blocks`` flat wire path (see
+    core/compression.py), one XLA-fused pass over the same buffers.
+  * kernels.lead_update.lead_update — post-communication: fused
+    H / H_w / D / X update, one read of (X, G, D, H, H_w, Qh, WQh), one
+    write of the four new state buffers.
+
+Codes on the wire
+-----------------
+Layout, wire protocol, and gossip stage come from the engine-family base
+(engines/base.py): between the two passes only the *payload* exists, mixed
+either densely (W @ decode) or around the encoded ring.  ``step_wire``
+additionally returns the bits each agent put on the wire this step, computed
+from the actual payload (data-dependent for RandK) — the byte-accurate
+x-axis of the paper's Fig. 1b/6, replacing static ``wire_bits(d)`` estimates.
+
+Bit-compatibility with the tree path
+------------------------------------
+The engine draws per-operator randomness exactly the way
+``simulator.vmap_compress`` does — one key per agent via
+``jax.random.split``, draws over the *logical* per-agent shape — and the
+fused kernels use the same left-to-right subtraction order as ``lead.step``,
+so ``engine="flat"`` and ``engine="tree"`` produce matching ``LEADState``
+trajectories for every shipped compressor (tests/test_engine.py asserts
+atol <= 1e-5 over 20 steps).  Zero rows are a fixed point of both passes,
+so the tile padding past the logical blocks never leaks into the trajectory.
+``dither="fast"`` (fused quantizer path only) swaps the threefry dither for
+the counter-hash generator in engines/base.py — statistically equivalent,
+much cheaper, but a different random stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engines.base import FlatEngineBase, _is_fused_quantizer
+from repro.core.lead import LEADHyper, _at
+from repro.kernels import lead_update as _lu
+from repro.kernels import quantize as _q
+
+
+class FlatLEADState(NamedTuple):
+    """LEAD state in the kernels' block layout: all buffers (n, nb, block)
+    f32, zero-padded past the logical dimension d."""
+    x: jnp.ndarray
+    h: jnp.ndarray
+    hw: jnp.ndarray
+    d: jnp.ndarray
+    k: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatLEADEngine(FlatEngineBase):
+    """init/step over flat buffers; mirrors core/lead.py semantics exactly.
+
+    compressor=None runs Identity (Qh = Y - H, no encode stage).  The p=inf
+    QuantizePNorm takes the fused diff+encode kernel; every other operator
+    (RandK, TopK, p != inf) goes through its encode_blocks wire path.
+
+    dither="match" draws the quantizer dither exactly as the tree path does
+    (per-agent threefry; trajectories match engine="tree" bit for bit modulo
+    compiler rounding).  dither="fast" uses the counter-hash generator in
+    engines/base.py — statistically equivalent, much cheaper, but a
+    different random stream, so trajectories equal the tree path's only in
+    distribution.  It applies to the fused quantizer path; other operators
+    always draw threefry inside encode_blocks (their cost is not
+    dither-dominated).
+
+    Two driving modes.  LEADSim passes a LEADHyper per call (init/step/
+    step_wire, schedules supported); alternatively the engine stores float
+    hypers (eta/gamma/alpha fields, the paper's defaults) and then follows
+    the family's baseline driver protocol — init(x0, g0, key) /
+    step_with_wire(state, g, key) — so ``engine_for(W, comp, d)`` hands
+    core/simulator.py run() a directly drivable engine like every other
+    registry entry.
+    """
+    eta: float = 0.1
+    gamma: float = 1.0
+    alpha: float = 0.5
+
+    @property
+    def hyper(self) -> LEADHyper:
+        """The stored hypers, for the per-call-hyper entry points."""
+        return LEADHyper(eta=self.eta, gamma=self.gamma, alpha=self.alpha)
+
+    def step_with_wire(self, state: FlatLEADState, g, key: jax.Array):
+        """Baseline driver protocol (engines/base.py) with stored hypers."""
+        return self.step_wire(state, g, key, self.hyper)
+
+    # -- algorithm ---------------------------------------------------------
+    def init(self, x0: jnp.ndarray, g0: jnp.ndarray,
+             hyper=None) -> FlatLEADState:
+        """Paper init: X^1 = X^0 - eta0 g(X^0); H^1 = X^0; H_w^1 = W H^1;
+        D^1 = 0.  x0, g0: (n, d).  `hyper` is a LEADHyper; any other value
+        (e.g. the driver protocol's PRNG key) selects the stored hypers."""
+        if not isinstance(hyper, LEADHyper):
+            hyper = self.hyper
+        eta0 = _at(hyper.eta, jnp.zeros((), jnp.int32))
+        xb, gb = self.blockify(x0), self.blockify(g0)
+        h1 = xb
+        return FlatLEADState(x=xb - eta0 * gb, h=h1, hw=self._mix(h1),
+                             d=jnp.zeros_like(xb),
+                             k=jnp.zeros((), jnp.int32))
+
+    # -- wire stages --------------------------------------------------------
+    def _encode(self, state: FlatLEADState, gb: jnp.ndarray, eta, key):
+        """Pre-communication pass: (payload, decode, wire_bits).
+
+        For the fused p=inf quantizer the Y-difference and the encode happen
+        in one kernel; other compressors compute the difference in XLA and
+        go through the base's encode_payload (their encode_blocks path)."""
+        comp = self.compressor
+        if comp is not None and _is_fused_quantizer(comp):
+            code, scale = _lu.lead_diff_encode(
+                self._rows(state.x), self._rows(gb), self._rows(state.d),
+                self._rows(state.h),
+                self._rows(self._dither_plane(key, state.k)),
+                eta, bits=comp.bits, tile_b=self.tile_b,
+                interpret=self.interpret)
+            return self.quant_payload(code, scale, comp.bits)
+
+        y = state.x - eta * gb - eta * state.d
+        return self.encode_payload(key, y - state.h)
+
+    def step_wire(self, state: FlatLEADState, g: jnp.ndarray, key: jax.Array,
+                  hyper=None):
+        """One LEAD iteration on flat buffers; g: gradients at state.x,
+        either (n, d) (blockified here) or already (n, nb, block) — the
+        engine's native layout, which skips the per-step padding copy.
+        `hyper` defaults to the engine's stored hypers.
+
+        Returns (new_state, comp_err, wire_bits):
+          comp_err  = ||Qh - (Y-H)|| / ||Y||, the compression error this
+                      step incurred;
+          wire_bits = bits per agent on the wire this step, from the actual
+                      payload.
+        jit callers that drop a metric get its extra passes DCE'd."""
+        if not isinstance(hyper, LEADHyper):
+            hyper = self.hyper
+        eta = _at(hyper.eta, state.k)
+        gamma = _at(hyper.gamma, state.k)
+        alpha = _at(hyper.alpha, state.k)
+        gb = self._blockify_g(g)
+
+        payload, decode, bits = self._encode(state, gb, eta, key)
+        qh, wqh = self.mix_payload(payload, decode)
+
+        xo, do, ho, hwo = _lu.lead_update(
+            self._rows(state.x), self._rows(gb), self._rows(state.d),
+            self._rows(state.h), self._rows(state.hw), self._rows(qh),
+            self._rows(wqh), eta, gamma, alpha,
+            tile_b=self.tile_b, interpret=self.interpret)
+        shape3 = (self.n, self.nb, self.block)
+        new = FlatLEADState(x=xo.reshape(shape3), d=do.reshape(shape3),
+                            h=ho.reshape(shape3), hw=hwo.reshape(shape3),
+                            k=state.k + 1)
+
+        y = state.x - eta * gb - eta * state.d
+        comp_err = self.rel_err(qh, y - state.h, y)
+        return new, comp_err, bits
+
+    def step(self, state: FlatLEADState, g: jnp.ndarray, key: jax.Array,
+             hyper=None) -> FlatLEADState:
+        """The family's uniform step: the new state alone (metrics and wire
+        accounting are DCE'd under jit; use step_wire to keep them)."""
+        return self.step_wire(state, g, key, hyper)[0]

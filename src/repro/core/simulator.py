@@ -19,9 +19,15 @@ skipped iterations pay only the step, not the metric reductions.
 The LEAD adapter wraps core/lead.py with a DenseGossip and a per-agent
 (vmapped) compressor so that blocks never straddle agents; with
 ``engine="flat"`` it instead drives the fused flat-buffer engine
-(core/engine.py) holding state in the kernels' (n, nb, block) layout, with
-codes-on-the-wire gossip (``engine_gossip="ring"``) and byte-accurate
+(core/engines/lead.py) holding state in the kernels' (n, nb, block) layout,
+with codes-on-the-wire gossip (``engine_gossip="ring"``) and byte-accurate
 per-step wire accounting from the actual payload.
+
+``run`` is generic over the whole flat engine family: any engine from
+core/engines (LEAD via LEADSim, the baseline twins directly — build one
+with ``core.engines.engine_for(..., algorithm=...)`` or
+``core.engines.flat_twin(tree_algo, dim)``) scan-compiles the same way,
+with Trace.bits_per_agent accumulated from the actual encoded payloads.
 """
 from __future__ import annotations
 
@@ -33,7 +39,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import lead as lead_mod
-from repro.core.engine import FlatLEADState, engine_for
+from repro.core.engines import engine_for
+from repro.core.engines.lead import FlatLEADState
 from repro.core.gossip import DenseGossip
 from repro.core.lead import LEADHyper
 from repro.core.convex import consensus_error, distance_to_opt
@@ -139,17 +146,21 @@ class Trace(NamedTuple):
 
     comp_err is ``||Q(m) - m|| / ||Y||`` where ``m`` is the message the
     algorithm transmitted THIS iteration (LEAD: the difference Y - H;
-    CHOCO-style baselines: x - xhat; plain baselines: x) and ``Y`` is the
-    full pre-communication iterate the message reconstructs (LEAD:
-    Y = X - eta g - eta D, evaluated at the pre-step state; baselines: the
-    pre-step X).  LEAD paths record it from inside the step — the error the
-    iteration actually incurred; baselines re-compress the transmitted
-    quantity of the pre-step state with the step's key.
+    CHOCO: x_half - xhat; DeepSqueeze: the error-compensated
+    v = x - eta g + e; QDGD: x; DCD: the post-gossip x - xhat) and ``Y``
+    is the pre-communication iterate that carries the message (LEAD:
+    Y = X - eta g - eta D at the pre-step state; CHOCO: x_half;
+    DeepSqueeze: v; QDGD/DCD: the transmitted iterate itself).  Every LEAD
+    path, every flat engine, and every compressed tree baseline records it
+    from inside the step — the error the iteration actually incurred;
+    only algorithms without step metrics fall back to the
+    ``_compression_error`` re-compression estimate.
 
     bits_per_agent is cumulative bits each agent has put on the wire up to
-    and including the iteration.  Flat-engine LEAD accumulates the *actual*
-    per-step payload size (data-dependent for RandK); other paths add the
-    compressor's static ``wire_bits(d)`` estimate per iteration.
+    and including the iteration.  Every flat engine (LEAD and the baseline
+    twins from core/engines) accumulates the *actual* per-step payload size
+    (data-dependent for RandK); tree paths add the compressor's static
+    ``wire_bits(d)`` estimate per iteration.
     """
     dist: np.ndarray
     consensus: np.ndarray
@@ -246,20 +257,30 @@ def run(algo, problem, x_star, *, iters=300, key=None, stochastic=False,
 
 
 def _compression_error(algo, state, problem, key) -> jnp.ndarray:
-    """Relative compression error of the quantity a *baseline* transmits
-    (traced, on-device), under the Trace convention: re-compress the
-    pre-step state's transmitted message m with the step's key and normalize
-    by the pre-step iterate norm ||Y|| = ||X|| (the baseline analogue of
-    LEAD's Y; LEAD paths record the exact in-step error instead)."""
+    """Fallback estimate of the Trace comp_err for algorithms WITHOUT step
+    metrics (every shipped path — LEAD, the flat engines, the compressed
+    tree baselines — reports the exact in-step error instead): re-compress
+    the transmitted message of the pre-step state with the step's key.
+
+    The target is the quantity the algorithm actually puts on the wire:
+    error-compensated algorithms (an ``e`` field) transmit
+    v = x - eta g + e — compressing the raw iterate instead would misstate
+    the error exactly when the compensation memory matters; hat-tracking
+    algorithms (an ``xhat`` field) transmit a difference against their
+    public copies; plain direct-compression algorithms transmit x."""
     comp = getattr(algo, "compressor", None)
     if comp is None:
         return jnp.zeros(())
-    if hasattr(state, "xhat"):
+    if hasattr(state, "e"):
+        eta = getattr(algo, "eta", 0.0)
+        target = state.x - eta * problem.full_grad(state.x) + state.e
+        ref = target
+    elif hasattr(state, "xhat"):
         target = state.x - state.xhat
+        ref = state.x
     else:
         target = state.x
+        ref = state.x
     keys = jax.random.split(key, target.shape[0])
     q = jax.vmap(comp.compress)(keys, target)
-    num = jnp.linalg.norm(q - target)
-    den = jnp.linalg.norm(state.x) + 1e-12
-    return num / den
+    return jnp.linalg.norm(q - target) / (jnp.linalg.norm(ref) + 1e-12)

@@ -31,11 +31,16 @@ All kernels operate on the blockified layout produced by ops._to_blocks:
 a logical f32 vector of length d is zero-padded and reshaped to
 ``(nb, block)`` with ``block = 512`` (the paper's quantization block,
 4 x 128 TPU lanes) and ``nb`` a multiple of the grid tile ``tile_b``.
-Rows are independent quantization blocks, so batched callers (the
-flat-buffer LEAD engine in core/engine.py) may stack agents along the row
-axis — ``(n_agents * nb, block)`` — and make a single kernel call.  Zero
-rows are a fixed point of every kernel (codes/scales/updates stay zero),
-which is what makes the zero-padding safe.
+Rows are independent quantization blocks, so batched callers (the flat
+engine family in core/engines/ — LEAD plus the flat twins of every paper
+baseline) may stack agents along the row axis — ``(n_agents * nb, block)``
+— and make a single kernel call.  Zero rows are a fixed point of every
+kernel (codes/scales/updates stay zero), which is what makes the
+zero-padding safe.  The family's shared substrate
+(core/engines/base.py: blockify/unblockify, the dither plane, the
+encode/decode wire stage, dense|ring gossip) is the single producer of
+buffers in this layout; every engine state is a NamedTuple of such
+buffers.
 
 Encoded-payload interface (codes on the wire)
 ---------------------------------------------
@@ -48,17 +53,25 @@ axis) permute payload leaves and decode at the receiver, and `bits` is the
 per-agent wire cost of the actual payload.  The kernels here are the fused
 producers of those payloads:
 
-    QuantizePNorm(p=inf)  lead_update.lead_diff_encode -> {code int8 (rows,
-                          block), scale f32 (rows, 1)}; quantize.decode at
-                          the receiver; ops.pack_codes turns the int8 lanes
-                          into the dense (bits+1)-bit uint32 wire words.
+    QuantizePNorm(p=inf)  LEAD's fused diff+encode is
+                          lead_update.lead_diff_encode; the baseline engines
+                          (CHOCO/DeepSqueeze/QDGD/DCD hat-difference
+                          updates) feed their message buffer through
+                          quantize.encode with the same dither plane ->
+                          {code int8 (rows, block), scale f32 (rows, 1)};
+                          quantize.decode at the receiver; ops.pack_codes
+                          turns the int8 lanes into the dense (bits+1)-bit
+                          uint32 wire words.
     RandK                 sparsify.randk_encode -> {values f32}: keep-mask
                           u < ratio computed in-kernel from the shared-seed
-                          dither plane; no indices travel.
+                          dither plane; no indices travel.  Reused as-is by
+                          the baseline engines' difference compression.
     TopK                  sparsify.mask_apply  -> {values f32}: applies the
                           exact-k mask built from jax.lax.top_k indices
                           (ties must not inflate the payload past the k
-                          values the accounting charges).
+                          values the accounting charges), or — with
+                          approx_threshold — the sampled-quantile mask
+                          (O(d/block) threshold, data-dependent bits).
 """
 from repro.kernels import dispatch, ops, ref, sparsify
 from repro.kernels.dispatch import default_backend, resolve_backend

@@ -145,3 +145,67 @@ def test_wire_bits_accounting():
     assert q.wire_bits(512) == 512 * 3 + 32
     assert q.wire_bits(513) == 513 * 3 + 64
     assert Identity().wire_bits(100) == 3200
+
+
+def test_topk_approx_threshold_tracks_exact(key):
+    """Sampled-quantile TopK (flat path): the kept count stays near k, every
+    clearly-above-threshold entry (the exact top k/2) is kept, and the kept
+    values are the untouched originals — approximation only relaxes WHICH
+    borderline entries make the cut, never their values."""
+    n, d, block = 8, 1 << 14, 512
+    nb = d // block
+    x = jax.random.normal(key, (n, d))
+    buf = x.reshape(n, nb, block)
+    exact = TopK(ratio=0.1)
+    approx = TopK(ratio=0.1, approx_threshold=True)
+    k = exact._k(d)
+
+    pl_a, bits_a = approx.encode_blocks(key, buf, d)
+    vals = np.asarray(approx.decode_blocks(pl_a).reshape(n, -1)[:, :d])
+    xs = np.asarray(x)
+
+    kept = (vals != 0).sum(axis=1)
+    assert np.all(kept >= 0.4 * k) and np.all(kept <= 2.5 * k), kept
+    # kept entries carry their original values
+    np.testing.assert_array_equal(vals[vals != 0], xs[vals != 0])
+    # the unambiguous top half of the exact top-k survives the approximation
+    for i in range(n):
+        top_half = np.argsort(-np.abs(xs[i]))[: k // 2]
+        assert np.all(vals[i][top_half] != 0)
+    # bits are counted from the actual mask, not the static estimate
+    assert float(bits_a) == pytest.approx(
+        kept.mean() * (32 + np.log2(d)), rel=1e-6)
+
+
+def test_topk_approx_zero_rows_ship_nothing(key):
+    """Regression: an all-zero agent must not pay wire bits (the sampled
+    threshold is 0 there; a >= 0 mask would keep the whole zero vector)."""
+    n, d, block = 2, 2048, 512
+    x = jnp.concatenate([jax.random.normal(key, (1, d)), jnp.zeros((1, d))])
+    buf = x.reshape(n, d // block, block)
+    approx = TopK(ratio=0.1, approx_threshold=True)
+    pl, bits = approx.encode_blocks(key, buf, d)
+    vals = approx.decode_blocks(pl).reshape(n, -1)
+    assert int(jnp.sum(vals[1] != 0)) == 0
+    kept0 = int(jnp.sum(vals[0] != 0))
+    assert float(bits) == pytest.approx(kept0 / n * (32 + np.log2(d)),
+                                        rel=1e-6)
+
+
+def test_topk_approx_through_flat_engine(key):
+    """The approx-threshold operator runs end to end through a flat engine
+    step with finite state and positive data-dependent wire bits."""
+    from repro.core import topology
+    from repro.core.engines import engine_for
+    from repro.core.lead import LEADHyper
+    W = jnp.asarray(topology.ring(4))
+    comp = TopK(ratio=0.1, approx_threshold=True)
+    eng = engine_for(W, comp, 4096)
+    x0 = jax.random.normal(key, (4, 4096))
+    g0 = jax.random.normal(jax.random.fold_in(key, 1), (4, 4096))
+    hyper = LEADHyper(eta=0.05)
+    st = eng.init(x0, g0, hyper)
+    st, _, bits = jax.jit(lambda s, g, k: eng.step_wire(s, g, k, hyper))(
+        st, g0, key)
+    assert bool(jnp.all(jnp.isfinite(st.x)))
+    assert 0 < float(bits) < 4096 * 32

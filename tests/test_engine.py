@@ -55,7 +55,7 @@ def _setup(W):
 def _steppers(eng, gossip, hyper, comp):
     tree = jax.jit(lambda s, g, k: lead_mod.step_with_metrics(
         s, g, k, hyper, gossip.mix, vmap_compress(comp)))
-    flat = jax.jit(lambda s, g, k: eng.step(s, g, k, hyper))
+    flat = jax.jit(lambda s, g, k: eng.step_wire(s, g, k, hyper)[:2])
     return tree, flat
 
 
@@ -211,8 +211,8 @@ def test_encoded_ring_gossip_matches_dense_gossip():
     comp = QuantizePNorm(bits=2, block=512)
     eng_d = engine_for(gossip.W, comp, D, gossip="dense")
     eng_r = engine_for(gossip.W, comp, D, gossip="ring")
-    step_d = jax.jit(lambda s, g, k: eng_d.step(s, g, k, hyper))
-    step_r = jax.jit(lambda s, g, k: eng_r.step(s, g, k, hyper))
+    step_d = jax.jit(lambda s, g, k: eng_d.step_wire(s, g, k, hyper)[:2])
+    step_r = jax.jit(lambda s, g, k: eng_r.step_wire(s, g, k, hyper)[:2])
 
     x0 = jnp.zeros((N, D))
     g0 = prob.full_grad(x0)
@@ -349,7 +349,7 @@ def test_blockify_roundtrip_and_padding_fixed_point():
                                   np.asarray(x))
     hyper = LEADHyper(eta=0.05)
     st = eng.init(x, jnp.zeros_like(x), hyper)
-    st, _ = eng.step(st, jax.random.normal(key, (4, 700)), key, hyper)
+    st = eng.step(st, jax.random.normal(key, (4, 700)), key, hyper)
     tail = np.asarray(st.x.reshape(4, -1)[:, 700:])
     assert np.all(tail == 0.0)
     tail_d = np.asarray(st.d.reshape(4, -1)[:, 700:])

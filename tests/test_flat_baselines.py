@@ -1,0 +1,332 @@
+"""Flat baseline engines (core/engines/baselines.py) vs the tree references.
+
+Equivalence contract, mirroring tests/test_engine.py for LEAD:
+
+  * dense gossip — the flat engine's free-running trajectory matches the
+    tree baseline's draw for draw (same per-agent key split inside
+    encode_blocks), atol 1e-5 over 15 steps, for every compressed baseline
+    x {RandK, p=inf quantizer} and every exact baseline;
+  * ring gossip — from any common state along a real tree trajectory, one
+    encoded-ring flat step matches the tree step (which mixes densely with
+    the ring W) to atol 1e-5: only the mixing's summation order separates
+    them, so the per-step comparison isolates it from trajectory chaos;
+  * wire accounting — Trace.bits_per_agent for a compressed baseline under
+    EncodedRingGossip accumulates the *actual* payload bits (data-dependent
+    for RandK), consistent with the static wire_bits estimate on average;
+  * comp_err — tree and flat report the same exact in-step error of the
+    transmitted message (for DeepSqueeze: the error-compensated v, the
+    regression of the old re-compress-x approximation).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import topology
+from repro.core.baselines import (CHOCO_SGD, D2, DCD_SGD, DGD, EXTRA, NIDS,
+                                  DeepSqueeze, QDGD)
+from repro.core.compression import Identity, QuantizePNorm, RandK
+from repro.core.convex import LinearRegression
+from repro.core.engines import ENGINES, engine_for, flat_twin
+from repro.core.engines.baselines import ExtraState
+from repro.core.gossip import DenseGossip
+from repro.core.simulator import run
+from repro.core.engines.base import FlatEngineBase
+
+N, D = 8, 768          # two logical blocks per agent, second one ragged
+STEPS = 15
+ATOL = 1e-5
+
+COMPRESSORS = {
+    "randk": RandK(ratio=0.25),
+    "quant4": QuantizePNorm(bits=4, block=512),
+}
+
+
+def _setup():
+    key = jax.random.PRNGKey(0)
+    prob = LinearRegression.generate(key, n_agents=N, m=64, d=D)
+    gossip = DenseGossip(W=jnp.asarray(topology.ring(N)))
+    return key, prob, gossip
+
+
+def _tree_algos(gossip, comp):
+    eta = 0.02
+    return {
+        "choco": CHOCO_SGD(gossip=gossip, compressor=comp, eta=eta, gamma=0.8),
+        "deepsqueeze": DeepSqueeze(gossip=gossip, compressor=comp, eta=eta,
+                                   gamma=0.2),
+        "qdgd": QDGD(gossip=gossip, compressor=comp, eta=eta, gamma=0.2),
+        "dcd": DCD_SGD(gossip=gossip, compressor=comp, eta=eta),
+    }
+
+
+def _exact_algos(gossip):
+    return {
+        "dgd": DGD(gossip=gossip, eta=0.05),
+        "nids": NIDS(gossip=gossip, eta=0.05),
+        "extra": EXTRA(gossip=gossip, eta=0.02),
+        "d2": D2(gossip=gossip, eta=0.05),
+    }
+
+
+def _blockify_state(eng, st):
+    """Tree state -> the engine's blocked layout (same NamedTuple class)."""
+    if isinstance(st, tuple) and hasattr(st, "_asdict"):
+        vals = {f: eng.blockify(v) if getattr(v, "ndim", 0) == 2 else v
+                for f, v in st._asdict().items()}
+        return type(st)(**vals)
+    raise TypeError(type(st))
+
+
+@pytest.mark.parametrize("comp_name", sorted(COMPRESSORS))
+@pytest.mark.parametrize("algo_name", ["choco", "deepsqueeze", "qdgd", "dcd"])
+def test_flat_compressed_trajectory_equals_tree(algo_name, comp_name):
+    """Dense gossip: the flat engine free-runs the tree baseline's exact
+    trajectory (same per-agent compressor draws), all state fields."""
+    key, prob, gossip = _setup()
+    tree = _tree_algos(gossip, COMPRESSORS[comp_name])[algo_name]
+    eng = flat_twin(tree, D)
+    tree_step = jax.jit(tree.step_with_metrics)
+    flat_step = jax.jit(eng.step_with_wire)
+
+    x0 = jnp.zeros((N, D))
+    g0 = prob.full_grad(x0)
+    st_t = tree.init(x0, g0, key)
+    st_f = eng.init(x0, g0, key)
+    for k in range(STEPS):
+        kk = jax.random.fold_in(key, k)
+        st_t, cerr_t = tree_step(st_t, prob.full_grad(st_t.x), kk)
+        st_f, cerr_f, _ = flat_step(st_f, prob.full_grad(eng.x_of(st_f)), kk)
+        for f in st_t._fields:
+            if f == "k":
+                continue
+            ref = getattr(st_t, f)
+            dev = float(jnp.max(jnp.abs(eng.unblockify(getattr(st_f, f))
+                                        - ref)))
+            tol = ATOL * (1.0 + float(jnp.max(jnp.abs(ref))))
+            assert dev <= tol, f"step {k}, field {f}: deviation {dev}"
+        np.testing.assert_allclose(float(cerr_f), float(cerr_t), atol=1e-5)
+
+
+@pytest.mark.parametrize("comp_name", sorted(COMPRESSORS))
+@pytest.mark.parametrize("algo_name", ["choco", "deepsqueeze", "qdgd", "dcd"])
+def test_flat_ring_step_equals_tree_step(algo_name, comp_name):
+    """Ring gossip (codes on the wire): from each common state along a real
+    tree trajectory, one encoded-ring flat step matches the tree step to
+    ATOL — only the ring mixing's summation order separates them."""
+    key, prob, gossip = _setup()
+    tree = _tree_algos(gossip, COMPRESSORS[comp_name])[algo_name]
+    eng = flat_twin(tree, D, gossip="ring")
+    tree_step = jax.jit(tree.step_with_metrics)
+    flat_step = jax.jit(eng.step_with_wire)
+
+    x0 = jnp.zeros((N, D))
+    g0 = prob.full_grad(x0)
+    st = tree.init(x0, g0, key)
+    for k in range(STEPS):
+        kk = jax.random.fold_in(key, k)
+        g = prob.full_grad(st.x)
+        st_t, cerr_t = tree_step(st, g, kk)
+        st_f, cerr_f, _ = flat_step(_blockify_state(eng, st), g, kk)
+        for f in st_t._fields:
+            if f == "k":
+                continue
+            ref = getattr(st_t, f)
+            dev = float(jnp.max(jnp.abs(eng.unblockify(getattr(st_f, f))
+                                        - ref)))
+            tol = ATOL * (1.0 + float(jnp.max(jnp.abs(ref))))
+            assert dev <= tol, f"step {k}, field {f}: deviation {dev}"
+        np.testing.assert_allclose(float(cerr_f), float(cerr_t), atol=1e-5)
+        st = st_t
+
+
+@pytest.mark.parametrize("gossip_mode", ["dense", "ring"])
+@pytest.mark.parametrize("algo_name", ["dgd", "nids", "extra", "d2"])
+def test_flat_exact_engines_equal_tree(algo_name, gossip_mode):
+    """The exact wrappers (no encode stage): dense free-runs the tree
+    trajectory; ring matches per step from a common state."""
+    key, prob, gossip = _setup()
+    tree = _exact_algos(gossip)[algo_name]
+    eng = flat_twin(tree, D, gossip=gossip_mode)
+    flat_step = jax.jit(eng.step_with_wire)
+
+    x0 = jnp.zeros((N, D))
+    g0 = prob.full_grad(x0)
+    st_t = tree.init(x0, g0, key)
+    st_f = eng.init(x0, g0, key)
+    for k in range(STEPS):
+        kk = jax.random.fold_in(key, k)
+        g = prob.full_grad(st_t.x)
+        if gossip_mode == "ring":
+            # re-sync: isolate the ring mixing from trajectory chaos
+            if isinstance(st_f, ExtraState):
+                st_f = ExtraState(x=eng.blockify(st_t.x),
+                                  x_prev=eng.blockify(st_t.x_prev),
+                                  wx_prev=eng._mix(eng.blockify(st_t.x_prev)),
+                                  g_prev=eng.blockify(st_t.g_prev), k=st_t.k)
+            else:
+                st_f = _blockify_state(eng, st_t)
+        st_t = tree.step(st_t, g, kk)
+        gf = g if gossip_mode == "ring" else prob.full_grad(eng.x_of(st_f))
+        st_f, cerr, bits = flat_step(st_f, gf, kk)
+        dev = float(jnp.max(jnp.abs(eng.x_of(st_f) - st_t.x)))
+        tol = ATOL * (1.0 + float(jnp.max(jnp.abs(st_t.x))))
+        assert dev <= tol, f"step {k}: deviation {dev}"
+        assert float(cerr) == 0.0
+        assert float(bits) == pytest.approx(D * 32)
+
+
+def test_trace_bits_accumulate_actual_ring_payload():
+    """run() x-axis for a compressed baseline under EncodedRingGossip: the
+    bits trace is the cumulative sum of actual payload sizes — varying per
+    step for RandK, matching the static estimate exactly for the
+    quantizer."""
+    key = jax.random.PRNGKey(0)
+    prob = LinearRegression.generate(key, n_agents=8, m=50, d=40)
+    W = jnp.asarray(topology.ring(8))
+
+    rk = RandK(ratio=0.25)
+    algo = engine_for(W, rk, 40, algorithm="choco", gossip="ring",
+                      eta=0.05, gamma=0.8)
+    tr = run(algo, prob, prob.x_star, iters=10)
+    per_step = np.diff(np.concatenate([[0.0], tr.bits_per_agent]))
+    assert np.all(per_step > 0)
+    assert len(np.unique(per_step)) > 1, "RandK payload should vary per step"
+    assert abs(per_step.mean() - rk.wire_bits(40)) < 0.5 * rk.wire_bits(40)
+
+    q2 = QuantizePNorm(bits=2)
+    algo = engine_for(W, q2, 40, algorithm="choco", gossip="ring",
+                      eta=0.05, gamma=0.8)
+    tr = run(algo, prob, prob.x_star, iters=10)
+    np.testing.assert_allclose(
+        tr.bits_per_agent, (np.arange(10) + 1) * q2.wire_bits(40))
+
+
+def test_flat_choco_converges_through_simulator():
+    """A flat baseline engine driven directly by the scan simulator reaches
+    the tree baseline's optimum (the Fig. 2 harness on the fast path)."""
+    key = jax.random.PRNGKey(0)
+    prob = LinearRegression.generate(key, n_agents=8, m=40, d=30, noise=0.05)
+    gossip = DenseGossip(W=jnp.asarray(topology.ring(8)))
+    mu, L = prob.mu_L
+    tree = CHOCO_SGD(gossip=gossip, compressor=QuantizePNorm(bits=4),
+                     eta=1.0 / L, gamma=0.8)
+    tr_tree = run(tree, prob, prob.x_star, iters=400)
+    tr_flat = run(flat_twin(tree, 30), prob, prob.x_star, iters=400)
+    assert tr_flat.dist[-1] < 1e-2 * tr_flat.dist[0]
+    np.testing.assert_allclose(np.log10(tr_flat.dist + 1e-12),
+                               np.log10(tr_tree.dist + 1e-12), atol=1.0)
+
+
+def test_deepsqueeze_comp_err_targets_compensated_message():
+    """Regression (old _compression_error re-compressed state.x): the
+    reported error must be that of the transmitted v = x - eta g + e."""
+    key = jax.random.PRNGKey(1)
+    prob = LinearRegression.generate(key, n_agents=N, m=64, d=D)
+    gossip = DenseGossip(W=jnp.asarray(topology.ring(N)))
+    comp = QuantizePNorm(bits=2, block=512)
+    algo = DeepSqueeze(gossip=gossip, compressor=comp, eta=0.05, gamma=0.2)
+
+    x = jax.random.normal(key, (N, D))
+    e = 10.0 * jax.random.normal(jax.random.fold_in(key, 1), (N, D))
+    st = algo.init(x, jnp.zeros_like(x), key)._replace(x=x, e=e)
+    g = prob.full_grad(x)
+    _, cerr = algo.step_with_metrics(st, g, key)
+
+    v = x - algo.eta * g + e
+    keys = jax.random.split(key, N)
+    c = jax.vmap(comp.compress)(keys, v)
+    expect = float(jnp.linalg.norm(c - v) / (jnp.linalg.norm(v) + 1e-12))
+    np.testing.assert_allclose(float(cerr), expect, rtol=1e-6)
+
+    # the old approximation (compress state.x) is measurably different here
+    q_old = jax.vmap(comp.compress)(keys, x)
+    old = float(jnp.linalg.norm(q_old - x) / (jnp.linalg.norm(x) + 1e-12))
+    assert abs(old - expect) > 1e-3
+
+
+def test_registry_dispatch_and_validation():
+    W = jnp.asarray(topology.ring(4))
+    q2 = QuantizePNorm(bits=2)
+    for name in ("lead", "choco", "choco-sgd", "deepsqueeze", "qdgd",
+                 "dcd", "dcd_sgd"):
+        eng = engine_for(W, q2, 64, algorithm=name)
+        assert isinstance(eng, FlatEngineBase)
+    for name in ("dgd", "nids", "extra", "d2"):
+        eng = engine_for(W, None, 64, algorithm=name)
+        assert isinstance(eng, FlatEngineBase)
+        # Identity is accepted (it IS the exact wire), a real compressor not
+        assert isinstance(engine_for(W, Identity(), 64, algorithm=name),
+                          FlatEngineBase)
+        with pytest.raises(ValueError):
+            engine_for(W, q2, 64, algorithm=name)
+    with pytest.raises(KeyError):
+        engine_for(W, q2, 64, algorithm="adam")
+
+    class NotACompressor:
+        pass
+
+    with pytest.raises(NotImplementedError):
+        engine_for(W, NotACompressor(), 64, algorithm="choco")
+
+
+def test_flat_twin_mirrors_hypers():
+    gossip = DenseGossip(W=jnp.asarray(topology.ring(4)))
+    tree = CHOCO_SGD(gossip=gossip, compressor=RandK(ratio=0.5), eta=0.07,
+                     gamma=0.33)
+    eng = flat_twin(tree, 64)
+    assert eng.eta == 0.07 and eng.gamma == 0.33
+    assert eng.compressor is tree.compressor
+    assert dataclasses.asdict(eng)["dim"] == 64
+
+
+def test_registry_covers_every_baseline():
+    """Every algorithm in the Fig. 2-4 sweep has a registered flat engine."""
+    for name in ("lead", "choco", "deepsqueeze", "qdgd", "dcd", "dgd",
+                 "nids", "extra", "d2"):
+        assert name in ENGINES
+
+
+@pytest.mark.slow
+def test_full_family_sweep_through_simulator():
+    """Long simulator sweep (slow lane): every registered algorithm runs 300
+    scan-compiled iterations on the Fig. 2 problem under both gossip modes
+    with finite traces and strictly-accumulating wire bits."""
+    key = jax.random.PRNGKey(0)
+    prob = LinearRegression.generate(key, n_agents=8, m=40, d=30, noise=0.05)
+    W = jnp.asarray(topology.ring(8))
+    mu, L = prob.mu_L
+    comps = {"choco": QuantizePNorm(bits=4), "deepsqueeze": QuantizePNorm(bits=4),
+             "qdgd": QuantizePNorm(bits=4), "dcd": QuantizePNorm(bits=6)}
+    for mode in ("dense", "ring"):
+        for name, comp in comps.items():
+            algo = engine_for(W, comp, 30, algorithm=name, gossip=mode,
+                              eta=0.2 / L)
+            tr = run(algo, prob, prob.x_star, iters=300)
+            assert np.isfinite(tr.dist[-1]), (name, mode)
+            assert np.all(np.diff(tr.bits_per_agent) > 0), (name, mode)
+        for name in ("dgd", "nids", "extra", "d2"):
+            algo = engine_for(W, None, 30, algorithm=name, gossip=mode,
+                              eta=0.5 / L)
+            tr = run(algo, prob, prob.x_star, iters=300)
+            assert np.isfinite(tr.dist[-1]), (name, mode)
+            assert tr.dist[-1] < tr.dist[0], (name, mode)
+            assert np.all(np.diff(tr.bits_per_agent) > 0), (name, mode)
+
+
+def test_lead_engine_directly_drivable_by_run():
+    """Regression: the registry's default entry (algorithm='lead') must
+    follow the same driver protocol as every other engine — run() drives it
+    without a LEADSim wrapper, using the engine's stored hypers."""
+    key = jax.random.PRNGKey(0)
+    prob = LinearRegression.generate(key, n_agents=8, m=50, d=40)
+    W = jnp.asarray(topology.ring(8))
+    algo = engine_for(W, QuantizePNorm(bits=2), 40, eta=0.1)
+    tr = run(algo, prob, prob.x_star, iters=200)
+    assert tr.dist[-1] < 1e-5
+    np.testing.assert_allclose(
+        tr.bits_per_agent,
+        (np.arange(200) + 1) * QuantizePNorm(bits=2).wire_bits(40))
