@@ -45,6 +45,13 @@ def bench(hetero: bool, stochastic: bool, fig: str):
         f"{fig}/QDGD(2bit)": QDGD(gossip=gossip, compressor=q2, eta=eta,
                                   gamma=0.4),
     }
+    if stochastic:
+        # Fig. 3's diminishing-stepsize variant (Theorem 2 shape) on the
+        # flat path: the schedule resolves at state.k inside the scan
+        algos[f"{fig}/LEAD(2bit,flat,thm2)"] = LEADSim(
+            gossip=gossip, compressor=q2,
+            eta=lambda k: eta / (1.0 + 0.01 * k),
+            engine="flat", dither="fast")
     for name, algo in algos.items():
         t0 = time.perf_counter()
         tr = run(algo, prob, x_star, iters=ITERS, key=key,

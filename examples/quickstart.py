@@ -11,7 +11,7 @@ import jax.numpy as jnp
 from repro.core import topology
 from repro.core.compression import QuantizePNorm
 from repro.core.convex import LinearRegression
-from repro.core.engines import engine_for
+from repro.core.engines import describe, engine_for
 from repro.core.gossip import DenseGossip
 from repro.core.simulator import LEADSim, run
 
@@ -35,6 +35,9 @@ def main():
         "DGD  (32-bit)": engine_for(gossip.W, None, prob.d, algorithm="dgd",
                                     eta=eta),
     }
+    # the registry path each run resolves (tests/test_docs.py pins the
+    # README's engine matrix against the same registry)
+    print("registry:", describe(engine_for(gossip.W, q2, prob.d)))
     print(f"{'iter':>6} | " + " | ".join(f"{n:>14}" for n in algos))
     traces = {n: run(a, prob, prob.x_star, iters=200, key=key)
               for n, a in algos.items()}

@@ -25,6 +25,11 @@ def main():
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
+    # serving resolves only the model-config registry: no decentralized
+    # engine is involved (print it so docs and runs can't silently diverge)
+    print(f"registry: arch={args.arch} -> {cfg.name} (family={cfg.family}) "
+          "via repro.configs.registry; algorithm=none compressor=none "
+          "gossip=none (serving path)")
     key = jax.random.PRNGKey(0)
     params = init_params(cfg, key)
     B, S = args.batch, args.prompt_len

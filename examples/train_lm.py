@@ -23,16 +23,24 @@ def main():
     ap.add_argument("--steps", type=int, default=60)
     args = ap.parse_args()
 
+    algorithm, bits = "lead", 2
     cmd = [sys.executable, "-m", "repro.launch.train",
            "--devices", "8", "--mesh-shape", "4,2",
            "--arch", "granite-3-2b",
            "--steps", str(args.steps),
-           "--algorithm", "lead", "--bits", "2",
+           "--algorithm", algorithm, "--bits", str(bits),
            "--ckpt-dir", os.path.join(HERE, "..", "reports", "ckpt_demo")]
     if not args.full:
         cmd.append("--reduced")
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+
+    # the launch driver prints the resolved registry path — a "registry:
+    # algorithm=... compressor=... gossip=..." line (core.engines.describe,
+    # computed from the real mesh) — as part of this run's output, so docs
+    # snippets and real runs can't silently diverge
+    print(f"launching algorithm={algorithm} bits={bits}; the 'registry:' "
+          "line below is the engine_for path this run resolved")
     print("+", " ".join(cmd))
     sys.exit(subprocess.call(cmd, env=env))
 

@@ -42,13 +42,33 @@ def save_pytree(path: str, tree: Any) -> None:
 
 
 def load_pytree(path: str, like: Any, shardings: Optional[Any] = None) -> Any:
-    """Restore into the structure of `like` (leaf order must match save)."""
+    """Restore into the structure of `like`.
+
+    Leaves are matched by their saved *path keys* (the json tree spec), not
+    by position: same-shaped leaves under renamed paths — e.g. a
+    TrainState whose h/hw/d fields moved into an `algo` dict — would pass a
+    positional count+shape check silently permuted, so a path mismatch
+    raises instead of corrupting the restored state.  Checkpoints written
+    before the path meta existed fall back to positional order."""
     with np.load(path, allow_pickle=False) as z:
+        meta = (json.loads(z["__meta__"].item())
+                if "__meta__" in z.files else None)
         n = len([k for k in z.files if k.startswith("leaf_")])
         arrays = [z[f"leaf_{i}"] for i in range(n)]
-    leaves, treedef = jax.tree_util.tree_flatten(like)
+    keys, leaves, treedef = _paths(like)
     assert len(leaves) == len(arrays), \
         f"checkpoint has {len(arrays)} leaves, target {len(leaves)}"
+    saved_keys = (meta or {}).get("keys")
+    if saved_keys:
+        by_key = dict(zip(saved_keys, arrays))
+        missing = [k for k in keys if k not in by_key]
+        if missing:
+            raise ValueError(
+                f"checkpoint {path} does not match the target pytree: "
+                f"target paths {missing[:3]} are absent from the saved "
+                f"paths (e.g. {saved_keys[:3]}).  Refusing a positional "
+                "restore — it would silently permute state leaves.")
+        arrays = [by_key[k] for k in keys]
     out = []
     shard_leaves = jax.tree_util.tree_leaves(shardings) if shardings is not None else [None] * len(arrays)
     for a, ref, sh in zip(arrays, leaves, shard_leaves):

@@ -15,7 +15,12 @@ Implemented (source in brackets):
   * DCD-SGD                [Tang et al. 2018a]
 
 Each algorithm exposes  init(x0, g0, key) -> state  and
-step(state, g, key) -> state, where g = grad F(state.x; xi).  A uniform
+step(state, g, key) -> state, where g = grad F(state.x; xi).  Every
+hyper-parameter (eta, gamma) is a ``Schedule`` — a float or a callable of
+the iteration counter k (core/lead.py `_at`; the Theorem 2
+diminishing-stepsize mode) — resolved at ``state.k`` inside each step, so
+the Fig. 3 stochastic sweeps drive the baselines with the same schedule
+objects as LEAD.  A uniform
 `state.x` field holds the current iterates so drivers can be generic.  The
 compressed algorithms additionally expose
 step_with_metrics(state, g, key) -> (state, comp_err) with comp_err the
@@ -42,6 +47,7 @@ import jax.numpy as jnp
 
 from repro.core.compression import rel_err as _rel_err
 from repro.core.gossip import DenseGossip
+from repro.core.lead import Schedule, _at
 
 
 class SimpleState(NamedTuple):
@@ -79,13 +85,13 @@ class DualState(NamedTuple):
 class DGD:
     """Decentralized gradient descent: X+ = W X - eta g (no compression)."""
     gossip: DenseGossip
-    eta: float = 0.1
+    eta: Schedule = 0.1
 
     def init(self, x0, g0, key):
         return SimpleState(x=x0, k=jnp.zeros((), jnp.int32))
 
     def step(self, s: SimpleState, g, key):
-        x = self.gossip.mix(s.x) - self.eta * g
+        x = self.gossip.mix(s.x) - _at(self.eta, s.k) * g
         return SimpleState(x=x, k=s.k + 1)
 
 
@@ -93,17 +99,18 @@ class DGD:
 class NIDS:
     """NIDS two-step primal-dual form (paper eqs. (4)-(5))."""
     gossip: DenseGossip
-    eta: float = 0.1
+    eta: Schedule = 0.1
 
     def init(self, x0, g0, key):
-        x1 = x0 - self.eta * g0
+        x1 = x0 - _at(self.eta, jnp.zeros((), jnp.int32)) * g0
         d1 = jnp.zeros_like(x0)
         return DualState(x=x1, d=d1, k=jnp.zeros((), jnp.int32))
 
     def step(self, s: DualState, g, key):
-        y = s.x - self.eta * g - self.eta * s.d
-        d = s.d + self.gossip.i_minus_w(y) / (2.0 * self.eta)
-        x = s.x - self.eta * g - self.eta * d
+        eta = _at(self.eta, s.k)
+        y = s.x - eta * g - eta * s.d
+        d = s.d + self.gossip.i_minus_w(y) / (2.0 * eta)
+        x = s.x - eta * g - eta * d
         return DualState(x=x, d=d, k=s.k + 1)
 
 
@@ -113,16 +120,16 @@ class EXTRA:
     X^{k+2} = (I+W) X^{k+1} - Wtilde X^k - eta (g^{k+1} - g^k),
     Wtilde = (I+W)/2."""
     gossip: DenseGossip
-    eta: float = 0.1
+    eta: Schedule = 0.1
 
     def init(self, x0, g0, key):
-        x1 = self.gossip.mix(x0) - self.eta * g0
+        x1 = self.gossip.mix(x0) - _at(self.eta, jnp.zeros((), jnp.int32)) * g0
         return PrevGradState(x=x1, x_prev=x0, g_prev=g0, k=jnp.zeros((), jnp.int32))
 
     def step(self, s: PrevGradState, g, key):
         Wx = self.gossip.mix(s.x)
         Wtx_prev = 0.5 * (s.x_prev + self.gossip.mix(s.x_prev))
-        x = s.x + Wx - Wtx_prev - self.eta * (g - s.g_prev)
+        x = s.x + Wx - Wtx_prev - _at(self.eta, s.k) * (g - s.g_prev)
         return PrevGradState(x=x, x_prev=s.x, g_prev=g, k=s.k + 1)
 
 
@@ -131,14 +138,15 @@ class D2:
     """D2 [Tang et al. 2018b], paper eq. (15):
     X^{k+1} = (I+W)/2 (2 X^k - X^{k-1} - eta g^k + eta g^{k-1})."""
     gossip: DenseGossip
-    eta: float = 0.1
+    eta: Schedule = 0.1
 
     def init(self, x0, g0, key):
-        x1 = x0 - self.eta * g0
+        x1 = x0 - _at(self.eta, jnp.zeros((), jnp.int32)) * g0
         return PrevGradState(x=x1, x_prev=x0, g_prev=g0, k=jnp.zeros((), jnp.int32))
 
     def step(self, s: PrevGradState, g, key):
-        inner = 2.0 * s.x - s.x_prev - self.eta * g + self.eta * s.g_prev
+        eta = _at(self.eta, s.k)
+        inner = 2.0 * s.x - s.x_prev - eta * g + eta * s.g_prev
         x = 0.5 * (inner + self.gossip.mix(inner))
         return PrevGradState(x=x, x_prev=s.x, g_prev=g, k=s.k + 1)
 
@@ -154,8 +162,8 @@ class CHOCO_SGD:
     """
     gossip: DenseGossip
     compressor: Any
-    eta: float = 0.1
-    gamma: float = 0.8
+    eta: Schedule = 0.1
+    gamma: Schedule = 0.8
 
     def init(self, x0, g0, key):
         xhat = jnp.zeros_like(x0)
@@ -165,13 +173,13 @@ class CHOCO_SGD:
     def step_with_metrics(self, s: HatState, g, key):
         """(new_state, comp_err): comp_err = ||q - (x_half - xhat)|| /
         ||x_half||, the error of the message this step transmitted."""
-        x_half = s.x - self.eta * g
+        x_half = s.x - _at(self.eta, s.k) * g
         diff = x_half - s.xhat
         keys = jax.random.split(key, s.x.shape[0])
         q = jax.vmap(self.compressor.compress)(keys, diff)
         xhat = s.xhat + q
         xhat_w = s.xhat_w + self.gossip.mix(q)
-        x = x_half + self.gamma * (xhat_w - xhat)
+        x = x_half + _at(self.gamma, s.k) * (xhat_w - xhat)
         new = HatState(x=x, xhat=xhat, xhat_w=xhat_w, k=s.k + 1)
         return new, _rel_err(q, diff, x_half)
 
@@ -189,8 +197,8 @@ class DeepSqueeze:
     """
     gossip: DenseGossip
     compressor: Any
-    eta: float = 0.1
-    gamma: float = 0.2
+    eta: Schedule = 0.1
+    gamma: Schedule = 0.2
 
     def init(self, x0, g0, key):
         return ErrorState(x=x0, e=jnp.zeros_like(x0), k=jnp.zeros((), jnp.int32))
@@ -199,11 +207,11 @@ class DeepSqueeze:
         """(new_state, comp_err): the transmitted message is the
         error-compensated v = x - eta g + e, NOT the raw iterate —
         comp_err = ||c - v|| / ||v||."""
-        v = s.x - self.eta * g + s.e
+        v = s.x - _at(self.eta, s.k) * g + s.e
         keys = jax.random.split(key, s.x.shape[0])
         c = jax.vmap(self.compressor.compress)(keys, v)
         e = v - c
-        x = c + self.gamma * (self.gossip.mix(c) - c)
+        x = c + _at(self.gamma, s.k) * (self.gossip.mix(c) - c)
         return ErrorState(x=x, e=e, k=s.k + 1), _rel_err(c, v, v)
 
     def step(self, s: ErrorState, g, key):
@@ -219,8 +227,8 @@ class QDGD:
     """
     gossip: DenseGossip
     compressor: Any
-    eta: float = 0.1
-    gamma: float = 0.2
+    eta: Schedule = 0.1
+    gamma: Schedule = 0.2
 
     def init(self, x0, g0, key):
         return SimpleState(x=x0, k=jnp.zeros((), jnp.int32))
@@ -230,7 +238,8 @@ class QDGD:
         directly-transmitted quantized model."""
         keys = jax.random.split(key, s.x.shape[0])
         q = jax.vmap(self.compressor.compress)(keys, s.x)
-        x = s.x + self.gamma * (self.gossip.mix(q) - q) - self.eta * g
+        x = (s.x + _at(self.gamma, s.k) * (self.gossip.mix(q) - q)
+             - _at(self.eta, s.k) * g)
         return SimpleState(x=x, k=s.k + 1), _rel_err(q, s.x, s.x)
 
     def step(self, s: SimpleState, g, key):
@@ -247,7 +256,7 @@ class DCD_SGD:
     """
     gossip: DenseGossip
     compressor: Any
-    eta: float = 0.1
+    eta: Schedule = 0.1
 
     def init(self, x0, g0, key):
         return HatState(x=x0, xhat=x0, xhat_w=self.gossip.mix(x0),
@@ -256,7 +265,7 @@ class DCD_SGD:
     def step_with_metrics(self, s: HatState, g, key):
         """(new_state, comp_err): comp_err = ||q - (x+ - xhat)|| / ||x+||
         for the compressed difference of the post-gossip iterate."""
-        x = s.xhat_w - self.eta * g
+        x = s.xhat_w - _at(self.eta, s.k) * g
         diff = x - s.xhat
         keys = jax.random.split(key, s.x.shape[0])
         q = jax.vmap(self.compressor.compress)(keys, diff)

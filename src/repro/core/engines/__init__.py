@@ -13,7 +13,16 @@ paper algorithm.
 Fig. 2-4 sweep runs on the flat substrate with byte-accurate wire bits.
 ``flat_twin`` builds the flat engine mirroring a tree baseline instance
 (same W, compressor, and hyper-parameters) — the one-line migration path
-for drivers that hold core/baselines.py objects.
+for drivers that hold core/baselines.py objects.  ``describe`` renders the
+resolved (algorithm, compressor, gossip) triple as one line — examples and
+the launch drivers print it so runs and docs can't silently diverge.
+
+The registry serves two substrates with one math implementation per
+algorithm: the single-device scan simulator drives engines directly
+(core/simulator.py run()), and the multi-host trainer (dist/trainer.py)
+drives the same engines' message/apply stages per stacked model leaf with
+shard_map ring gossip in between.  Hyper-parameters are Schedule values
+(floats or callables of k — Theorem 2), resolved inside the scan.
 """
 from __future__ import annotations
 
@@ -46,6 +55,38 @@ ENGINES = {
 # exact baselines take no compressor (their payload is the raw buffer)
 _EXACT = (FlatDGDEngine, FlatNIDSEngine, FlatEXTRAEngine, FlatD2Engine)
 
+# canonical name per engine class (first registry entry wins over aliases)
+_CANONICAL = {}
+for _name, _cls in ENGINES.items():
+    _CANONICAL.setdefault(_cls, _name)
+del _name, _cls
+
+
+def is_exact(algorithm: str) -> bool:
+    """True when the registered algorithm transmits raw 32-bit values (the
+    exact baselines, which take no compressor)."""
+    key = algorithm.lower().replace("_", "-")
+    if key not in ENGINES:
+        raise KeyError(f"unknown algorithm {algorithm!r}; registry has "
+                       f"{sorted(set(ENGINES))}")
+    return issubclass(ENGINES[key], _EXACT)
+
+
+def algorithm_name(engine) -> str:
+    """Canonical registry key of an engine instance (aliases collapse)."""
+    return _CANONICAL[type(engine)]
+
+
+def describe(engine) -> str:
+    """One-line `(algorithm, compressor, gossip)` description of a resolved
+    engine — the registry path a run actually took.  Printed by the examples
+    and launch drivers (and asserted by tests/test_docs.py) so docs snippets
+    and real runs stay in sync."""
+    comp = engine.compressor
+    comp_s = "none (exact, 32-bit)" if comp is None else repr(comp)
+    return (f"algorithm={algorithm_name(engine)} compressor={comp_s} "
+            f"gossip={engine.gossip}")
+
 # tree-class name (core/baselines.py) -> registry key, for flat_twin
 _TREE_TWINS = {
     "CHOCO_SGD": "choco",
@@ -74,9 +115,11 @@ def engine_for(gossip_W, compressor, dim: int,
     engine's fused p=inf path ("match" = tree-equivalent threefry, "fast" =
     counter-hash); `hyper` forwards algorithm hyper-parameters to the
     engine's fields (eta/gamma for the baselines; eta/gamma/alpha for LEAD,
-    which LEADSim instead overrides with a LEADHyper per step — schedules
-    included).  Every returned engine is directly drivable by
-    core/simulator.py run().
+    which LEADSim instead overrides with a LEADHyper per step).  Every hyper
+    is a Schedule — a float or a callable of the iteration counter k
+    (Theorem 2 diminishing stepsizes), resolved inside the scan — so the
+    Fig. 3 stochastic sweep runs on the flat path for every algorithm.
+    Every returned engine is directly drivable by core/simulator.py run().
     """
     from repro.core.compression import Identity
 

@@ -35,6 +35,27 @@ the family shares:
                    engine in the family (not just LEAD) gets the fused
                    kernel + fast-dither hot path.
 
+Every engine's iteration is the same three-beat bar, and the base owns the
+bar structure (``step_with_wire``):
+
+    message(s, gb, hy)            -> (msg, ctx)      pre-communication math
+    encode_payload / mix_payload                      the wire (base-owned)
+    apply_stage(s, gb, q, wq, hy, ctx) -> (new, err)  post-communication math
+
+``message`` and ``apply_stage`` are *pure elementwise algebra* over blocked
+buffers — they carry the whole per-algorithm update and are deliberately
+shape-polymorphic (any ``(n, nb, block)``), so the SAME methods drive both
+the single-device flat path (the scan simulator) and the multi-host trainer
+(dist/trainer.py), which blockifies each stacked pytree leaf, calls
+``message``, ships the encoded payload through a shard_map ring
+(``RingGossip.mix_encoded`` / ppermute), and calls ``apply_stage`` — one
+implementation of every algorithm, two communication substrates.
+
+Hyper-parameters are ``Schedule`` values (core/lead.py): floats OR callables
+of the iteration counter k (Theorem 2 diminishing stepsizes).  The base
+resolves them once per step via ``hypers_at(state.k)`` and hands the
+stage methods a dict of step-k scalars, so schedules run *inside* the scan.
+
 Engines driven directly by the scan simulator (core/simulator.py run())
 implement the baseline driver protocol on top of this base:
 
@@ -50,14 +71,19 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Optional
+from typing import Any, ClassVar, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.gossip import EncodedRingGossip
+from repro.core.lead import _at
 from repro.kernels import quantize as _q
 from repro.kernels.ops import DEFAULT_BLOCK, _pick_tile
+
+# _LAYOUT_FIELDS (defined right after FlatEngineBase below): the substrate's
+# own dataclass fields — everything a subclass adds on top is an algorithm
+# hyper-parameter (and may be a Schedule)
 
 
 def _is_fused_quantizer(comp) -> bool:
@@ -99,6 +125,15 @@ class FlatEngineBase:
     dither selects the quantizer dither stream (see module docstring);
     "match" keeps trajectories aligned with the tree references, "fast" is
     the cheaper production stream.
+
+    Subclasses add their hyper-parameter fields (eta/gamma/...), each a
+    ``Schedule``: a float or a callable of the iteration counter k
+    (Theorem 2).  They implement the two stage methods ``message`` and
+    ``apply_stage`` plus the class metadata ``state_cls`` (the state
+    NamedTuple) and ``consensus_init`` (how each non-x state field starts
+    from a consensus point: "copy" of x0 or "zeros") — that metadata is what
+    lets dist/trainer.py instantiate the same algorithm over stacked
+    model pytrees without re-rolling its math.
     """
     W: Any                             # (n, n) mixing matrix
     dim: int                           # logical per-agent dimension d
@@ -107,6 +142,11 @@ class FlatEngineBase:
     interpret: Optional[bool] = None
     gossip: str = "dense"              # "dense" | "ring"
     dither: str = "match"              # "match" | "fast"
+
+    # subclass metadata: the state NamedTuple and its consensus start
+    # (field -> "copy" of x0 | "zeros"); x and k are implicit
+    state_cls: ClassVar[type] = None
+    consensus_init: ClassVar[Dict[str, str]] = {}
 
     def __post_init__(self):
         assert self.gossip in ("dense", "ring"), self.gossip
@@ -161,8 +201,31 @@ class FlatEngineBase:
         return (W @ buf.reshape(buf.shape[0], -1)).reshape(buf.shape)
 
     def _rows(self, buf: jnp.ndarray) -> jnp.ndarray:
-        """(n, nb, block) -> (n*nb, block): one kernel call for all agents."""
-        return buf.reshape(self.n * self.nb, self.block)
+        """(n, nb, block) -> (n*nb, block): one kernel call for all agents.
+        Shape-derived (not read off the engine's dim) so the same kernels run
+        on the trainer's per-leaf buffers, whose nb differs per leaf."""
+        return buf.reshape(-1, buf.shape[-1])
+
+    @staticmethod
+    def _tile_for(n_rows: int, cap: int = _q.DEFAULT_TILE_B) -> int:
+        """Largest power-of-two tile <= cap dividing a row count (the Pallas
+        grid constraint for buffers whose nb was not tile-padded)."""
+        t = cap
+        while t > 1 and n_rows % t:
+            t //= 2
+        return t
+
+    # -- hyper-parameters ----------------------------------------------------
+    @property
+    def hyper_fields(self):
+        """Names of this engine's algorithm hypers (dataclass fields beyond
+        the layout substrate), each a Schedule (float or callable of k)."""
+        return tuple(f.name for f in dataclasses.fields(self)
+                     if f.name not in _LAYOUT_FIELDS)
+
+    def hypers_at(self, k) -> Dict[str, jnp.ndarray]:
+        """Resolve every hyper Schedule at iteration k (f32 scalars)."""
+        return {f: _at(getattr(self, f), k) for f in self.hyper_fields}
 
     # -- dither ------------------------------------------------------------
     def _dither_plane(self, key: jax.Array, k: jnp.ndarray) -> jnp.ndarray:
@@ -252,7 +315,43 @@ class FlatEngineBase:
         from repro.core.compression import rel_err
         return rel_err(q, target, ref)
 
+    # -- the algorithm stage protocol ---------------------------------------
+    def message(self, s, gb, hy):
+        """Pre-communication math: (msg, ctx).  `msg` is the buffer the
+        algorithm transmits this step (what gets encoded); `ctx` is whatever
+        apply_stage needs back (e.g. the pre-communication iterate for the
+        comp_err denominator).  Pure elementwise algebra — shape-polymorphic
+        over any (n, nb, block) buffers."""
+        raise NotImplementedError
+
+    def apply_stage(self, s, gb, q, wq, hy, ctx):
+        """Post-communication math: (new_state, comp_err) given the decoded
+        own message q and its gossip mix wq.  Same polymorphism contract as
+        `message` — dist/trainer.py calls both on per-leaf buffers."""
+        raise NotImplementedError
+
+    def encode_stage(self, s, gb, key, hy):
+        """message + wire encode: (payload, decode, wire_bits, ctx).
+        Engines with a fused message+encode kernel (LEAD's lead_diff_encode)
+        override this; everyone else composes the two stages."""
+        msg, ctx = self.message(s, gb, hy)
+        payload, decode, bits = self.encode_payload(key, msg, k=s.k)
+        return payload, decode, bits, ctx
+
+    def _step_core(self, s, g, key, hy):
+        """The family's one iteration shape: encode -> gossip -> apply."""
+        gb = self._blockify_g(g)
+        payload, decode, bits, ctx = self.encode_stage(s, gb, key, hy)
+        q, wq = self.mix_payload(payload, decode)
+        new, comp_err = self.apply_stage(s, gb, q, wq, hy, ctx)
+        return new, comp_err, bits
+
     # -- baseline driver protocol (engines driven directly by run()) --------
+    def step_with_wire(self, state, g, key):
+        """(new_state, comp_err, wire_bits) with the engine's stored hypers
+        resolved at state.k (schedules supported)."""
+        return self._step_core(state, g, key, self.hypers_at(state.k))
+
     def x_of(self, state):
         """Current iterates as (n, d) regardless of the blocked layout."""
         return self.unblockify(state.x)
@@ -263,3 +362,9 @@ class FlatEngineBase:
 
     def step(self, state, g, key):
         return self.step_with_wire(state, g, key)[0]
+
+
+# derived, not hand-maintained: a field added to the base is automatically a
+# layout knob, never a hyper (hyper_fields / hypers_at and the dist
+# trainer's hyper validation all subtract this set)
+_LAYOUT_FIELDS = tuple(f.name for f in dataclasses.fields(FlatEngineBase))

@@ -9,6 +9,21 @@ the receiver), and every step returns the *actual* per-agent payload bits —
 so the paper's bits-transmitted x-axis is byte-accurate for the whole
 algorithm family, not just LEAD.
 
+Each engine is written as the base's two stage methods — ``message`` (the
+buffer it transmits) and ``apply_stage`` (the state update given the decoded
+message q and its mix wq) — pure elementwise algebra that the base sequences
+around its wire + gossip stages.  The SAME two methods drive the multi-host
+trainer (dist/trainer.py): it blockifies each stacked model leaf, calls
+``message``, ships the payload via shard_map ring gossip, and calls
+``apply_stage``, so every baseline here is runnable multi-host with no
+second implementation.  ``state_cls`` / ``consensus_init`` tell that driver
+which state NamedTuple to build and how each field starts from a consensus
+point (all agents identical, where W x = x needs no communication).
+
+Hyper-parameters (eta/gamma) are ``Schedule`` values — floats or callables
+of the iteration counter k (Theorem 2 diminishing stepsizes) — resolved by
+the base once per step via ``hypers_at(state.k)``, inside the scan.
+
 Compressed baselines (encode stage = compressor.encode_blocks):
 
   * FlatCHOCOEngine        CHOCO-SGD   — difference compression of
@@ -50,6 +65,7 @@ import jax.numpy as jnp
 from repro.core.baselines import (DualState, ErrorState, HatState,
                                   PrevGradState, SimpleState)
 from repro.core.engines.base import FlatEngineBase
+from repro.core.lead import Schedule, _at
 
 
 class ExtraState(NamedTuple):
@@ -75,25 +91,28 @@ class FlatCHOCOEngine(FlatEngineBase):
     xhat  += q;  xhat_w += W q
     x+     = x_half + gamma * (xhat_w - xhat)
     """
-    eta: float = 0.1
-    gamma: float = 0.8
+    eta: Schedule = 0.1
+    gamma: Schedule = 0.8
+
+    state_cls = HatState
+    consensus_init = {"xhat": "zeros", "xhat_w": "zeros"}
 
     def init(self, x0, g0, key):
         xb = self.blockify(x0)
         z = jnp.zeros_like(xb)
         return HatState(x=xb, xhat=z, xhat_w=z, k=jnp.zeros((), jnp.int32))
 
-    def step_with_wire(self, s: HatState, g, key):
-        gb = self._blockify_g(g)
-        x_half = s.x - self.eta * gb
-        diff = x_half - s.xhat
-        payload, decode, bits = self.encode_payload(key, diff, k=s.k)
-        q, wq = self.mix_payload(payload, decode)
+    def message(self, s: HatState, gb, hy):
+        x_half = s.x - hy["eta"] * gb
+        return x_half - s.xhat, x_half
+
+    def apply_stage(self, s: HatState, gb, q, wq, hy, ctx):
+        x_half = ctx
         xhat = s.xhat + q
         xhat_w = s.xhat_w + wq
-        x = x_half + self.gamma * (xhat_w - xhat)
+        x = x_half + hy["gamma"] * (xhat_w - xhat)
         new = HatState(x=x, xhat=xhat, xhat_w=xhat_w, k=s.k + 1)
-        return new, self.rel_err(q, diff, x_half), bits
+        return new, self.rel_err(q, x_half - s.xhat, x_half)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,24 +123,28 @@ class FlatDeepSqueezeEngine(FlatEngineBase):
     c   = decode(encode(v));  e+ = v - c
     x+  = c + gamma * (W c - c)
     """
-    eta: float = 0.1
-    gamma: float = 0.2
+    eta: Schedule = 0.1
+    gamma: Schedule = 0.2
+
+    state_cls = ErrorState
+    consensus_init = {"e": "zeros"}
 
     def init(self, x0, g0, key):
         xb = self.blockify(x0)
         return ErrorState(x=xb, e=jnp.zeros_like(xb),
                           k=jnp.zeros((), jnp.int32))
 
-    def step_with_wire(self, s: ErrorState, g, key):
-        gb = self._blockify_g(g)
-        v = s.x - self.eta * gb + s.e
-        payload, decode, bits = self.encode_payload(key, v, k=s.k)
-        c, wc = self.mix_payload(payload, decode)
+    def message(self, s: ErrorState, gb, hy):
+        v = s.x - hy["eta"] * gb + s.e
+        return v, v
+
+    def apply_stage(self, s: ErrorState, gb, c, wc, hy, ctx):
+        v = ctx
         e = v - c
-        x = c + self.gamma * (wc - c)
+        x = c + hy["gamma"] * (wc - c)
         new = ErrorState(x=x, e=e, k=s.k + 1)
         # the transmitted message IS v (error-compensated), not state.x
-        return new, self.rel_err(c, v, v), bits
+        return new, self.rel_err(c, v, v)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,18 +154,21 @@ class FlatQDGDEngine(FlatEngineBase):
     q  = decode(encode(x))       (direct quantized model exchange)
     x+ = x + gamma * (W q - q) - eta g
     """
-    eta: float = 0.1
-    gamma: float = 0.2
+    eta: Schedule = 0.1
+    gamma: Schedule = 0.2
+
+    state_cls = SimpleState
+    consensus_init = {}
 
     def init(self, x0, g0, key):
         return SimpleState(x=self.blockify(x0), k=jnp.zeros((), jnp.int32))
 
-    def step_with_wire(self, s: SimpleState, g, key):
-        gb = self._blockify_g(g)
-        payload, decode, bits = self.encode_payload(key, s.x, k=s.k)
-        q, wq = self.mix_payload(payload, decode)
-        x = s.x + self.gamma * (wq - q) - self.eta * gb
-        return SimpleState(x=x, k=s.k + 1), self.rel_err(q, s.x, s.x), bits
+    def message(self, s: SimpleState, gb, hy):
+        return s.x, None
+
+    def apply_stage(self, s: SimpleState, gb, q, wq, hy, ctx):
+        x = s.x + hy["gamma"] * (wq - q) - hy["eta"] * gb
+        return SimpleState(x=x, k=s.k + 1), self.rel_err(q, s.x, s.x)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -153,21 +179,24 @@ class FlatDCDEngine(FlatEngineBase):
     q     = decode(encode(x+ - xhat));  xhat += q;  xhat_w += W q
     (unstable under aggressive compression — reproduced as in the paper.)
     """
-    eta: float = 0.1
+    eta: Schedule = 0.1
+
+    state_cls = HatState
+    consensus_init = {"xhat": "copy", "xhat_w": "copy"}
 
     def init(self, x0, g0, key):
         xb = self.blockify(x0)
         return HatState(x=xb, xhat=xb, xhat_w=self._mix(xb),
                         k=jnp.zeros((), jnp.int32))
 
-    def step_with_wire(self, s: HatState, g, key):
-        gb = self._blockify_g(g)
-        x = s.xhat_w - self.eta * gb
-        diff = x - s.xhat
-        payload, decode, bits = self.encode_payload(key, diff, k=s.k)
-        q, wq = self.mix_payload(payload, decode)
+    def message(self, s: HatState, gb, hy):
+        x = s.xhat_w - hy["eta"] * gb
+        return x - s.xhat, x
+
+    def apply_stage(self, s: HatState, gb, q, wq, hy, ctx):
+        x = ctx
         new = HatState(x=x, xhat=s.xhat + q, xhat_w=s.xhat_w + wq, k=s.k + 1)
-        return new, self.rel_err(q, diff, x), bits
+        return new, self.rel_err(q, x - s.xhat, x)
 
 
 # -- exact baselines: no encode stage, the raw buffer is the payload --------
@@ -177,7 +206,7 @@ class _FlatExactEngine(FlatEngineBase):
     """Shared base of the exact (uncompressed) flat wrappers: the message
     buffer itself is the payload — d * 32 bits per transmission, decode is
     the identity, and comp_err is exactly zero."""
-    eta: float = 0.1
+    eta: Schedule = 0.1
 
     def __post_init__(self):
         super().__post_init__()
@@ -187,43 +216,47 @@ class _FlatExactEngine(FlatEngineBase):
             f"{type(self).__name__} is an exact baseline; it does not "
             f"compress (got {type(self.compressor).__name__})")
 
-    def _wire_mix(self, buf):
-        """(W buf, wire_bits): ship the raw buffer, mix at the receiver."""
-        payload, decode, bits = self.encode_payload(None, buf)
-        _, w = self.mix_payload(payload, decode)
-        return w, bits
-
 
 @dataclasses.dataclass(frozen=True)
 class FlatDGDEngine(_FlatExactEngine):
     """DGD / D-PSGD: X+ = W X - eta g."""
 
+    state_cls = SimpleState
+    consensus_init = {}
+
     def init(self, x0, g0, key):
         return SimpleState(x=self.blockify(x0), k=jnp.zeros((), jnp.int32))
 
-    def step_with_wire(self, s: SimpleState, g, key):
-        gb = self._blockify_g(g)
-        wx, bits = self._wire_mix(s.x)
-        return (SimpleState(x=wx - self.eta * gb, k=s.k + 1),
-                _zero_err(), bits)
+    def message(self, s: SimpleState, gb, hy):
+        return s.x, None
+
+    def apply_stage(self, s: SimpleState, gb, q, wx, hy, ctx):
+        return (SimpleState(x=wx - hy["eta"] * gb, k=s.k + 1),
+                _zero_err())
 
 
 @dataclasses.dataclass(frozen=True)
 class FlatNIDSEngine(_FlatExactEngine):
     """NIDS two-step primal-dual form (paper eqs. (4)-(5))."""
 
+    state_cls = DualState
+    consensus_init = {"d": "zeros"}
+
     def init(self, x0, g0, key):
         xb, gb = self.blockify(x0), self.blockify(g0)
-        return DualState(x=xb - self.eta * gb, d=jnp.zeros_like(xb),
+        eta0 = _at(self.eta, jnp.zeros((), jnp.int32))
+        return DualState(x=xb - eta0 * gb, d=jnp.zeros_like(xb),
                          k=jnp.zeros((), jnp.int32))
 
-    def step_with_wire(self, s: DualState, g, key):
-        gb = self._blockify_g(g)
-        y = s.x - self.eta * gb - self.eta * s.d
-        wy, bits = self._wire_mix(y)
-        d = s.d + (y - wy) / (2.0 * self.eta)
-        x = s.x - self.eta * gb - self.eta * d
-        return DualState(x=x, d=d, k=s.k + 1), _zero_err(), bits
+    def message(self, s: DualState, gb, hy):
+        y = s.x - hy["eta"] * gb - hy["eta"] * s.d
+        return y, y
+
+    def apply_stage(self, s: DualState, gb, q, wy, hy, ctx):
+        y = ctx
+        d = s.d + (y - wy) / (2.0 * hy["eta"])
+        x = s.x - hy["eta"] * gb - hy["eta"] * d
+        return DualState(x=x, d=d, k=s.k + 1), _zero_err()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -233,19 +266,24 @@ class FlatEXTRAEngine(_FlatExactEngine):
     Wtilde = (I+W)/2.  W x_prev is carried over from the previous step's
     transmission (wx_prev), so each iteration ships exactly one vector."""
 
+    state_cls = ExtraState
+    consensus_init = {"x_prev": "copy", "wx_prev": "copy", "g_prev": "zeros"}
+
     def init(self, x0, g0, key):
         xb, gb = self.blockify(x0), self.blockify(g0)
+        eta0 = _at(self.eta, jnp.zeros((), jnp.int32))
         wx0 = self._mix(xb)
-        return ExtraState(x=wx0 - self.eta * gb, x_prev=xb, wx_prev=wx0,
+        return ExtraState(x=wx0 - eta0 * gb, x_prev=xb, wx_prev=wx0,
                           g_prev=gb, k=jnp.zeros((), jnp.int32))
 
-    def step_with_wire(self, s: ExtraState, g, key):
-        gb = self._blockify_g(g)
-        wx, bits = self._wire_mix(s.x)
+    def message(self, s: ExtraState, gb, hy):
+        return s.x, None
+
+    def apply_stage(self, s: ExtraState, gb, q, wx, hy, ctx):
         wtx_prev = 0.5 * (s.x_prev + s.wx_prev)
-        x = s.x + wx - wtx_prev - self.eta * (gb - s.g_prev)
+        x = s.x + wx - wtx_prev - hy["eta"] * (gb - s.g_prev)
         new = ExtraState(x=x, x_prev=s.x, wx_prev=wx, g_prev=gb, k=s.k + 1)
-        return new, _zero_err(), bits
+        return new, _zero_err()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -253,15 +291,21 @@ class FlatD2Engine(_FlatExactEngine):
     """D2 [Tang et al. 2018b], paper eq. (15):
     X^{k+1} = (I+W)/2 (2 X^k - X^{k-1} - eta g^k + eta g^{k-1})."""
 
+    state_cls = PrevGradState
+    consensus_init = {"x_prev": "copy", "g_prev": "zeros"}
+
     def init(self, x0, g0, key):
         xb, gb = self.blockify(x0), self.blockify(g0)
-        return PrevGradState(x=xb - self.eta * gb, x_prev=xb, g_prev=gb,
+        eta0 = _at(self.eta, jnp.zeros((), jnp.int32))
+        return PrevGradState(x=xb - eta0 * gb, x_prev=xb, g_prev=gb,
                              k=jnp.zeros((), jnp.int32))
 
-    def step_with_wire(self, s: PrevGradState, g, key):
-        gb = self._blockify_g(g)
-        inner = 2.0 * s.x - s.x_prev - self.eta * gb + self.eta * s.g_prev
-        winner, bits = self._wire_mix(inner)
+    def message(self, s: PrevGradState, gb, hy):
+        inner = 2.0 * s.x - s.x_prev - hy["eta"] * gb + hy["eta"] * s.g_prev
+        return inner, inner
+
+    def apply_stage(self, s: PrevGradState, gb, q, winner, hy, ctx):
+        inner = ctx
         x = 0.5 * (inner + winner)
         new = PrevGradState(x=x, x_prev=s.x, g_prev=gb, k=s.k + 1)
-        return new, _zero_err(), bits
+        return new, _zero_err()

@@ -16,6 +16,14 @@ iteration as exactly two fused passes:
     H / H_w / D / X update, one read of (X, G, D, H, H_w, Qh, WQh), one
     write of the four new state buffers.
 
+The two passes are expressed as the engine family's stage protocol
+(engines/base.py): ``encode_stage`` (overridden here to fuse message +
+encode for the p=inf quantizer) and ``apply_stage`` (the lead_update
+kernel).  Both are shape-polymorphic over any blocked buffers, so
+dist/trainer.py drives the *same* LEAD math per stacked model leaf with
+shard_map ring gossip in between — one implementation, simulator and
+multi-host trainer alike.
+
 Codes on the wire
 -----------------
 Layout, wire protocol, and gossip stage come from the engine-family base
@@ -48,7 +56,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.engines.base import FlatEngineBase, _is_fused_quantizer
-from repro.core.lead import LEADHyper, _at
+from repro.core.lead import LEADHyper, Schedule, _at
 from repro.kernels import lead_update as _lu
 from repro.kernels import quantize as _q
 
@@ -81,25 +89,25 @@ class FlatLEADEngine(FlatEngineBase):
     dither-dominated).
 
     Two driving modes.  LEADSim passes a LEADHyper per call (init/step/
-    step_wire, schedules supported); alternatively the engine stores float
-    hypers (eta/gamma/alpha fields, the paper's defaults) and then follows
-    the family's baseline driver protocol — init(x0, g0, key) /
-    step_with_wire(state, g, key) — so ``engine_for(W, comp, d)`` hands
-    core/simulator.py run() a directly drivable engine like every other
-    registry entry.
+    step_wire); alternatively the engine stores its own hypers (eta/gamma/
+    alpha fields, the paper's defaults) and then follows the family's
+    baseline driver protocol — init(x0, g0, key) / step_with_wire(state, g,
+    key) — so ``engine_for(W, comp, d)`` hands core/simulator.py run() a
+    directly drivable engine like every other registry entry.  In both
+    modes every hyper is a Schedule: a float or a callable of the iteration
+    counter k (Theorem 2 diminishing stepsizes), resolved inside the scan.
     """
-    eta: float = 0.1
-    gamma: float = 1.0
-    alpha: float = 0.5
+    eta: Schedule = 0.1
+    gamma: Schedule = 1.0
+    alpha: Schedule = 0.5
+
+    state_cls = FlatLEADState
+    consensus_init = {"h": "copy", "hw": "copy", "d": "zeros"}
 
     @property
     def hyper(self) -> LEADHyper:
         """The stored hypers, for the per-call-hyper entry points."""
         return LEADHyper(eta=self.eta, gamma=self.gamma, alpha=self.alpha)
-
-    def step_with_wire(self, state: FlatLEADState, g, key: jax.Array):
-        """Baseline driver protocol (engines/base.py) with stored hypers."""
-        return self.step_wire(state, g, key, self.hyper)
 
     # -- algorithm ---------------------------------------------------------
     def init(self, x0: jnp.ndarray, g0: jnp.ndarray,
@@ -116,26 +124,49 @@ class FlatLEADEngine(FlatEngineBase):
                              d=jnp.zeros_like(xb),
                              k=jnp.zeros((), jnp.int32))
 
-    # -- wire stages --------------------------------------------------------
-    def _encode(self, state: FlatLEADState, gb: jnp.ndarray, eta, key):
-        """Pre-communication pass: (payload, decode, wire_bits).
+    # -- stage protocol ------------------------------------------------------
+    def message(self, s: FlatLEADState, gb, hy):
+        """Pre-communication difference Y - H (Alg. 1 line 4 + COMM line 10);
+        ctx is unused — apply_stage recomputes Y (XLA CSEs the shared ops)."""
+        y = s.x - hy["eta"] * gb - hy["eta"] * s.d
+        return y - s.h, None
 
-        For the fused p=inf quantizer the Y-difference and the encode happen
-        in one kernel; other compressors compute the difference in XLA and
-        go through the base's encode_payload (their encode_blocks path)."""
+    def encode_stage(self, s: FlatLEADState, gb, key, hy):
+        """For the fused p=inf quantizer the Y-difference and the encode
+        happen in one kernel pass; other compressors compute the difference
+        in XLA and go through the base's message + encode_payload path."""
         comp = self.compressor
         if comp is not None and _is_fused_quantizer(comp):
             code, scale = _lu.lead_diff_encode(
-                self._rows(state.x), self._rows(gb), self._rows(state.d),
-                self._rows(state.h),
-                self._rows(self._dither_plane(key, state.k)),
-                eta, bits=comp.bits, tile_b=self.tile_b,
+                self._rows(s.x), self._rows(gb), self._rows(s.d),
+                self._rows(s.h),
+                self._rows(self._dither_plane(key, s.k)),
+                hy["eta"], bits=comp.bits, tile_b=self.tile_b,
                 interpret=self.interpret)
-            return self.quant_payload(code, scale, comp.bits)
+            payload, decode, bits = self.quant_payload(code, scale, comp.bits)
+            return payload, decode, bits, None
+        return super().encode_stage(s, gb, key, hy)
 
-        y = state.x - eta * gb - eta * state.d
-        return self.encode_payload(key, y - state.h)
+    def apply_stage(self, s: FlatLEADState, gb, qh, wqh, hy, ctx=None):
+        """Post-communication fused H / H_w / D / X update (lines 5-7) plus
+        the exact in-step comp_err ||Qh - (Y-H)|| / ||Y||.  Shape-derived
+        rows and tile so the same kernel call serves the engine's own padded
+        buffers and the trainer's per-leaf blocks."""
+        rows = self._rows(s.x)
+        tile = self._tile_for(rows.shape[0])
+        xo, do, ho, hwo = _lu.lead_update(
+            rows, self._rows(gb), self._rows(s.d),
+            self._rows(s.h), self._rows(s.hw), self._rows(qh),
+            self._rows(wqh), hy["eta"], hy["gamma"], hy["alpha"],
+            tile_b=tile, interpret=self.interpret)
+        shape3 = s.x.shape
+        new = FlatLEADState(x=xo.reshape(shape3), d=do.reshape(shape3),
+                            h=ho.reshape(shape3), hw=hwo.reshape(shape3),
+                            k=s.k + 1)
+        y = s.x - hy["eta"] * gb - hy["eta"] * s.d
+        return new, self.rel_err(qh, y - s.h, y)
 
+    # -- per-call-hyper entry points (LEADSim) -------------------------------
     def step_wire(self, state: FlatLEADState, g: jnp.ndarray, key: jax.Array,
                   hyper=None):
         """One LEAD iteration on flat buffers; g: gradients at state.x,
@@ -151,27 +182,13 @@ class FlatLEADEngine(FlatEngineBase):
         jit callers that drop a metric get its extra passes DCE'd."""
         if not isinstance(hyper, LEADHyper):
             hyper = self.hyper
-        eta = _at(hyper.eta, state.k)
-        gamma = _at(hyper.gamma, state.k)
-        alpha = _at(hyper.alpha, state.k)
-        gb = self._blockify_g(g)
+        hy = {f: _at(getattr(hyper, f), state.k)
+              for f in ("eta", "gamma", "alpha")}
+        return self._step_core(state, g, key, hy)
 
-        payload, decode, bits = self._encode(state, gb, eta, key)
-        qh, wqh = self.mix_payload(payload, decode)
-
-        xo, do, ho, hwo = _lu.lead_update(
-            self._rows(state.x), self._rows(gb), self._rows(state.d),
-            self._rows(state.h), self._rows(state.hw), self._rows(qh),
-            self._rows(wqh), eta, gamma, alpha,
-            tile_b=self.tile_b, interpret=self.interpret)
-        shape3 = (self.n, self.nb, self.block)
-        new = FlatLEADState(x=xo.reshape(shape3), d=do.reshape(shape3),
-                            h=ho.reshape(shape3), hw=hwo.reshape(shape3),
-                            k=state.k + 1)
-
-        y = state.x - eta * gb - eta * state.d
-        comp_err = self.rel_err(qh, y - state.h, y)
-        return new, comp_err, bits
+    def step_with_wire(self, state: FlatLEADState, g, key: jax.Array):
+        """Baseline driver protocol (engines/base.py) with stored hypers."""
+        return self.step_wire(state, g, key, self.hyper)
 
     def step(self, state: FlatLEADState, g: jnp.ndarray, key: jax.Array,
              hyper=None) -> FlatLEADState:

@@ -161,6 +161,12 @@ class Trace(NamedTuple):
     twins from core/engines) accumulates the *actual* per-step payload size
     (data-dependent for RandK); tree paths add the compressor's static
     ``wire_bits(d)`` estimate per iteration.
+
+    Hyper-parameters of every traced algorithm are ``Schedule`` values
+    (core/lead.py): floats or callables of the iteration counter k, resolved
+    at the state's counter inside the scan — so the Theorem-2 diminishing
+    stepsizes (Fig. 3) trace on the tree path and the flat engine family
+    alike, with the same byte-accurate bits_per_agent x-axis.
     """
     dist: np.ndarray
     consensus: np.ndarray
@@ -272,7 +278,7 @@ def _compression_error(algo, state, problem, key) -> jnp.ndarray:
     if comp is None:
         return jnp.zeros(())
     if hasattr(state, "e"):
-        eta = getattr(algo, "eta", 0.0)
+        eta = lead_mod._at(getattr(algo, "eta", 0.0), state.k)
         target = state.x - eta * problem.full_grad(state.x) + state.e
         ref = target
     elif hasattr(state, "xhat"):

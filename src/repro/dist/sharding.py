@@ -17,7 +17,11 @@ The "xxl" profile (deepseek-scale) instead rings agents over "pod" only,
 freeing "data" for FSDP/EP inside an agent.
 
 All rules are *prefix* rules on the stacked layout: every train-state leaf
-and batch leaf carries the agent axis as its leading dimension.
+and batch leaf carries the agent axis as its leading dimension.  That
+includes the engine-family state pytrees in ``TrainState.algo``
+(dist/trainer.py) — LEAD's H/H_w/D, CHOCO's public copies, EXTRA's caches —
+which are shaped like the params and ride the same prefix rules with no
+algorithm-specific sharding code.
 """
 from __future__ import annotations
 

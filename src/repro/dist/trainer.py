@@ -1,22 +1,45 @@
-"""Decentralized multi-device trainer: LEAD / NIDS / DGD / allreduce over
-ring ppermute gossip, with codes on the wire.
+"""Decentralized multi-device trainer: the engine family over stacked model
+pytrees, with codes on the wire.
+
+``DistConfig.algorithm`` resolves through the same ``engine_for`` registry
+as the single-device simulator (core/engines): LEAD and every paper
+baseline — CHOCO-SGD, DeepSqueeze, QDGD, DCD-SGD compressed; DGD, NIDS,
+EXTRA, D2 exact — run multi-host from one implementation of their update
+math.  The trainer holds NO per-algorithm algebra of its own: each step it
+blockifies every stacked train-state leaf into the kernels' ``(A, nb,
+block)`` layout, calls the engine's ``message`` stage, ships the encoded
+payload through the ring, and calls the engine's ``apply_stage``
+(engines/base.py documents the stage protocol).  ``allreduce`` is the one
+special case — it is not a decentralized algorithm but the centralized
+SGD reference (x -= eta * pmean(g)), kept for A/B comparisons.
 
 Layout: every train-state leaf is *stacked* — leading axis A = number of
 agents, sharded over the profile's agent mesh axes (one agent per device
-slice; see dist/sharding.py).  Gradients come from a vmapped AD pass over
-the stacked params (GSPMD parallelizes it along the agent axis); the
+slice; see dist/sharding.py).  The engine state fields beyond the iterate
+(H/H_w/D for LEAD, xhat/xhat_w for CHOCO/DCD, ...) live in
+``TrainState.algo`` as pytrees shaped like the params, created from the
+engine's ``consensus_init`` spec — at a consensus start W x = x, so no init
+communication is needed.  Gradients come from a vmapped AD pass over the
+stacked params (GSPMD parallelizes it along the agent axis); the
 inter-agent communication is a fully-manual shard_map over ALL mesh axes in
 which core/gossip.RingGossip exchanges with the two ring neighbors via
 ``jax.lax.ppermute`` — the only collective of an iteration, and the reason
 the lowering contains collective-permute ops.
 
-Codes on the wire (LEAD): the difference Y - H is blockwise-quantized
-per leaf with the Compressor flat protocol (``QuantizePNorm.encode_blocks``,
-core/compression.py) *before* the shard_map; inside it only the int8 code
-planes + per-block f32 scales cross agents (``RingGossip.mix_encoded``
-decodes at the receiver).  With ``wire_pack=True`` the codes additionally
-travel as dense uint32 words (kernels.ops.pack_codes) — the byte-accurate
-ICI payload.
+Codes on the wire: compressed algorithms encode each leaf's message with
+the Compressor flat protocol (``encode_blocks`` / ``decode_blocks``,
+core/compression.py) *before* the shard_map; inside it only the payload
+(int8 code planes + per-block f32 scales for the quantizer; kept values for
+RandK/TopK) crosses agents — ``RingGossip.mix_encoded`` decodes at the
+receiver.  Exact algorithms ship the raw f32 leaf (d * 32 bits).  With
+``wire_pack=True`` quantizer codes additionally travel as dense uint32
+words (kernels.ops.pack_codes) — the byte-accurate ICI payload.  Each
+step's metrics include ``bits_per_agent``, the actual payload bits summed
+over leaves — the same accounting as Trace.bits_per_agent in the simulator.
+
+Hyper-parameters (``DistConfig.hyper``) are Schedule values — floats or
+callables of the step counter (Theorem 2 diminishing stepsizes) — resolved
+by the engine at ``state.step`` inside the jitted step.
 
 Beyond-paper knobs: ``seq_parallel`` shards the residual stream's sequence
 dim over the tp axis (the model's _seq_shard constraint), ``microbatches``
@@ -26,13 +49,14 @@ re-schedules the gradient pass as an accumulating scan, ``compute_dtype`` /
 Invariants mirror core/lead.py: 1^T D = 0 to roundoff for any compression
 error (tests/dist_worker.py asserts it after 20 distributed steps), and the
 ring mixing equals the dense ``topology.ring`` matrix multiply
-(nids_equivalence asserts the trajectories match).
+(dist_worker's registry_equivalence pins LEAD and NIDS against hand-rolled
+dense-W references step for step).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, NamedTuple, Tuple
+from typing import Any, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -40,8 +64,11 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.core import topology
 from repro.core.compression import QuantizePNorm
-from repro.core.gossip import RingGossip
+from repro.core.engines import ENGINES, engine_for, is_exact
+from repro.core.engines.base import _LAYOUT_FIELDS
+from repro.core.gossip import EncodedRingGossip, RingGossip
 from repro.core.lead import LEADHyper, _at
 from repro.dist import sharding as shr
 from repro.kernels.ops import pack_codes, unpack_codes
@@ -54,29 +81,118 @@ Pytree = Any
 
 @dataclasses.dataclass(frozen=True)
 class DistConfig:
-    """Distributed-run configuration (algorithm + wire + schedule knobs)."""
-    algorithm: str = "lead"              # lead | nids | dgd | allreduce
-    bits: int = 2                        # LEAD quantizer bit-width
+    """Distributed-run configuration (algorithm + wire + schedule knobs).
+
+    algorithm is any core/engines registry key (lead, choco, deepsqueeze,
+    qdgd, dcd, dgd, nids, extra, d2 + aliases) or "allreduce".  compressor
+    overrides the wire operator; None picks the paper default — the
+    blockwise p=inf quantizer QuantizePNorm(bits, block) for compressed
+    algorithms, nothing for exact ones.
+
+    hyper sets the algorithm hyper-parameters; every value is a Schedule
+    (float or callable of the step counter).  Three forms:
+      * None (default) — the engine's own paper defaults, with the primal
+        stepsize eta = 0.03 (the trainer's LM-tuned default);
+      * a dict of exactly the hypers the engine declares (e.g.
+        {"eta": 0.03, "gamma": 0.3} for CHOCO; NIDS declares eta only) —
+        unknown keys raise, nothing is silently dropped;
+      * a LEADHyper (eta/gamma/alpha) for LEAD and allreduce; passing one
+        to an engine that does not declare all three raises, pointing at
+        the dict form.
+
+    interpret is the kernels' tri-state backend flag (None = auto: jnp on
+    CPU, Pallas on TPU).
+    """
+    algorithm: str = "lead"
+    bits: int = 2                        # default quantizer bit-width
     block: int = 512                     # quantization block (paper: 512)
-    hyper: LEADHyper = LEADHyper(eta=0.03, gamma=1.0, alpha=0.5)
+    compressor: Any = None               # explicit Compressor override
+    hyper: Any = None                    # None | dict | LEADHyper (see above)
     optimizer: Any = SGD()
     seq_parallel: bool = False           # shard seq dim over tp between blocks
     wire_pack: bool = False              # ship codes as packed uint32 words
     microbatches: int = 1                # grad accumulation over batch chunks
     compute_dtype: str = "float32"
     state_dtype: str = "float32"
+    interpret: Optional[bool] = None     # kernel backend (None = auto)
 
     def __post_init__(self):
-        assert self.algorithm in ("lead", "nids", "dgd", "allreduce"), \
-            self.algorithm
+        if self.algorithm != "allreduce":
+            key = self.algorithm.lower().replace("_", "-")
+            assert key in ENGINES, (
+                f"unknown algorithm {self.algorithm!r}; registry has "
+                f"{sorted(set(ENGINES))} + 'allreduce'")
+
+
+_DEFAULT_ETA = 0.03                      # the trainer's LM-tuned stepsize
+
+
+def _hyper_dict(dc: DistConfig) -> Dict[str, Any]:
+    """DistConfig.hyper normalized to a plain {name: Schedule} dict (see
+    the DistConfig docstring for the three accepted forms)."""
+    h = dc.hyper
+    if h is None:
+        return {"eta": _DEFAULT_ETA}
+    if isinstance(h, LEADHyper):
+        return {f: getattr(h, f) for f in ("eta", "gamma", "alpha")}
+    return dict(h)
+
+
+def engine_of(dc: DistConfig, n_agents: int):
+    """Resolve DistConfig through the engine_for registry for an A-agent
+    ring (None for the centralized allreduce reference).  The returned
+    engine supplies the trainer's update math (message/apply_stage) and its
+    resolved (algorithm, compressor, gossip) triple — print it with
+    core.engines.describe so runs and docs can't silently diverge.
+
+    Hypers the engine does not declare raise instead of being silently
+    dropped or silently overriding the engine's paper defaults: NIDS for
+    example scales its dual ascent by 1/(2 eta) — a gamma passed to it
+    would change the algorithm, so it must be rejected loudly."""
+    hyp = _hyper_dict(dc)
+    if dc.algorithm == "allreduce":
+        # LEADHyper is an accepted shape here (the documented LEAD/allreduce
+        # convention — gamma/alpha are simply unused); only an explicit dict
+        # with keys beyond eta is a contract error
+        extra = set(hyp) - {"eta"}
+        if extra and not isinstance(dc.hyper, LEADHyper):
+            raise ValueError(
+                f"allreduce (centralized SGD reference) only takes 'eta'; "
+                f"got {sorted(extra)}")
+        return None
+    declared = _hyper_fields_of(dc.algorithm)
+    extra = set(hyp) - declared
+    if extra:
+        raise ValueError(
+            f"algorithm {dc.algorithm!r} does not declare hyper(s) "
+            f"{sorted(extra)} (it takes {sorted(declared)}); pass "
+            f"DistConfig(hyper={{...}}) with exactly those fields")
+    comp = dc.compressor
+    if comp is None and not is_exact(dc.algorithm):
+        comp = QuantizePNorm(bits=dc.bits, block=dc.block)
+    # host numpy: engine_of may run inside a jitted init trace, where a
+    # jnp constant would become a tracer and break the ring-W validation
+    W = topology.ring(n_agents)
+    return engine_for(W, comp, dim=dc.block, interpret=dc.interpret,
+                      gossip="ring", algorithm=dc.algorithm, **hyp)
+
+
+def _hyper_fields_of(algorithm: str) -> set:
+    """The algorithm hypers (Schedule fields) its engine class declares —
+    the same dataclass-fields-minus-layout rule the base's hypers_at
+    resolves inside the step, so the two validators cannot diverge."""
+    cls = ENGINES[algorithm.lower().replace("_", "-")]
+    return {f.name for f in dataclasses.fields(cls)} - set(_LAYOUT_FIELDS)
 
 
 class TrainState(NamedTuple):
-    """All leaves stacked (A, ...): one slice per agent along the ring."""
+    """All leaves stacked (A, ...): one slice per agent along the ring.
+
+    params is the engine state's iterate x; algo holds the engine's other
+    state fields by name (each a pytree shaped like params) — {} for
+    single-state algorithms (DGD, QDGD, allreduce)."""
     params: Pytree                       # X — per-agent model replicas
-    h: Pytree                            # LEAD compression reference H
-    hw: Pytree                           # H_w = W H (tracked, no comms)
-    d: Pytree                            # dual variable, in Range(I - W)
+    algo: Dict[str, Pytree]              # engine state fields beyond x
     opt: Any                             # optimizer state (stacked)
     step: jnp.ndarray
 
@@ -93,9 +209,12 @@ def state_shardings(cfg, mesh, prof: shr.ShardingProfile, state_sds):
 
 def init_train_state(cfg, mesh, prof: shr.ShardingProfile, dc: DistConfig,
                      key) -> TrainState:
-    """Consensus start: every agent holds the same replica, so H_w = W H = H
-    exactly (W is row-stochastic and all rows are identical) — no init
-    communication needed."""
+    """Consensus start: every agent holds the same replica, so W x = x
+    exactly (W is row-stochastic and all rows are identical) and the
+    engine's consensus_init spec materializes each extra state field as a
+    copy of the params or zeros — no init communication or gradient needed
+    (the paper's X^1 = X^0 - eta g(X^0) warm start is skipped, as every
+    trainer algorithm tolerates a plain consensus start)."""
     A = n_agents_of(mesh, prof)
     p0 = tfm.init_params(cfg, key)
     sd = jnp.dtype(dc.state_dtype)
@@ -105,14 +224,17 @@ def init_train_state(cfg, mesh, prof: shr.ShardingProfile, dc: DistConfig,
         return jnp.broadcast_to(l[None], (A,) + l.shape)
 
     params = tree_map(stack, p0)
-    return TrainState(params=params, h=params, hw=params,
-                      d=tree_zeros_like(params),
+    eng = engine_of(dc, A)
+    algo = {} if eng is None else {
+        f: (params if kind == "copy" else tree_zeros_like(params))
+        for f, kind in eng.consensus_init.items()}
+    return TrainState(params=params, algo=algo,
                       opt=dc.optimizer.init(params),
                       step=jnp.zeros((), jnp.int32))
 
 
 # ---------------------------------------------------------------------------
-# wire helpers (LEAD difference compression, per leaf)
+# leaf layout (the kernels' block layout, per stacked leaf)
 # ---------------------------------------------------------------------------
 
 def _leaf_blocks(l: jnp.ndarray, block: int):
@@ -139,17 +261,25 @@ def make_train_step(cfg, mesh, prof: shr.ShardingProfile, dc: DistConfig):
     """Returns step(state, batch, key) -> (state, metrics).
 
     batch: {tokens, labels[, memory]} with leading (A, B_local, ...) dims.
+    metrics: grad_norm + (decentralized algorithms) bits_per_agent, the
+    actual payload bits this step put on the wire, summed over leaves.
     """
     cfg_fwd = cfg
     if dc.seq_parallel and prof.tp_axis and cfg.seq_shard_axis is None:
         cfg_fwd = dataclasses.replace(cfg, seq_shard_axis=prof.tp_axis)
     cdt = jnp.dtype(dc.compute_dtype)
-    hyper = dc.hyper
+    A = n_agents_of(mesh, prof)
+    eng = engine_of(dc, A)
+    comp = None if eng is None else eng.compressor
     ring = RingGossip(axes=prof.agent_axes)
+    # (w_self, w_neighbor) read off the validated topology.ring(A) — 1/3 for
+    # A >= 3, 1/2 on the two-agent ring (RingGossip's fixed defaults only
+    # cover the A >= 3 case)
+    rw = EncodedRingGossip.weights_from(topology.ring(A))
+    w_self, w_neighbor = rw.w_self, rw.w_neighbor
     spec = P(prof.agent_axes)            # leading agent axis; rest replicated
     smap = functools.partial(compat.shard_map, mesh=mesh,
                              axis_names=set(mesh.axis_names), check_vma=False)
-    quantizer = QuantizePNorm(bits=dc.bits, block=dc.block)
 
     # -- gradients ----------------------------------------------------------
     def loss_of(p, b):
@@ -176,10 +306,6 @@ def make_train_step(cfg, mesh, prof: shr.ShardingProfile, dc: DistConfig):
         return jax.grad(loss_of)(p, b)
 
     # -- communication stages (the only collectives) ------------------------
-    def mix_tree(tree):
-        """W @ tree over the agent ring: uncompressed ppermute exchange."""
-        return smap(ring.mix, in_specs=(spec,), out_specs=spec)(tree)
-
     def pmean_tree(tree):
         axis = prof.agent_axes if len(prof.agent_axes) > 1 \
             else prof.agent_axes[0]
@@ -187,33 +313,59 @@ def make_train_step(cfg, mesh, prof: shr.ShardingProfile, dc: DistConfig):
             lambda l: jax.lax.pmean(l, axis), t),
             in_specs=(spec,), out_specs=spec)(tree)
 
-    def mix_encoded_payloads(payloads):
-        """RingGossip.mix_encoded per leaf: only codes+scales cross agents
-        (packed into uint32 words when wire_pack)."""
+    def gossip_payloads(payloads):
+        """Per leaf: (q, W q) with q the receiver-decoded own payload and
+        W q its ring mix — only the payload crosses agents (quantizer codes
+        packed into uint32 words when wire_pack).  Exact algorithms ship
+        {"values": raw_leaf} with identity decode — the uncompressed
+        ppermute exchange.
+
+        BOTH q and wq are decoded inside the one shard_map, from the same
+        materialized payload operand.  Decoding q from a second copy of the
+        encode outside the shard_map would let XLA re-derive it in a
+        different fusion context, and the two floor() evaluations can then
+        disagree on knife-edge elements — the own-decode and the wire would
+        carry different codes."""
         def body(pls):
             outs = []
             for pl in pls:
-                code_shape = pl["code"].shape          # local (1, nb, block)
+                if dc.wire_pack and "code" in pl:
+                    code_shape = pl["code"].shape    # local (1, nb, block)
 
-                def dec(w, shape=code_shape):
-                    code = (unpack_codes(w["packed"], int(np.prod(shape)),
-                                         dc.bits).reshape(shape)
-                            if dc.wire_pack else w["code"])
-                    return quantizer.decode_blocks(
-                        {"code": code, "scale": w["scale"]})
+                    def dec(w, shape=code_shape):
+                        code = unpack_codes(w["packed"], int(np.prod(shape)),
+                                            comp.bits).reshape(shape)
+                        return comp.decode_blocks(
+                            {"code": code, "scale": w["scale"]})
 
-                wire = ({"packed": pack_codes(pl["code"], dc.bits),
-                         "scale": pl["scale"]} if dc.wire_pack else pl)
-                outs.append(ring.mix_encoded(wire, dec))
+                    wire = {"packed": pack_codes(pl["code"], comp.bits),
+                            "scale": pl["scale"]}
+                else:
+                    wire = pl
+                    dec = (comp.decode_blocks if comp is not None
+                           else (lambda w: w["values"]))
+                own = dec(wire)
+                # weights come from topology.ring(A), matching the W that
+                # engine_of validated the engine against; degenerate rings
+                # mirror EncodedRingGossip.mix_encoded — A == 2 has ONE
+                # neighbor (both shifts deliver the same agent; summing
+                # them with the A >= 3 weights would mix (1/3, 2/3) instead
+                # of ring(2)'s (1/2, 1/2)), A == 1 has none
+                if A == 1:
+                    wq = own
+                elif A == 2:
+                    right = dec(ring.shift(wire, +1))
+                    wq = w_self * own + w_neighbor * right
+                else:
+                    right = dec(ring.shift(wire, +1))
+                    left = dec(ring.shift(wire, -1))
+                    wq = w_self * own + w_neighbor * (right + left)
+                outs.append((own, wq))
             return outs
         return smap(body, in_specs=(spec,), out_specs=spec)(payloads)
 
     # -- the step -----------------------------------------------------------
     def step(state: TrainState, batch: Dict[str, jnp.ndarray], key):
-        eta = _at(hyper.eta, state.step)
-        gamma = _at(hyper.gamma, state.step)
-        alpha = _at(hyper.alpha, state.step)
-
         g = jax.vmap(agent_grad)(state.params, batch)
         g = tree_map(lambda l: l.astype(jnp.float32), g)
         direction, opt_state = dc.optimizer.update(g, state.opt, state.params)
@@ -221,63 +373,60 @@ def make_train_step(cfg, mesh, prof: shr.ShardingProfile, dc: DistConfig):
                              for l in jax.tree_util.tree_leaves(direction)))
         metrics = {"grad_norm": gnorm}
 
-        x, h, hw, d = state.params, state.h, state.hw, state.d
-
-        if dc.algorithm == "allreduce":
+        if eng is None:                  # centralized allreduce reference
+            eta = _at(_hyper_dict(dc).get("eta", _DEFAULT_ETA), state.step)
             g_avg = pmean_tree(direction)
-            x_new = tree_map(lambda xl, gl: xl - eta * gl, x, g_avg)
-            new = TrainState(params=x_new, h=h, hw=hw, d=d, opt=opt_state,
-                             step=state.step + 1)
-            return new, metrics
+            x_new = tree_map(lambda xl, gl: xl - eta * gl,
+                             state.params, g_avg)
+            return TrainState(params=x_new, algo=state.algo, opt=opt_state,
+                              step=state.step + 1), metrics
 
-        if dc.algorithm == "dgd":
-            x_new = tree_map(lambda ml, gl: ml - eta * gl, mix_tree(x),
-                             direction)
-            new = TrainState(params=x_new, h=h, hw=hw, d=d, opt=opt_state,
-                             step=state.step + 1)
-            return new, metrics
+        # engine substrate over stacked leaves: blockify -> message ->
+        # encode -> ring gossip (shard_map) -> apply_stage -> unblockify
+        hy = eng.hypers_at(state.step)
+        leaves_x, treedef = jax.tree_util.tree_flatten(state.params)
+        leaves_g = treedef.flatten_up_to(direction)
+        leaves_algo = {f: treedef.flatten_up_to(state.algo[f])
+                       for f in eng.consensus_init}
+        keys = jax.random.split(key, max(len(leaves_x), 1))
 
-        # y = x - eta (g + d)   (paper line 4, NIDS/LEAD shared)
-        y = tree_map(lambda xl, gl, dl: xl - eta * (gl + dl), x, direction, d)
-
-        if dc.algorithm == "nids":
-            my = mix_tree(y)
-            d_new = tree_map(
-                lambda dl, yl, ml: dl + gamma / (2 * eta) * (yl - ml),
-                d, y, my)
-            x_new = tree_map(lambda xl, gl, dl: xl - eta * (gl + dl),
-                             x, direction, d_new)
-            new = TrainState(params=x_new, h=h, hw=hw, d=d_new, opt=opt_state,
-                             step=state.step + 1)
-            return new, metrics
-
-        # -- LEAD: difference compression, codes on the wire ----------------
-        leaves_y, treedef = jax.tree_util.tree_flatten(y)
-        leaves_h = treedef.flatten_up_to(h)
-        keys = jax.random.split(key, max(len(leaves_y), 1))
-        payloads, qh_leaves = [], []
-        for kk, ly, lh in zip(keys, leaves_y, leaves_h):
-            diff, d_leaf = _leaf_blocks(ly - lh.astype(ly.dtype), dc.block)
-            payload, _bits = quantizer.encode_blocks(kk, diff, d_leaf)
+        states, gbs, ctxs, payloads = [], [], [], []
+        bits_total = jnp.zeros((), jnp.float32)
+        for i, (kk, lx, lg) in enumerate(zip(keys, leaves_x, leaves_g)):
+            xb, d_leaf = _leaf_blocks(lx, dc.block)
+            gb, _ = _leaf_blocks(lg, dc.block)
+            fields = {f: _leaf_blocks(leaves_algo[f][i], dc.block)[0]
+                      for f in leaves_algo}
+            s_leaf = eng.state_cls(x=xb, k=state.step, **fields)
+            msg, ctx = eng.message(s_leaf, gb, hy)
+            if comp is not None:
+                payload, bits = comp.encode_blocks(kk, msg, d_leaf,
+                                                   interpret=dc.interpret)
+            else:
+                payload = {"values": msg}
+                bits = jnp.asarray(d_leaf * 32, jnp.float32)
+            states.append(s_leaf)
+            gbs.append(gb)
+            ctxs.append(ctx)
             payloads.append(payload)
-            qh_leaves.append(_leaf_unblocks(
-                quantizer.decode_blocks(payload), ly))
-        wqh_leaves = mix_encoded_payloads(payloads)
-        qh = jax.tree_util.tree_unflatten(treedef, qh_leaves)
-        wqh = jax.tree_util.tree_unflatten(
-            treedef, [_leaf_unblocks(w, ly)
-                      for w, ly in zip(wqh_leaves, leaves_y)])
+            bits_total = bits_total + bits
+        q_wqs = gossip_payloads(payloads)
 
-        yh = tree_map(jnp.add, h, qh)
-        yhw = tree_map(jnp.add, hw, wqh)
-        h_new = tree_map(lambda a, b: (1 - alpha) * a + alpha * b, h, yh)
-        hw_new = tree_map(lambda a, b: (1 - alpha) * a + alpha * b, hw, yhw)
-        d_new = tree_map(
-            lambda dl, a, b: dl + gamma / (2 * eta) * (a - b), d, yh, yhw)
-        x_new = tree_map(lambda xl, gl, dl: xl - eta * (gl + dl),
-                         x, direction, d_new)
-        new = TrainState(params=x_new, h=h_new, hw=hw_new, d=d_new,
-                         opt=opt_state, step=state.step + 1)
+        new_x = []
+        new_algo = {f: [] for f in leaves_algo}
+        for s_leaf, gb, (q, wq), ctx, lx in zip(states, gbs, q_wqs, ctxs,
+                                                leaves_x):
+            new_s, _ = eng.apply_stage(s_leaf, gb, q, wq, hy, ctx)
+            new_x.append(_leaf_unblocks(new_s.x, lx))
+            for f in new_algo:
+                new_algo[f].append(_leaf_unblocks(getattr(new_s, f), lx))
+
+        metrics["bits_per_agent"] = bits_total
+        new = TrainState(
+            params=jax.tree_util.tree_unflatten(treedef, new_x),
+            algo={f: jax.tree_util.tree_unflatten(treedef, ls)
+                  for f, ls in new_algo.items()},
+            opt=opt_state, step=state.step + 1)
         return new, metrics
 
     return step

@@ -27,11 +27,12 @@ from jax.sharding import NamedSharding
 from repro import checkpoint as ckpt
 from repro.compat import AxisType, make_mesh, set_mesh
 from repro.configs.registry import get_config
-from repro.core.lead import LEADHyper
+from repro.core.engines import ENGINES, describe
 from repro.data.synthetic import LMStreamConfig, lm_batch, stub_memory
 from repro.dist import sharding as shr
-from repro.dist.trainer import (DistConfig, init_train_state, make_train_step,
-                                n_agents_of, state_shardings)
+from repro.dist.trainer import (DistConfig, engine_of, init_train_state,
+                                make_train_step, n_agents_of,
+                                state_shardings)
 from repro.launch.mesh import make_production_mesh
 from repro.models import transformer as tfm
 from repro.optim.optimizers import make_optimizer
@@ -50,7 +51,9 @@ def main():
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--batch-per-agent", type=int, default=2)
     ap.add_argument("--algorithm", default="lead",
-                    choices=["lead", "nids", "dgd", "allreduce"])
+                    choices=sorted(set(ENGINES)) + ["allreduce"],
+                    help="any core/engines registry algorithm, or the "
+                         "centralized allreduce reference")
     ap.add_argument("--bits", type=int, default=2)
     ap.add_argument("--eta", type=float, default=0.03)
     ap.add_argument("--optimizer", default="sgd",
@@ -73,13 +76,25 @@ def main():
         cfg = cfg.reduced()
     prof = shr.make_profile(cfg, mesh.axis_names)
     shr.set_mesh_for_rules(mesh)
+    # eta from the CLI; every other hyper falls through to the resolved
+    # engine's paper defaults (gamma/alpha for LEAD, gamma for the
+    # compressed baselines, nothing extra for the exact ones)
     dc = DistConfig(algorithm=args.algorithm, bits=args.bits,
-                    hyper=LEADHyper(eta=args.eta, gamma=1.0, alpha=0.5),
+                    hyper={"eta": args.eta},
                     optimizer=make_optimizer(args.optimizer))
     A = n_agents_of(mesh, prof)
     print(f"mesh {dict(zip(mesh.axis_names, mesh.devices.shape))} | "
           f"{A} agents | {cfg.name} | {cfg.param_count()/1e6:.1f}M params "
           f"per agent | algorithm={args.algorithm}")
+    # the registry path this run actually resolved (see core.engines.describe
+    # — tests/test_docs.py pins the docs' engine matrix to the same registry)
+    eng = engine_of(dc, A)
+    if eng is None:
+        print("registry: algorithm=allreduce (centralized SGD reference, "
+              "pmean over agents — not a decentralized engine)")
+    else:
+        print(f"registry: {describe(eng)} "
+              f"(ppermute ring over mesh axes {prof.agent_axes})")
 
     key = jax.random.PRNGKey(0)
     state_sds = jax.eval_shape(lambda k: init_train_state(cfg, mesh, prof, dc, k), key)

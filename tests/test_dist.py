@@ -31,6 +31,56 @@ def test_distributed_nids_equals_dense_reference():
     _run("nids_equivalence")
 
 
+def test_distconfig_hyper_contract():
+    """DistConfig.hyper: None -> engine paper defaults (+ trainer eta);
+    dict -> exactly the declared hypers, unknown keys raise; LEADHyper ->
+    LEAD/allreduce shape, raises loudly where a field is undeclared
+    (nothing is silently dropped or silently overridden)."""
+    from repro.core.lead import LEADHyper
+    from repro.dist.trainer import DistConfig, engine_of
+
+    eng = engine_of(DistConfig(algorithm="deepsqueeze"), 4)
+    assert eng.eta == 0.03                 # the trainer's default stepsize
+    assert eng.gamma == 0.2                # DeepSqueeze's own paper default
+
+    eng = engine_of(DistConfig(algorithm="choco",
+                               hyper={"eta": 0.05, "gamma": 0.4}), 4)
+    assert eng.eta == 0.05 and eng.gamma == 0.4
+    with pytest.raises(ValueError):        # NIDS declares no gamma
+        engine_of(DistConfig(algorithm="nids",
+                             hyper={"eta": 0.05, "gamma": 0.5}), 4)
+
+    eng = engine_of(DistConfig(algorithm="lead",
+                               hyper=LEADHyper(eta=0.01)), 4)
+    assert eng.eta == 0.01 and eng.gamma == 1.0 and eng.alpha == 0.5
+    with pytest.raises(ValueError):        # choco takes eta+gamma only
+        engine_of(DistConfig(algorithm="choco", hyper=LEADHyper(eta=0.01)), 4)
+
+    assert engine_of(DistConfig(algorithm="allreduce"), 4) is None
+    # LEADHyper is a documented shape for allreduce (gamma/alpha unused)...
+    assert engine_of(DistConfig(algorithm="allreduce",
+                                hyper=LEADHyper(eta=0.1)), 4) is None
+    # ...but an explicit dict must name only what allreduce takes
+    with pytest.raises(ValueError):
+        engine_of(DistConfig(algorithm="allreduce",
+                             hyper={"eta": 0.1, "gamma": 1.0}), 4)
+
+
+@pytest.mark.slow
+def test_registry_trainer_reproduces_handrolled_lead():
+    """Regression pin for the engine-family port: the registry-driven
+    trainer matches the pre-port hand-rolled per-leaf LEAD math (dense-W
+    host reference, identical quantizer draws) step for step."""
+    _run("registry_equivalence")
+
+
+@pytest.mark.slow
+def test_compressed_baselines_run_multihost():
+    """CHOCO-SGD (and DeepSqueeze/EXTRA steps) through DistConfig.algorithm:
+    the registry port makes the compressed baselines multi-host."""
+    _run("baselines_multihost")
+
+
 @pytest.mark.slow
 def test_distributed_lead_trains_and_keeps_invariant():
     _run("lead_train")

@@ -1,0 +1,76 @@
+"""Docs-check lane (quick `-m "not slow"` tier): the README must not rot.
+
+Two guarantees:
+  * the README quickstart snippet actually executes (its asserts are part
+    of the snippet, so the documented claim — compressed-yet-exact with
+    fewer bits — is re-verified on every run);
+  * the documented `engine_for` matrix lists exactly the live registry's
+    canonical algorithms, with the right exact/compressed wire class —
+    together with `core.engines.describe` (printed by the examples and the
+    launch driver) this keeps docs and runs from silently diverging.
+"""
+import pathlib
+import re
+
+import pytest
+
+from repro.core.engines import ENGINES, _CANONICAL, is_exact
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+README = ROOT / "README.md"
+ARCH = ROOT / "docs" / "ARCHITECTURE.md"
+
+
+def test_docs_exist():
+    assert README.is_file(), "README.md is a shipped artifact"
+    assert ARCH.is_file(), "docs/ARCHITECTURE.md is a shipped artifact"
+
+
+def _matrix_rows(text):
+    """Rows of the `engine_for` matrix: (algorithm, wire) pairs parsed from
+    lines like `| `lead` | compressed | ...`."""
+    return re.findall(r"^\| `([a-z0-9-]+)` \| (compressed|exact) \|",
+                      text, re.M)
+
+
+def test_readme_engine_matrix_matches_registry():
+    rows = _matrix_rows(README.read_text())
+    assert rows, "README must contain the engine_for matrix table"
+    documented = {name: wire for name, wire in rows}
+    canonical = set(_CANONICAL.values())
+    assert set(documented) == canonical, (
+        f"documented {sorted(documented)} != registry {sorted(canonical)}")
+    for name, wire in documented.items():
+        expect = "exact" if is_exact(name) else "compressed"
+        assert wire == expect, f"{name}: documented {wire}, registry {expect}"
+    # aliases resolve to documented canonical names
+    for alias in ENGINES:
+        assert _CANONICAL[ENGINES[alias]] in documented, alias
+
+
+def _python_blocks(text):
+    return re.findall(r"```python\n(.*?)```", text, re.S)
+
+
+@pytest.mark.filterwarnings("ignore")
+def test_readme_quickstart_executes():
+    """Execute the README's python quickstart verbatim.  Its inline asserts
+    carry the documented claim; we additionally check the namespace it
+    leaves behind."""
+    blocks = _python_blocks(README.read_text())
+    assert blocks, "README must contain a python quickstart block"
+    ns = {}
+    exec(compile(blocks[0], str(README), "exec"), ns)      # noqa: S102
+    tr, tr_dgd = ns["tr"], ns["tr_dgd"]
+    assert tr.dist[-1] < 1e-3 * tr_dgd.dist[-1]
+    assert tr.bits_per_agent[-1] < 0.2 * tr_dgd.bits_per_agent[-1]
+
+
+def test_readme_names_live_entry_points():
+    """Paths and commands the README points at must exist."""
+    text = README.read_text()
+    for rel in ("examples/quickstart.py", "examples/train_lm.py",
+                "examples/serve_lm.py", "benchmarks/run.py",
+                "docs/ARCHITECTURE.md", "ROADMAP.md"):
+        assert rel in text, f"README should mention {rel}"
+        assert (ROOT / rel).exists(), rel

@@ -179,6 +179,66 @@ def test_flat_exact_engines_equal_tree(algo_name, gossip_mode):
         assert float(bits) == pytest.approx(D * 32)
 
 
+def _diminishing_eta(k):
+    """Fig. 3-style O(1/k) stepsize schedule (Theorem 2 shape)."""
+    return 0.02 / (1.0 + 0.05 * k)
+
+
+@pytest.mark.parametrize("algo_name", ["choco", "deepsqueeze", "nids"])
+def test_flat_schedule_trajectory_equals_tree(algo_name):
+    """Theorem-2 schedules thread the whole family: with eta a callable of
+    the iteration counter the flat engine still free-runs the tree
+    baseline's exact trajectory (the schedule resolves at state.k inside
+    both paths)."""
+    key, prob, gossip = _setup()
+    comp = QuantizePNorm(bits=4, block=512)
+    tree = {
+        "choco": CHOCO_SGD(gossip=gossip, compressor=comp,
+                           eta=_diminishing_eta, gamma=0.8),
+        "deepsqueeze": DeepSqueeze(gossip=gossip, compressor=comp,
+                                   eta=_diminishing_eta, gamma=0.2),
+        "nids": NIDS(gossip=gossip, eta=_diminishing_eta),
+    }[algo_name]
+    eng = flat_twin(tree, D)
+    assert eng.eta is _diminishing_eta      # flat_twin carries the schedule
+    tree_step = jax.jit(tree.step)
+    flat_step = jax.jit(eng.step_with_wire)
+
+    x0 = jnp.zeros((N, D))
+    g0 = prob.full_grad(x0)
+    st_t = tree.init(x0, g0, key)
+    st_f = eng.init(x0, g0, key)
+    for k in range(STEPS):
+        kk = jax.random.fold_in(key, k)
+        st_t = tree_step(st_t, prob.full_grad(st_t.x), kk)
+        st_f, _, _ = flat_step(st_f, prob.full_grad(eng.x_of(st_f)), kk)
+        for f in st_t._fields:
+            if f == "k":
+                continue
+            ref = getattr(st_t, f)
+            dev = float(jnp.max(jnp.abs(eng.unblockify(getattr(st_f, f))
+                                        - ref)))
+            tol = ATOL * (1.0 + float(jnp.max(jnp.abs(ref))))
+            assert dev <= tol, f"step {k}, field {f}: deviation {dev}"
+
+
+def test_baseline_schedule_runs_through_simulator():
+    """A baseline engine with a diminishing schedule scan-compiles through
+    run() (the schedule resolves inside the scan) and still accumulates the
+    byte-accurate bits x-axis."""
+    key = jax.random.PRNGKey(0)
+    prob = LinearRegression.generate(key, n_agents=8, m=40, d=30, noise=0.05)
+    W = jnp.asarray(topology.ring(8))
+    q4 = QuantizePNorm(bits=4)
+    algo = engine_for(W, q4, 30, algorithm="choco", gossip="ring",
+                      eta=lambda k: 0.05 / (1.0 + 0.02 * k), gamma=0.8)
+    tr = run(algo, prob, prob.x_star, iters=150)
+    assert np.isfinite(tr.dist[-1])
+    assert tr.dist[-1] < tr.dist[0]
+    np.testing.assert_allclose(
+        tr.bits_per_agent, (np.arange(150) + 1) * q4.wire_bits(30))
+
+
 def test_trace_bits_accumulate_actual_ring_payload():
     """run() x-axis for a compressed baseline under EncodedRingGossip: the
     bits trace is the cumulative sum of actual payload sizes — varying per

@@ -75,6 +75,28 @@ def test_momentum_and_sgd():
     np.testing.assert_allclose(np.asarray(u2["w"]), 3.0)
 
 
+def test_checkpoint_restore_is_path_keyed(tmp_path, key):
+    """Regression: restore matches leaves by saved path key, not position.
+    Same-shaped leaves under renamed paths (e.g. the TrainState port that
+    moved h/hw/d into an `algo` dict) must refuse to restore instead of
+    silently permuting state."""
+    from repro.checkpoint import load_pytree, save_pytree
+    a = jax.random.normal(key, (3, 4))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (3, 4))
+    path = str(tmp_path / "ck.npz")
+    save_pytree(path, {"h": a, "d": b})
+
+    # key-matched restore is order-robust (dict iteration vs sorted keys)
+    out = load_pytree(path, {"d": jnp.zeros((3, 4)), "h": jnp.zeros((3, 4))})
+    np.testing.assert_array_equal(np.asarray(out["h"]), np.asarray(a))
+    np.testing.assert_array_equal(np.asarray(out["d"]), np.asarray(b))
+
+    # renamed paths with identical shapes: loud refusal, no permutation
+    with pytest.raises(ValueError):
+        load_pytree(path, {"algo": {"h": jnp.zeros((3, 4))},
+                           "params": jnp.zeros((3, 4))})
+
+
 def test_checkpoint_roundtrip(tmp_path, key):
     tree = {"a": jax.random.normal(key, (4, 5)),
             "b": [jnp.arange(3), {"c": jnp.float32(2.5)}]}
