@@ -12,8 +12,10 @@ records, per algorithm at the acceptance point (d=2^16, n=8):
                             production mode, dense gossip; derived carries
                             speedup_vs_tree and the actual payload
                             bits/element from step_with_wire.
-  * step_flat_<algo>_ring   the same engine with EncodedRingGossip — only
-                            the encoded payload crosses agents.
+  * step_flat_<algo>_ring   the same engine with sparse neighbor-exchange
+                            gossip (EncodedNeighborGossip over the ring
+                            Topology) — only the encoded payload crosses
+                            agents, decoded once at the receiver.
 
 Tree and flat measurements are interleaved rep by rep so machine-throughput
 drift on shared boxes affects both equally (best-of over all reps).

@@ -1,0 +1,81 @@
+"""Gossip-backend scaling: dense mixing vs sparse neighbor exchange.
+
+The communication stage of every flat engine is either ``gossip="dense"``
+(W @ q — O(n^2 * d) work on the decoded buffer) or ``gossip="neighbor"``
+(the Topology's padded-table gather — O(n * deg * d)).  This bench times
+the two backends on the same decoded ``(n, nb, block)`` buffer at
+n ∈ {8, 32, 128} agents for the ring (deg 2) and 2-D torus (deg ≤ 4), plus
+an end-to-end engine step at each n — the sparse path's advantage must
+grow linearly with n while the dense matmul's agent-mixing work grows
+quadratically.
+
+Rows (``derived`` carries speedup_vs_dense):
+    gossip/mix_{ring|torus}_{dense|neighbor}_n<N>   the bare mixing stage
+    gossip/step_choco_ring_{dense|neighbor}_n<N>    full 2-bit CHOCO step
+
+Writes BENCH_gossip.json to the CWD when run directly; under
+benchmarks/run.py --json it is collected like every other module.
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, peek_rows, time_us, write_json
+from repro.core import topology
+from repro.core.compression import QuantizePNorm
+from repro.core.engines import engine_for
+from repro.core.gossip import EncodedNeighborGossip
+
+D = 2 ** 13                                  # per-agent dim (16 blocks)
+NS = (8, 32, 128)
+
+
+def _topos(n):
+    return {"ring": topology.ring(n),
+            "torus": topology.torus_2d(*topology._near_square(n))}
+
+
+def bench_mix(n: int) -> None:
+    key = jax.random.PRNGKey(0)
+    for tname, topo in _topos(n).items():
+        q = jax.random.normal(key, (n, D // 512, 512))
+        W = jnp.asarray(topo.W, jnp.float32)
+        dense = jax.jit(
+            lambda b, W=W: (W @ b.reshape(b.shape[0], -1)).reshape(b.shape))
+        sparse = jax.jit(EncodedNeighborGossip.from_topology(topo).mix)
+        us_d = time_us(dense, q, iters=20, warmup=3)
+        us_n = time_us(sparse, q, iters=20, warmup=3)
+        emit(f"gossip/mix_{tname}_dense_n{n}", us_d, f"deg={topo.deg_max}")
+        emit(f"gossip/mix_{tname}_neighbor_n{n}", us_n,
+             f"speedup_vs_dense={us_d / us_n:.2f}")
+
+
+def bench_step(n: int) -> None:
+    """Full engine step (encode + gossip + apply) — the mixing advantage as
+    seen end to end by the scan simulator."""
+    key = jax.random.PRNGKey(1)
+    topo = topology.ring(n)
+    x0 = jax.random.normal(key, (n, D))
+    g0 = jax.random.normal(jax.random.fold_in(key, 1), (n, D))
+    us = {}
+    for mode in ("dense", "neighbor"):
+        eng = engine_for(topo, QuantizePNorm(bits=2, block=512), D,
+                         algorithm="choco", gossip=mode, dither="fast",
+                         eta=0.05, gamma=0.8)
+        st = eng.init(x0, g0, key)
+        step = jax.jit(eng.step)
+        us[mode] = time_us(step, st, eng.blockify(g0), key,
+                           iters=10, warmup=2)
+    emit(f"gossip/step_choco_ring_dense_n{n}", us["dense"], "2-bit wire")
+    emit(f"gossip/step_choco_ring_neighbor_n{n}", us["neighbor"],
+         f"speedup_vs_dense={us['dense'] / us['neighbor']:.2f}")
+
+
+def main() -> None:
+    for n in NS:
+        bench_mix(n)
+        bench_step(n)
+
+
+if __name__ == "__main__":
+    main()
+    write_json("BENCH_gossip.json", "gossip", peek_rows())

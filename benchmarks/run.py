@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
     bench_roofline      §Roofline aggregation from reports/dryrun
     bench_lead_step     flat-buffer engine vs pytree path step latency
     bench_baselines     flat engine family vs tree baselines (Fig 2-4 sweep)
+    bench_gossip        dense vs neighbor-exchange mixing at n in {8,32,128}
 
 ``--json OUT``: additionally write one machine-readable ``BENCH_<name>.json``
 per executed module into directory OUT (rows: name, us_per_call, derived) so
@@ -19,9 +20,9 @@ import os
 import sys
 import traceback
 
-from benchmarks import (bench_baselines, bench_compression, bench_lead_step,
-                        bench_linreg, bench_logreg, bench_nn, bench_roofline,
-                        bench_sensitivity, bench_theory)
+from benchmarks import (bench_baselines, bench_compression, bench_gossip,
+                        bench_lead_step, bench_linreg, bench_logreg, bench_nn,
+                        bench_roofline, bench_sensitivity, bench_theory)
 from benchmarks.common import drain_rows, write_json
 
 ALL = {
@@ -34,6 +35,7 @@ ALL = {
     "roofline": bench_roofline.main,
     "lead_step": bench_lead_step.main,
     "baselines": bench_baselines.main,
+    "gossip": bench_gossip.main,
 }
 
 

@@ -10,33 +10,30 @@ import argparse
 import os
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import topology
 from repro.core.compression import QuantizePNorm
 from repro.core.convex import LinearRegression, LogisticRegression
 from repro.core.engines import engine_for
-from repro.core.gossip import DenseGossip
 from repro.core.simulator import LEADSim, run
 
 
-def algos(gossip, d, eta):
+def algos(topo, d, eta):
     """The Fig. 2 sweep, every algorithm on the flat engine registry
     (core/engines): scan-compiled fast path, Trace.bits_per_agent from the
-    actual encoded payloads."""
+    actual encoded payloads, any core/topology graph."""
     q2 = QuantizePNorm(bits=2, block=512)
-    W = gossip.W
     return {
-        "LEAD": LEADSim(gossip=gossip, compressor=q2, eta=eta, gamma=1.0,
+        "LEAD": LEADSim(topology=topo, compressor=q2, eta=eta, gamma=1.0,
                         alpha=0.5, engine="flat"),
-        "NIDS": engine_for(W, None, d, algorithm="nids", eta=eta),
-        "DGD": engine_for(W, None, d, algorithm="dgd", eta=eta),
-        "CHOCO-SGD": engine_for(W, q2, d, algorithm="choco", eta=eta,
+        "NIDS": engine_for(topo, None, d, algorithm="nids", eta=eta),
+        "DGD": engine_for(topo, None, d, algorithm="dgd", eta=eta),
+        "CHOCO-SGD": engine_for(topo, q2, d, algorithm="choco", eta=eta,
                                 gamma=0.6),
-        "DeepSqueeze": engine_for(W, q2, d, algorithm="deepsqueeze", eta=eta,
-                                  gamma=0.2),
-        "QDGD": engine_for(W, q2, d, algorithm="qdgd", eta=eta, gamma=0.2),
+        "DeepSqueeze": engine_for(topo, q2, d, algorithm="deepsqueeze",
+                                  eta=eta, gamma=0.2),
+        "QDGD": engine_for(topo, q2, d, algorithm="qdgd", eta=eta, gamma=0.2),
     }
 
 
@@ -47,7 +44,7 @@ def main():
     args = ap.parse_args()
     os.makedirs(args.out, exist_ok=True)
     key = jax.random.PRNGKey(0)
-    gossip = DenseGossip(W=jnp.asarray(topology.ring(8)))
+    topo = topology.ring(8)
 
     experiments = {}
     lin = LinearRegression.generate(key, n_agents=8, m=200, d=200, lam=0.1)
@@ -58,7 +55,7 @@ def main():
     experiments["logreg_hom"] = (hom, hom.solve_x_star(), False)
 
     for exp, (prob, x_star, stoch) in experiments.items():
-        for name, algo in algos(gossip, prob.d,
+        for name, algo in algos(topo, prob.d,
                                 eta=0.05 if exp == "linreg" else 0.1).items():
             tr = run(algo, prob, x_star, iters=args.iters, key=key,
                      stochastic=stoch)

@@ -6,38 +6,39 @@ the consensual optimum under 16x communication compression, where DGD stalls.
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import jax.numpy as jnp
 
 from repro.core import topology
 from repro.core.compression import QuantizePNorm
 from repro.core.convex import LinearRegression
 from repro.core.engines import describe, engine_for
-from repro.core.gossip import DenseGossip
 from repro.core.simulator import LEADSim, run
 
 
 def main():
     key = jax.random.PRNGKey(0)
     prob = LinearRegression.generate(key, n_agents=8, m=100, d=100)
-    gossip = DenseGossip(W=jnp.asarray(topology.ring(8)))
+    topo = topology.ring(8)     # the paper's graph; torus_2d/erdos_renyi
+    #                             swap in without touching anything else
     mu, L = prob.mu_L
     eta = 1.0 / L        # safe for every algorithm (DGD diverges at 2/(mu+L))
-    print(f"problem: 8 agents, d=100, mu={mu:.3f}, L={L:.3f}, eta={eta:.3f}")
+    print(f"problem: 8 agents, d=100, mu={mu:.3f}, L={L:.3f}, eta={eta:.3f}, "
+          f"topology={topo!r} (beta={topo.beta:.2f}, "
+          f"kappa_g={topo.kappa_g:.2f})")
 
     # every algorithm on the flat engine family (core/engines): one
     # scan-compiled fast path, byte-accurate wire accounting
     q2 = QuantizePNorm(bits=2, block=512)
     algos = {
-        "LEAD (2-bit)": LEADSim(gossip=gossip, compressor=q2, eta=eta,
+        "LEAD (2-bit)": LEADSim(topology=topo, compressor=q2, eta=eta,
                                 engine="flat"),
-        "NIDS (32-bit)": engine_for(gossip.W, None, prob.d, algorithm="nids",
+        "NIDS (32-bit)": engine_for(topo, None, prob.d, algorithm="nids",
                                     eta=eta),
-        "DGD  (32-bit)": engine_for(gossip.W, None, prob.d, algorithm="dgd",
+        "DGD  (32-bit)": engine_for(topo, None, prob.d, algorithm="dgd",
                                     eta=eta),
     }
     # the registry path each run resolves (tests/test_docs.py pins the
     # README's engine matrix against the same registry)
-    print("registry:", describe(engine_for(gossip.W, q2, prob.d)))
+    print("registry:", describe(engine_for(topo, q2, prob.d)))
     print(f"{'iter':>6} | " + " | ".join(f"{n:>14}" for n in algos))
     traces = {n: run(a, prob, prob.x_star, iters=200, key=key)
               for n, a in algos.items()}

@@ -30,8 +30,9 @@ the logical per-agent dimension ``dim``):
 
     encode_blocks(key, buf, dim) -> (payload, bits)
         payload: dict of arrays with leading agent axis n — exactly what
-        crosses agents in encoded gossip (RingGossip.mix_encoded /
-        EncodedRingGossip); nothing outside the payload may travel.
+        crosses agents in encoded gossip (the trainer's per-round ppermute
+        exchange; EncodedNeighborGossip models it on the flat agent axis);
+        nothing outside the payload may travel.
         bits: scalar f32, bits per agent actually on the wire THIS step,
         computed from the payload (for RandK this is data-dependent).
     decode_blocks(payload) -> (n, nb, block) f32 decoded estimate.

@@ -9,8 +9,12 @@ paper algorithm.
                   (exact, no encode stage)
 
 ``engine_for`` is the registry front door: it dispatches
-``(algorithm, compressor, gossip)`` to the matching engine so the whole
-Fig. 2-4 sweep runs on the flat substrate with byte-accurate wire bits.
+``(algorithm, compressor, topology)`` to the matching engine — the first
+argument is a first-class ``core/topology.Topology`` (ring, torus_2d,
+erdos_renyi, from_matrix, ...; raw matrices are normalized) and ``gossip``
+selects dense or sparse neighbor-exchange mixing over it — so the whole
+Fig. 2-4 sweep runs on the flat substrate with byte-accurate wire bits on
+any Assumption-1 graph.
 ``flat_twin`` builds the flat engine mirroring a tree baseline instance
 (same W, compressor, and hyper-parameters) — the one-line migration path
 for drivers that hold core/baselines.py objects.  ``describe`` renders the
@@ -78,14 +82,14 @@ def algorithm_name(engine) -> str:
 
 
 def describe(engine) -> str:
-    """One-line `(algorithm, compressor, gossip)` description of a resolved
-    engine — the registry path a run actually took.  Printed by the examples
-    and launch drivers (and asserted by tests/test_docs.py) so docs snippets
-    and real runs stay in sync."""
+    """One-line `(algorithm, compressor, gossip, topology)` description of a
+    resolved engine — the registry path a run actually took.  Printed by the
+    examples and launch drivers (and asserted by tests/test_docs.py) so docs
+    snippets and real runs stay in sync."""
     comp = engine.compressor
     comp_s = "none (exact, 32-bit)" if comp is None else repr(comp)
     return (f"algorithm={algorithm_name(engine)} compressor={comp_s} "
-            f"gossip={engine.gossip}")
+            f"gossip={engine.gossip} topology={engine.topology!r}")
 
 # tree-class name (core/baselines.py) -> registry key, for flat_twin
 _TREE_TWINS = {
@@ -100,11 +104,19 @@ _TREE_TWINS = {
 }
 
 
-def engine_for(gossip_W, compressor, dim: int,
+def engine_for(topology, compressor, dim: int,
                interpret: Optional[bool] = None,
                dither: str = "match", gossip: str = "dense",
                algorithm: str = "lead", **hyper) -> FlatEngineBase:
-    """Registry dispatch: (algorithm, compressor, gossip) -> flat engine.
+    """Registry dispatch: (algorithm, compressor, topology) -> flat engine.
+
+    `topology` is a core/topology.Topology — built by topology.ring(n),
+    torus_2d(...), erdos_renyi(...), from_matrix(W), ... — or a raw mixing
+    matrix, normalized through topology.as_topology.  `gossip` selects the
+    communication stage over it: "dense" (W @ q matmul) or "neighbor"
+    (sparse neighbor-exchange gather over the topology's padded table,
+    O(n * deg * d), any Assumption-1 graph); "ring" is the historical alias
+    for neighbor exchange that asserts the topology IS the uniform ring.
 
     Every shipped compressor runs flat on every compressed algorithm: the
     p=inf QuantizePNorm through LEAD's fused kernels (or its encode_blocks
@@ -140,7 +152,7 @@ def engine_for(gossip_W, compressor, dim: int,
             "decode_blocks flat wire protocol; use engine='tree'")
 
     block = getattr(compressor, "block", DEFAULT_BLOCK)
-    return cls(W=gossip_W, dim=dim, compressor=compressor, block=block,
+    return cls(topology=topology, dim=dim, compressor=compressor, block=block,
                interpret=interpret, gossip=gossip, dither=dither, **hyper)
 
 

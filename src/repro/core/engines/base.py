@@ -18,12 +18,16 @@ the family shares:
                    Identity/None short-circuits to a raw-values payload
                    (d * 32 bits), so the exact baselines ride the same path
                    with no encode stage.
-  * gossip       — ``mix_payload``: pluggable communication stage.
-                   ``gossip="dense"`` computes W @ decode(payload) on the
-                   locally decoded buffer (any topology); ``gossip="ring"``
-                   rolls the encoded payload to the two ring neighbors and
-                   decodes at the receiver (EncodedRingGossip) — codes on
-                   the wire, W must be the uniform ring.
+  * gossip       — ``mix_payload``: pluggable communication stage over the
+                   engine's ``Topology`` (core/topology.py).  The payload is
+                   decoded ONCE (per-agent decode commutes with the
+                   exchange); ``gossip="dense"`` then mixes W @ q densely,
+                   ``gossip="neighbor"`` runs the sparse O(n * deg * d)
+                   neighbor-exchange gather (EncodedNeighborGossip) — any
+                   Assumption-1 graph, ring/torus/Erdős–Rényi alike.
+                   ``gossip="ring"`` is the historical alias for neighbor
+                   exchange that additionally asserts the topology IS the
+                   uniform ring.
   * dither       — the quantizer dither plane.  ``dither="match"`` draws
                    per-agent threefry over the logical blocks, matching the
                    tree path's split-then-vmap draw bit for bit;
@@ -47,8 +51,8 @@ buffers — they carry the whole per-algorithm update and are deliberately
 shape-polymorphic (any ``(n, nb, block)``), so the SAME methods drive both
 the single-device flat path (the scan simulator) and the multi-host trainer
 (dist/trainer.py), which blockifies each stacked pytree leaf, calls
-``message``, ships the encoded payload through a shard_map ring
-(``RingGossip.mix_encoded`` / ppermute), and calls ``apply_stage`` — one
+``message``, ships the encoded payload through one shard_map ppermute per
+``Topology.permute_rounds()`` entry, and calls ``apply_stage`` — one
 implementation of every algorithm, two communication substrates.
 
 Hyper-parameters are ``Schedule`` values (core/lead.py): floats OR callables
@@ -76,7 +80,8 @@ from typing import Any, ClassVar, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.gossip import EncodedRingGossip
+from repro.core import topology as topology_mod
+from repro.core.gossip import EncodedNeighborGossip
 from repro.core.lead import _at
 from repro.kernels import quantize as _q
 from repro.kernels.ops import DEFAULT_BLOCK, _pick_tile
@@ -117,11 +122,16 @@ def fast_uniform(shape, seed: jnp.ndarray) -> jnp.ndarray:
 class FlatEngineBase:
     """Layout + wire + gossip substrate shared by every flat engine.
 
+    topology is a core/topology.Topology (a raw mixing matrix is accepted
+    and normalized in __post_init__): it carries the dense W for
+    gossip="dense", the padded neighbor/weight table for
+    gossip="neighbor", and the Theorem-1 spectral metadata.
     compressor=None (or Identity) means no encode stage: the raw message
     buffer is the payload (d * 32 bits on the wire).  `interpret` is the
-    kernels' tri-state backend flag (None = auto).  gossip="dense" mixes
-    W @ decode(payload); gossip="ring" rolls the encoded payload to ring
-    neighbors and decodes at the receiver — W must be the uniform ring.
+    kernels' tri-state backend flag (None = auto).  The payload is decoded
+    once per step; gossip="dense" mixes W @ q, gossip="neighbor" runs the
+    sparse neighbor-exchange gather on any topology, and gossip="ring" is
+    the alias that additionally asserts the topology is the uniform ring.
     dither selects the quantizer dither stream (see module docstring);
     "match" keeps trajectories aligned with the tree references, "fast" is
     the cheaper production stream.
@@ -135,12 +145,12 @@ class FlatEngineBase:
     lets dist/trainer.py instantiate the same algorithm over stacked
     model pytrees without re-rolling its math.
     """
-    W: Any                             # (n, n) mixing matrix
+    topology: Any                      # Topology (or (n, n) matrix)
     dim: int                           # logical per-agent dimension d
     compressor: Any = None             # None -> Identity (no encode stage)
     block: int = DEFAULT_BLOCK
     interpret: Optional[bool] = None
-    gossip: str = "dense"              # "dense" | "ring"
+    gossip: str = "dense"              # "dense" | "neighbor" | "ring" alias
     dither: str = "match"              # "match" | "fast"
 
     # subclass metadata: the state NamedTuple and its consensus start
@@ -149,18 +159,26 @@ class FlatEngineBase:
     consensus_init: ClassVar[Dict[str, str]] = {}
 
     def __post_init__(self):
-        assert self.gossip in ("dense", "ring"), self.gossip
+        object.__setattr__(self, "topology",
+                           topology_mod.as_topology(self.topology))
+        assert self.gossip in ("dense", "neighbor", "ring"), self.gossip
         assert self.dither in ("match", "fast"), self.dither
         if self.gossip == "ring":
             import numpy as np
-            from repro.core import topology
-            W = np.asarray(self.W)
-            assert np.allclose(W, topology.ring(W.shape[0]), atol=1e-6), \
-                "gossip='ring' requires the uniform ring mixing matrix"
+            W = self.topology.W
+            assert np.allclose(W, np.asarray(topology_mod.ring(W.shape[0])),
+                               atol=1e-6), \
+                "gossip='ring' requires the uniform ring mixing matrix " \
+                "(use gossip='neighbor' for arbitrary topologies)"
+
+    @property
+    def W(self):
+        """The dense (n, n) mixing matrix of the engine's topology."""
+        return self.topology.W
 
     @property
     def n(self) -> int:
-        return self.W.shape[0]
+        return self.topology.n
 
     @property
     def nb_logical(self) -> int:
@@ -298,13 +316,24 @@ class FlatEngineBase:
         return payload, decode, wire
 
     def mix_payload(self, payload, decode):
-        """Communication stage: (q, W q) with q = decode(payload).  Only
-        `payload` crosses agents; under gossip="ring" the receiver decodes."""
-        if self.gossip == "ring":
-            ring = EncodedRingGossip.weights_from(self.W)
-            return decode(payload), ring.mix_encoded(payload, decode)
+        """Communication stage: (q, W q) with q = decode(payload), decoded
+        exactly ONCE (per-agent decode commutes with the exchange, so the
+        single decoded copy serves the receiver-own view and the mix).
+        Only `payload` conceptually crosses agents; gossip="dense" mixes
+        densely, "neighbor"/"ring" run the sparse neighbor-exchange gather
+        over the topology's padded table.
+
+        The optimization_barrier pins the decode-once property at the XLA
+        level: the gather's per-neighbor consumers would otherwise inline
+        the decode as a fusion producer and recompute it per neighbor —
+        the 3x-decode cost this path exists to avoid (and the same
+        materialize-once discipline the trainer's shard_map needs for
+        knife-edge floor() consistency, ARCHITECTURE.md §3)."""
         q = decode(payload)
-        return q, self._mix(q)
+        if self.gossip == "dense":
+            return q, self._mix(q)
+        q = jax.lax.optimization_barrier(q)
+        return q, EncodedNeighborGossip.from_topology(self.topology).mix(q)
 
     @staticmethod
     def rel_err(q: jnp.ndarray, target: jnp.ndarray,

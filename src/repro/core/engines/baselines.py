@@ -4,10 +4,11 @@ Every baseline from core/baselines.py gets a twin on the scan-compiled
 codes-on-the-wire substrate (engines/base.py): state lives in the kernels'
 ``(n_agents, nb, block)`` f32 layout, the compressed algorithms ship only
 their encoded payload across agents (``gossip="dense"`` mixes the decoded
-buffer, ``gossip="ring"`` rolls the payload to ring neighbors and decodes at
-the receiver), and every step returns the *actual* per-agent payload bits —
-so the paper's bits-transmitted x-axis is byte-accurate for the whole
-algorithm family, not just LEAD.
+buffer with the topology's W, ``gossip="neighbor"`` runs the sparse
+neighbor-exchange gather over any core/topology graph), and every step
+returns the *actual* per-agent payload bits — so the paper's
+bits-transmitted x-axis is byte-accurate for the whole algorithm family,
+not just LEAD.
 
 Each engine is written as the base's two stage methods — ``message`` (the
 buffer it transmits) and ``apply_stage`` (the state update given the decoded

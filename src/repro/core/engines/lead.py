@@ -28,7 +28,8 @@ Codes on the wire
 -----------------
 Layout, wire protocol, and gossip stage come from the engine-family base
 (engines/base.py): between the two passes only the *payload* exists, mixed
-either densely (W @ decode) or around the encoded ring.  ``step_wire``
+either densely (W @ decode) or by sparse neighbor exchange over the
+engine's Topology (any Assumption-1 graph).  ``step_wire``
 additionally returns the bits each agent put on the wire this step, computed
 from the actual payload (data-dependent for RandK) — the byte-accurate
 x-axis of the paper's Fig. 1b/6, replacing static ``wire_bits(d)`` estimates.

@@ -1,21 +1,30 @@
 """Gossip (decentralized mixing) backends.
 
-Two interchangeable implementations of `mix`:
+Interchangeable implementations of `mix` over the Topology API
+(core/topology.py):
 
 * DenseGossip — explicit mixing-matrix multiply.  The reference/simulator
   path: states carry a leading agent dimension `n` on a single device.
+  Accepts a Topology or a raw matrix.
+* EncodedNeighborGossip — sparse neighbor exchange on the leading agent
+  axis, built from a Topology's padded ``neighbors``/``weights`` table:
+  each agent combines its own decoded payload with a *gather* of its
+  neighbors' — O(n * deg * d) where the dense mix is O(n^2 * d), and valid
+  for ANY Assumption-1 graph (ring, torus, Erdős–Rényi, ...).  The payload
+  is decoded exactly once: per-agent decode commutes with the neighbor
+  gather, so decoding before the (virtual) exchange is numerically
+  identical to decoding at every receiver — the wire model (only the
+  payload crosses agents, bits read off the actual payload) is unchanged,
+  without the old 3x receiver decode.
 * RingGossip — `jax.lax.ppermute` over one or more mesh axes.  The
   production path: must be called *inside* a (partial-manual) shard_map whose
   manual axes are exactly `axes`.  The ring is laid out over the flattened
   mesh axes so that consecutive neighbors are intra-pod except at the two
   pod-boundary edges — the compressed payload is the only traffic that
-  crosses pods.
-* EncodedRingGossip — the single-device analogue of RingGossip.mix_encoded
-  for the flat LEAD engine: agents live on the *leading array axis*, the
-  encoded payload is rolled to ring neighbors, and each agent decodes
-  locally.  This is the simulator-side model of codes-on-the-wire mixing —
-  only the payload arrays cross the (virtual) agent boundary, so per-step
-  wire accounting can be read off the actual payload.
+  crosses pods.  Arbitrary graphs reach the multi-host path through
+  ``Topology.permute_rounds()`` (dist/trainer.py), not through this class.
+* EncodedRingGossip — the uniform-ring special case of
+  EncodedNeighborGossip, kept for its (w_self, w_neighbor) reading API.
 
 All back-ends operate on pytrees leaf-wise.
 """
@@ -33,8 +42,17 @@ from repro.utils.tree import Pytree, tree_map
 
 @dataclasses.dataclass(frozen=True)
 class DenseGossip:
-    """mix(X) = W @ X along the leading agent axis (simulator path)."""
+    """mix(X) = W @ X along the leading agent axis (simulator path).
+
+    W may be a core/topology.Topology (unwrapped to its dense matrix in
+    __post_init__) or any (n, n) array."""
     W: Any  # (n, n) array
+
+    def __post_init__(self):
+        # unwrap a Topology to its dense matrix (duck-typed: topology.py
+        # must stay importable without this module)
+        if hasattr(self.W, "neighbors") and hasattr(self.W, "W"):
+            object.__setattr__(self, "W", self.W.W)
 
     @property
     def n(self) -> int:
@@ -54,15 +72,69 @@ class DenseGossip:
 
 
 @dataclasses.dataclass(frozen=True)
-class EncodedRingGossip:
-    """Ring mixing on the leading (agent) axis with codes on the wire.
+class EncodedNeighborGossip:
+    """Sparse neighbor-exchange mixing on the leading (agent) axis.
 
-    Single-device counterpart of RingGossip.mix_encoded: the per-agent
-    encoded payload (e.g. int8 code planes + per-block scales) is rolled one
-    step each way around the agent axis and decoded *at the receiver* — the
-    dense tensors never cross agents.  With the paper's uniform ring
-    (w_self = w_neighbor = 1/3) this computes exactly W @ decode(payload)
-    for W = topology.ring(n), up to summation order.
+    Built from a Topology's padded table: ``neighbors`` (n, deg_max) int
+    indices (self-padded) and ``weights`` (n, deg_max + 1) with the self
+    weight in column 0 (padding weights 0.0).  ``mix`` computes, per leaf,
+
+        out[i] = weights[i, 0] * x[i] + sum_j weights[i, 1+j] * x[nbr[i, j]]
+
+    — exactly ``W @ x`` up to summation order, in O(n * deg * d) instead of
+    the dense O(n^2 * d).  This is the single-device model of multi-host
+    neighbor exchange (``Topology.permute_rounds`` + ppermute in
+    dist/trainer.py): only the encoded payload conceptually crosses agents,
+    and since per-agent decode commutes with the gather, the receiver's
+    decode is hoisted before the exchange and runs ONCE per step (the old
+    EncodedRingGossip decoded own + both rolled copies — 3x).
+    """
+    neighbors: Any                       # (n, deg_max) int
+    weights: Any                         # (n, deg_max + 1) float
+
+    @staticmethod
+    def from_topology(topo) -> "EncodedNeighborGossip":
+        return EncodedNeighborGossip(neighbors=topo.neighbors,
+                                     weights=topo.weights)
+
+    def mix(self, tree: Pytree) -> Pytree:
+        """Weighted neighbor gather of decoded per-agent buffers, leaf-wise;
+        pads (self index, weight 0) contribute exactly 0.  Accumulated one
+        neighbor column at a time — deg_max cheap (n, d) row-gathers instead
+        of one (n, deg, d) materialization, which is what makes the sparse
+        path beat the dense matmul for n >= 32 (BENCH_gossip.json)."""
+        nbr = jnp.asarray(self.neighbors)
+
+        def one(x):
+            w = jnp.asarray(self.weights, x.dtype)
+            shape = (-1,) + (1,) * (x.ndim - 1)
+            out = w[:, 0].reshape(shape) * x
+            for j in range(nbr.shape[1]):
+                out = out + w[:, 1 + j].reshape(shape) * x[nbr[:, j]]
+            return out
+
+        return tree_map(one, tree)
+
+    def mix_encoded(self, payload: Pytree,
+                    decode: Callable[[Pytree], Pytree]) -> Pytree:
+        """W @ decode(payload) with one decode: decode commutes with the
+        per-agent gather, so the single decoded copy serves every
+        receiver."""
+        return self.mix(decode(payload))
+
+
+@dataclasses.dataclass(frozen=True)
+class EncodedRingGossip:
+    """Uniform-ring special case of EncodedNeighborGossip.  The engine
+    substrate and the trainer now route through the Topology table / round
+    decomposition instead; this class survives as the compact
+    (w_self, w_neighbor) API for ring-only drivers and tests.
+
+    ``mix_encoded`` decodes the payload ONCE and rolls the *decoded* buffer
+    to the two ring neighbors (one for n == 2, none for n == 1): rolling
+    commutes with per-agent decode, so this equals the old
+    decode-at-every-receiver form bit for bit while skipping its two
+    redundant decode passes (the ROADMAP's 3x-decode open item).
     """
     w_self: float = 1.0 / 3.0
     w_neighbor: float = 1.0 / 3.0
@@ -75,14 +147,14 @@ class EncodedRingGossip:
         return EncodedRingGossip(w_self=float(Wn[0, 0]),
                                  w_neighbor=float(Wn[0, 1 % Wn.shape[0]]))
 
-    def shift(self, payload: Pytree, direction: int) -> Pytree:
-        """Roll every payload leaf by one agent (this IS the wire traffic)."""
-        return tree_map(lambda a: jnp.roll(a, -direction, axis=0), payload)
+    def shift(self, tree: Pytree, direction: int) -> Pytree:
+        """Roll every leaf by one agent along the ring."""
+        return tree_map(lambda a: jnp.roll(a, -direction, axis=0), tree)
 
     def mix_encoded(self, payload: Pytree,
                     decode: Callable[[Pytree], Pytree]) -> Pytree:
-        """w_self * decode(own) + w_neighbor * (decode(right) + decode(left));
-        only `payload` crosses agents, decode runs per receiving agent.
+        """w_self * own + w_neighbor * (right + left) on the decoded buffer
+        (decoded once — see class docstring).
 
         Degenerate rings (topology.ring): n == 2 has ONE neighbor (both
         shifts would deliver the same agent — summing them double-counts),
@@ -91,12 +163,12 @@ class EncodedRingGossip:
         own = decode(payload)
         if n == 1:
             return own
-        right = decode(self.shift(payload, +1))
+        right = self.shift(own, +1)
         if n == 2:
             return tree_map(
                 lambda o, r: self.w_self * o + self.w_neighbor * r,
                 own, right)
-        left = decode(self.shift(payload, -1))
+        left = self.shift(own, -1)
         return tree_map(
             lambda o, r, l: self.w_self * o + self.w_neighbor * (r + l),
             own, right, left)
@@ -111,6 +183,11 @@ def _ring_perms(n: int) -> Tuple[list, list]:
 @dataclasses.dataclass(frozen=True)
 class RingGossip:
     """Ring mixing with uniform 1/3 weights via collective_permute.
+
+    Retained as a public reference/compatibility helper: dist/trainer.py
+    now schedules its collectives from ``Topology.permute_rounds()`` and no
+    in-repo path calls this class — new code should go through a Topology
+    (the fixed 1/3 weights here cover only the n >= 3 uniform ring).
 
     axes: mesh axis name(s) that form the agent ring (e.g. ("pod", "data")).
           jax.lax.ppermute accepts a tuple of axis names and flattens them in

@@ -20,8 +20,10 @@ The LEAD adapter wraps core/lead.py with a DenseGossip and a per-agent
 (vmapped) compressor so that blocks never straddle agents; with
 ``engine="flat"`` it instead drives the fused flat-buffer engine
 (core/engines/lead.py) holding state in the kernels' (n, nb, block) layout,
-with codes-on-the-wire gossip (``engine_gossip="ring"``) and byte-accurate
-per-step wire accounting from the actual payload.
+with sparse neighbor-exchange gossip (``engine_gossip="neighbor"``) and
+byte-accurate per-step wire accounting from the actual payload.  The
+communication graph is a first-class core/topology.Topology: pass
+``topology=`` to LEADSim or to ``run`` (ring, torus_2d, erdos_renyi, ...).
 
 ``run`` is generic over the whole flat engine family: any engine from
 core/engines (LEAD via LEADSim, the baseline twins directly — build one
@@ -39,7 +41,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import lead as lead_mod
+from repro.core import topology as topology_mod
 from repro.core.engines import engine_for
+from repro.core.engines.base import FlatEngineBase
 from repro.core.engines.lead import FlatLEADState
 from repro.core.gossip import DenseGossip
 from repro.core.lead import LEADHyper
@@ -58,16 +62,20 @@ def vmap_compress(compressor) -> Callable:
 class LEADSim:
     """init/step adapter making LEAD interface-compatible with baselines.
 
-    engine="tree" is the reference pytree path (core/lead.py);
-    engine="flat" drives the fused flat-buffer engine (core/engine.py) —
+    The communication graph comes from either ``topology`` (a
+    core/topology.Topology — ring, torus_2d, erdos_renyi, ... — or a raw
+    mixing matrix) or the legacy ``gossip`` (a DenseGossip); give exactly
+    one.  engine="tree" is the reference pytree path (core/lead.py);
+    engine="flat" drives the fused flat-buffer engine (core/engines) —
     same algorithm, state blockified to the kernels' native layout.
     dither/interpret are forwarded to the flat engine (see its docstring);
     the default dither="match" keeps flat trajectories aligned with tree.
     engine_gossip selects the flat engine's communication stage: "dense"
-    (W @ decoded) or "ring" (encoded payload travels, decode at receiver).
+    (W @ decoded) or "neighbor" (sparse neighbor exchange over the
+    topology's table; "ring" is the uniform-ring-only alias).
     """
-    gossip: DenseGossip
-    compressor: Any
+    gossip: Optional[DenseGossip] = None
+    compressor: Any = None
     eta: Any = 0.1
     gamma: Any = 1.0
     alpha: Any = 0.5
@@ -77,24 +85,47 @@ class LEADSim:
     engine_gossip: str = "dense"
     dim: Optional[int] = None   # logical per-agent d; run() binds it for
                                 # engine="flat" (needed to unblockify states)
+    topology: Any = None        # Topology | matrix (alternative to gossip)
 
     def __post_init__(self):
         assert self.engine in ("tree", "flat"), self.engine
+        assert (self.gossip is None) != (self.topology is None), \
+            "give exactly one of gossip= (DenseGossip) or topology="
+        # fail at construction, not deep inside a trace: the tree path
+        # dereferences the compressor (vmap_compress / wire_bits); only the
+        # flat engine has a no-compressor (raw 32-bit payload) shortcut
+        if self.engine == "tree":
+            assert self.compressor is not None, (
+                "LEADSim(engine='tree') needs a compressor; pass "
+                "compression.Identity() for an uncompressed wire")
+
+    @property
+    def _topology(self):
+        if self.topology is not None:
+            return topology_mod.as_topology(self.topology)
+        return topology_mod.as_topology(self.gossip.W)
+
+    @property
+    def _gossip(self) -> DenseGossip:
+        """Dense mixing backend for the tree path (built off the topology
+        when only topology= was given)."""
+        return (self.gossip if self.gossip is not None
+                else DenseGossip(W=self._topology))
+
+    def _flat_engine(self, dim: int):
+        return engine_for(self._topology, self.compressor, dim,
+                          interpret=self.interpret, dither=self.dither,
+                          gossip=self.engine_gossip)
 
     @property
     def hyper(self):
         return LEADHyper(eta=self.eta, gamma=self.gamma, alpha=self.alpha)
 
-    def _flat_engine(self, dim: int):
-        return engine_for(self.gossip.W, self.compressor, dim,
-                          interpret=self.interpret, dither=self.dither,
-                          gossip=self.engine_gossip)
-
     def init(self, x0, g0, key):
         if self.engine == "flat":
             dim = self.dim if self.dim is not None else x0.shape[1]
             return self._flat_engine(dim).init(x0, g0, self.hyper)
-        return lead_mod.init(x0, g0, self.hyper, self.gossip.mix, h0=x0)
+        return lead_mod.init(x0, g0, self.hyper, self._gossip.mix, h0=x0)
 
     def step(self, state, g, key):
         new, _ = self.step_with_metrics(state, g, key)
@@ -123,7 +154,7 @@ class LEADSim:
             dim = self._dim_of(g)
             return self._flat_engine(dim).step_wire(state, g, key, self.hyper)
         new, cerr = lead_mod.step_with_metrics(state, g, key, self.hyper,
-                                               self.gossip.mix,
+                                               self._gossip.mix,
                                                vmap_compress(self.compressor))
         bits = jnp.asarray(self.compressor.wire_bits(g.shape[1]), jnp.float32)
         return new, cerr, bits
@@ -136,6 +167,21 @@ class LEADSim:
                 "states; pass it at construction or let run() bind it")
             return self._flat_engine(self.dim).unblockify(state.x)
         return state.x
+
+
+def with_topology(algo, topology):
+    """`algo` rebound to a new communication graph: flat engines and
+    LEADSim get the Topology itself, tree baselines a DenseGossip over its
+    W.  Scheduled Topologies resolve at k=0 (the scan traces one static
+    graph)."""
+    topo = topology_mod.as_topology(topology)(0)
+    if isinstance(algo, LEADSim):
+        return dataclasses.replace(algo, gossip=None, topology=topo)
+    if isinstance(algo, FlatEngineBase) or hasattr(algo, "topology"):
+        return dataclasses.replace(algo, topology=topo)
+    if hasattr(algo, "gossip"):
+        return dataclasses.replace(algo, gossip=DenseGossip(W=topo))
+    raise TypeError(f"cannot rebind topology on {type(algo).__name__}")
 
 
 class Trace(NamedTuple):
@@ -176,12 +222,19 @@ class Trace(NamedTuple):
 
 
 def run(algo, problem, x_star, *, iters=300, key=None, stochastic=False,
-        batch=64, noise_std=0.0, record_every=1) -> Trace:
+        batch=64, noise_std=0.0, record_every=1, topology=None) -> Trace:
     """Run `algo` on `problem`; returns metric traces (host numpy).
 
     stochastic=True draws minibatch gradients; noise_std>0 instead adds
     Gaussian noise to the full gradient — the bounded-variance oracle of
     Assumption 3 (minibatch quadratics have state-dependent variance).
+
+    topology= swaps the algorithm's communication graph before running: a
+    core/topology.Topology (or raw mixing matrix) replaces the engine's /
+    LEADSim's topology or a tree baseline's DenseGossip, so one configured
+    algorithm sweeps ring / torus / Erdős–Rényi without reconstruction.
+    A scheduled Topology (topo.schedule set) is resolved at k=0 — the scan
+    compiles one static graph; re-run per phase for time-varying gossip.
 
     The trace is computed by one jitted ``lax.scan``: metrics for every
     recorded iteration accumulate on device and cross to the host once at
@@ -192,6 +245,9 @@ def run(algo, problem, x_star, *, iters=300, key=None, stochastic=False,
     key = key if key is not None else jax.random.PRNGKey(0)
     n, d = problem.n, problem.d
     x0 = jnp.zeros((n, d))
+
+    if topology is not None:
+        algo = with_topology(algo, topology)
 
     if isinstance(algo, LEADSim) and algo.engine == "flat" and algo.dim is None:
         algo = dataclasses.replace(algo, dim=d)

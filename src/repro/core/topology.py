@@ -1,54 +1,272 @@
-"""Communication topologies and mixing matrices (Assumption 1).
+"""Communication topologies: first-class ``Topology`` objects (Assumption 1).
 
 A mixing matrix W must be symmetric, doubly stochastic, and primitive with
-eigenvalues -1 < lambda_n <= ... <= lambda_2 < lambda_1 = 1.
+eigenvalues -1 < lambda_n <= ... <= lambda_2 < lambda_1 = 1.  The paper's
+experiments use an 8-agent ring with uniform weight 1/3, but Assumption 1
+admits any such graph — and the builders below cover the common families.
 
-The paper's experiments use an 8-agent ring with uniform weight 1/3
-(self + two 1-hop neighbors).  We provide the common graph families plus the
-spectral quantities used by Theorem 1 / Corollary 1:
+Every builder (``ring``, ``chain``, ``star``, ``torus_2d``, ``erdos_renyi``,
+``fully_connected``, ``from_matrix``) returns a frozen :class:`Topology`
+carrying three views of the same graph, so every consumer reads the
+representation it is fastest with:
+
+  * ``W``          — the dense (n, n) mixing matrix (tree baselines, the
+                     flat engines' ``gossip="dense"`` matmul, spectral
+                     quantities).  ``np.asarray(topo)`` / ``jnp.asarray``
+                     yield it, so a Topology drops in wherever a matrix went.
+  * ``neighbors`` / ``weights`` — the padded neighbor-exchange table:
+                     ``neighbors[i, j]`` is agent i's j-th neighbor (padded
+                     with i itself), ``weights[i, 0]`` its self weight and
+                     ``weights[i, 1 + j]`` the weight on that neighbor
+                     (padded with 0).  Sparse O(n * deg * d) gossip
+                     (``gossip="neighbor"``) reads these.
+  * ``permute_rounds()`` — the same edge set decomposed into partial
+                     permutations (grouped by index shift ``(j - i) mod n``),
+                     the form ``jax.lax.ppermute`` consumes: the multi-host
+                     trainer derives its collective-permute schedule from
+                     this instead of assuming a ring.
+
+Spectral quantities of Theorem 1 / Corollary 1 are cached properties:
 
     beta    = lambda_max(I - W)
     kappa_g = lambda_max(I - W) / lambda_min^+(I - W)
+
+Time-varying gossip (randomized graphs a la CEDAS): a Topology is a
+*callable of the iteration counter* — ``topo(k)`` returns the graph for
+step k.  A plain Topology returns itself; ``topo.with_schedule(fn)``
+attaches a hook ``fn(k) -> Topology`` so drivers that step eagerly (or
+rebuild their engine per phase) can swap graphs mid-run.  The scan-compiled
+paths trace one static graph per compiled engine, so a scheduled Topology
+is resolved by the *driver*, not inside the scan.
+
+The module-level helpers (``beta``/``kappa_g``/``check_mixing``/...) accept
+either a Topology or a raw matrix.
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
+from typing import Any, Callable, List, Optional, Tuple
+
 import numpy as np
 
+_EDGE_TOL = 1e-12           # |W_ij| above this is a graph edge
 
-def ring(n: int) -> np.ndarray:
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Topology:
+    """Frozen graph object: dense mixing matrix + sparse neighbor table +
+    ppermute decomposition + Theorem-1 spectral metadata.
+
+    Build one with the module's builders or :func:`from_matrix`; fields are
+    host numpy (the engines close over them as constants — nothing here is
+    ever traced).  ``weights[:, 0]`` is the self weight; column ``1 + j``
+    pairs with ``neighbors[:, j]`` (self-padded index, 0.0-padded weight),
+    so a weighted gather over the table reproduces ``W @ x`` exactly up to
+    summation order.
+    """
+    name: str
+    W: np.ndarray                        # (n, n) float64 mixing matrix
+    neighbors: np.ndarray                # (n, deg_max) int32, self-padded
+    weights: np.ndarray                  # (n, deg_max + 1) float64, 0-padded
+    schedule: Optional[Callable[[int], "Topology"]] = None
+
+    # -- array-like compatibility ------------------------------------------
+    @property
+    def n(self) -> int:
+        return self.W.shape[0]
+
+    @property
+    def deg_max(self) -> int:
+        return self.neighbors.shape[1]
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return self.W.shape
+
+    def __array__(self, dtype=None):
+        """np.asarray(topo) / jnp.asarray(topo) yield the dense W, so a
+        Topology drops in wherever a mixing matrix was accepted."""
+        return self.W if dtype is None else self.W.astype(dtype)
+
+    def __repr__(self) -> str:
+        return f"{self.name}(n={self.n}, deg_max={self.deg_max})"
+
+    # -- time-varying hook --------------------------------------------------
+    def __call__(self, k: int) -> "Topology":
+        """The graph at iteration k: ``schedule(k)`` when a hook is
+        attached, else this (static) topology.  k is a host int — resolve
+        schedules in the driver, outside any jit trace."""
+        return self if self.schedule is None else self.schedule(int(k))
+
+    def with_schedule(self, fn: Callable[[int], "Topology"]) -> "Topology":
+        """A copy whose ``topo(k)`` resolves through ``fn`` (time-varying
+        gossip).  ``fn`` must return same-n Topologies."""
+        return dataclasses.replace(self, schedule=fn)
+
+    # -- spectral quantities (Theorem 1 / Corollary 1) ----------------------
+    @functools.cached_property
+    def _eig_i_minus_w(self) -> np.ndarray:
+        return np.linalg.eigvalsh(np.eye(self.n) - self.W)
+
+    @property
+    def beta(self) -> float:
+        """lambda_max(I - W)."""
+        return float(self._eig_i_minus_w[-1])
+
+    @property
+    def lambda_min_plus(self) -> float:
+        """Smallest nonzero eigenvalue of I - W."""
+        ev = self._eig_i_minus_w
+        pos = ev[ev > 1e-10]
+        return float(pos[0]) if len(pos) else 0.0
+
+    @property
+    def kappa_g(self) -> float:
+        lm = self.lambda_min_plus
+        return self.beta / lm if lm > 0 else float("inf")
+
+    @functools.cached_property
+    def spectral_gap(self) -> float:
+        if self.n <= 1:
+            return 1.0
+        ev = np.sort(1.0 - self._eig_i_minus_w)      # eigenvalues of W
+        return float(1.0 - max(abs(ev[0]), abs(ev[-2])))
+
+    # -- sparse-exchange views ----------------------------------------------
+    @functools.cached_property
+    def uniform_weights(self) -> Optional[Tuple[float, float]]:
+        """(w_self, w_neighbor) when every agent has the same self weight
+        and every edge the same weight (ring, torus, fully_connected) —
+        None for weight-heterogeneous graphs (metropolis on irregular
+        adjacency).  Uniform graphs admit the cheaper `w_self * own +
+        w_nb * sum(neighbor decodes)` mixing form."""
+        diag = np.diag(self.W)
+        off = self.W[(self.W > _EDGE_TOL)
+                     & ~np.eye(self.n, dtype=bool)]
+        if len(off) == 0:
+            return (1.0, 0.0)
+        if np.allclose(diag, diag[0]) and np.allclose(off, off[0]):
+            return (float(diag[0]), float(off[0]))
+        return None
+
+    @functools.cached_property
+    def _rounds(self) -> List[Tuple[Tuple[Tuple[int, int], ...], np.ndarray]]:
+        n = self.n
+        by_shift = {}
+        for i in range(n):
+            for j in range(n):
+                if i != j and self.W[i, j] > _EDGE_TOL:
+                    by_shift.setdefault((j - i) % n, []).append((i, j))
+        rounds = []
+        for s in sorted(by_shift, key=lambda s: (min(s, n - s), s)):
+            pairs = tuple(sorted(by_shift[s]))
+            rw = np.zeros(n)
+            for i, j in pairs:
+                rw[j] = self.W[j, i]
+            rounds.append((pairs, rw))
+        return rounds
+
+    def permute_rounds(self):
+        """The directed edge set as a list of ``(pairs, recv_weight)``
+        communication rounds, each a *partial permutation* (grouped by the
+        index shift ``(j - i) mod n``, so sources and destinations within a
+        round are unique — exactly what ``jax.lax.ppermute`` requires).
+        ``recv_weight[j] = W[j, src]`` for the agent j receives from this
+        round, 0.0 where it receives nothing (ppermute delivers zeros
+        there).  Rounds are ordered by hop distance with the +1 shift
+        first, so the ring decomposes into the classic fwd/bwd pair and
+        the trainer's uniform-ring arithmetic stays bit-identical to the
+        pre-Topology ppermute path."""
+        return self._rounds
+
+    def validate(self, atol: float = 1e-8) -> "Topology":
+        """check_mixing + neighbor-table/W consistency; returns self."""
+        check_mixing(self.W, atol=atol)
+        recon = np.zeros_like(self.W)
+        recon[np.arange(self.n), np.arange(self.n)] = self.weights[:, 0]
+        for j in range(self.deg_max):
+            recon[np.arange(self.n), self.neighbors[:, j]] += \
+                self.weights[:, 1 + j]
+        assert np.allclose(recon, self.W, atol=atol), \
+            "neighbor table does not reconstruct W"
+        return self
+
+
+def _table_from_w(W: np.ndarray):
+    """Padded (neighbors, weights) table off the dense matrix's sparsity."""
+    n = W.shape[0]
+    nbr_lists = [np.nonzero((W[i] > _EDGE_TOL)
+                            & (np.arange(n) != i))[0] for i in range(n)]
+    deg_max = max((len(l) for l in nbr_lists), default=0)
+    neighbors = np.empty((n, deg_max), np.int32)
+    weights = np.zeros((n, deg_max + 1))
+    weights[:, 0] = np.diag(W)
+    for i, nbrs in enumerate(nbr_lists):
+        neighbors[i, :len(nbrs)] = nbrs
+        neighbors[i, len(nbrs):] = i            # self-padding (weight 0)
+        weights[i, 1:1 + len(nbrs)] = W[i, nbrs]
+    return neighbors, weights
+
+
+def _build(name: str, W: np.ndarray) -> Topology:
+    W = np.asarray(W, np.float64)
+    neighbors, weights = _table_from_w(W)
+    return Topology(name=name, W=W, neighbors=neighbors, weights=weights)
+
+
+def from_matrix(W, name: str = "matrix", validate: bool = True) -> Topology:
+    """Topology from an explicit mixing matrix (Assumption 1 checked unless
+    ``validate=False``); the neighbor table is derived from W's sparsity."""
+    topo = _build(name, np.asarray(W, np.float64))
+    return topo.validate() if validate else topo
+
+
+def as_topology(obj: Any, name: str = "matrix") -> Topology:
+    """Normalize Topology | array-like to a Topology (the engines' and
+    drivers' accept-anything front door)."""
+    if isinstance(obj, Topology):
+        return obj
+    return from_matrix(obj, name=name)
+
+
+# -- graph families ----------------------------------------------------------
+
+def ring(n: int) -> Topology:
     """Ring with uniform 1/3 weights (paper §5 setup).  n=1,2 degenerate."""
     if n == 1:
-        return np.ones((1, 1))
+        return _build("ring", np.ones((1, 1)))
     if n == 2:
-        return np.full((2, 2), 0.5)
+        return _build("ring", np.full((2, 2), 0.5))
     W = np.zeros((n, n))
     for i in range(n):
         W[i, i] = 1.0 / 3.0
         W[i, (i + 1) % n] = 1.0 / 3.0
         W[i, (i - 1) % n] = 1.0 / 3.0
-    return W
+    return _build("ring", W)
 
 
-def chain(n: int) -> np.ndarray:
+def chain(n: int) -> Topology:
     """Path graph with Metropolis–Hastings weights."""
     A = np.zeros((n, n), dtype=bool)
     for i in range(n - 1):
         A[i, i + 1] = A[i + 1, i] = True
-    return metropolis(A)
+    return _build("chain", metropolis_matrix(A))
 
 
-def fully_connected(n: int) -> np.ndarray:
-    return np.full((n, n), 1.0 / n)
+def fully_connected(n: int) -> Topology:
+    return _build("full", np.full((n, n), 1.0 / n))
 
 
-def star(n: int) -> np.ndarray:
+def star(n: int) -> Topology:
     A = np.zeros((n, n), dtype=bool)
     A[0, 1:] = A[1:, 0] = True
-    return metropolis(A)
+    return _build("star", metropolis_matrix(A))
 
 
-def torus_2d(rows: int, cols: int) -> np.ndarray:
-    """2-D torus; uniform weight over the 4 neighbors + self."""
+def torus_2d(rows: int, cols: int) -> Topology:
+    """2-D torus; uniform weight over the 4 neighbors + self (length-2
+    sides collapse the two wrap-around edges onto one neighbor)."""
     n = rows * cols
     W = np.zeros((n, n))
     w = 1.0 / 5.0
@@ -59,23 +277,30 @@ def torus_2d(rows: int, cols: int) -> np.ndarray:
             for dr, dc in ((1, 0), (-1, 0), (0, 1), (0, -1)):
                 j = ((r + dr) % rows) * cols + (c + dc) % cols
                 W[i, j] += w
-    return W
+    return _build(f"torus_{rows}x{cols}", W)
 
 
-def erdos_renyi(n: int, p: float = 0.5, seed: int = 0) -> np.ndarray:
-    rng = np.random.default_rng(seed)
-    while True:
-        A = rng.random((n, n)) < p
-        A = np.triu(A, 1)
-        A = A | A.T
-        # ensure connectivity via a ring backbone
-        for i in range(n):
-            A[i, (i + 1) % n] = A[(i + 1) % n, i] = True
-        return metropolis(A)
+def erdos_renyi(n: int, p: float = 0.5, seed: int = 0) -> Topology:
+    """G(n, p) with a ring backbone (guarantees connectivity, so no retry
+    loop) and Metropolis–Hastings weights.  The edge draw hashes
+    (seed, edge index) through numpy's SeedSequence — a fixed-spec mixing
+    function, so the same seed yields the same graph on every numpy
+    version (Generator method streams carry no such guarantee)."""
+    bits = np.random.SeedSequence(seed).generate_state(n * n, np.uint32)
+    u = (bits >> 8).astype(np.float64) * (1.0 / (1 << 24))
+    A = (u < p).reshape(n, n)
+    A = np.triu(A, 1)
+    A = A | A.T
+    # connectivity via a ring backbone
+    for i in range(n):
+        A[i, (i + 1) % n] = A[(i + 1) % n, i] = True
+    return _build(f"er_p{p:g}_s{seed}", metropolis_matrix(A))
 
 
-def metropolis(adj: np.ndarray) -> np.ndarray:
-    """Metropolis–Hastings weights for an adjacency matrix (symmetric, d.s.)."""
+def metropolis_matrix(adj: np.ndarray) -> np.ndarray:
+    """Metropolis–Hastings weight *matrix* for an adjacency (symmetric,
+    doubly stochastic) — the raw-ndarray core of :func:`metropolis`."""
+    adj = np.asarray(adj)
     n = adj.shape[0]
     deg = adj.sum(axis=1)
     W = np.zeros((n, n))
@@ -87,47 +312,66 @@ def metropolis(adj: np.ndarray) -> np.ndarray:
     return W
 
 
+def metropolis(adj: np.ndarray) -> Topology:
+    """Topology with Metropolis–Hastings weights for an adjacency matrix."""
+    return _build("metropolis", metropolis_matrix(adj))
+
+
+def _near_square(n: int) -> Tuple[int, int]:
+    """rows x cols = n with rows the largest divisor <= sqrt(n)."""
+    r = int(np.sqrt(n))
+    while n % r:
+        r -= 1
+    return r, n // r
+
+
 TOPOLOGIES = {
     "ring": ring,
     "chain": chain,
     "full": fully_connected,
     "star": star,
+    "torus": lambda n: torus_2d(*_near_square(n)),
+    "erdos_renyi": erdos_renyi,
 }
 
 
-def make_mixing(name: str, n: int) -> np.ndarray:
+def make_mixing(name: str, n: int) -> Topology:
     if name not in TOPOLOGIES:
         raise KeyError(f"unknown topology {name!r}; options: {sorted(TOPOLOGIES)}")
     return TOPOLOGIES[name](n)
 
 
-# -- spectral quantities (Theorem 1 / Corollary 1) ---------------------------
+# -- spectral quantities on raw matrices or Topologies -----------------------
+# thin wrappers over the (single-source, cached) Topology properties; a raw
+# matrix is wrapped without Assumption-1 validation, matching the helpers'
+# historical accept-any-symmetric-matrix contract
 
-def spectral_gap(W: np.ndarray) -> float:
-    ev = np.sort(np.linalg.eigvalsh(W))
-    return float(1.0 - max(abs(ev[0]), abs(ev[-2]))) if len(ev) > 1 else 1.0
+def _topo_of(W) -> Topology:
+    return W if isinstance(W, Topology) else _build("matrix", np.asarray(W))
 
 
-def beta(W: np.ndarray) -> float:
+def spectral_gap(W) -> float:
+    return _topo_of(W).spectral_gap
+
+
+def beta(W) -> float:
     """lambda_max(I - W)."""
-    ev = np.linalg.eigvalsh(np.eye(W.shape[0]) - W)
-    return float(ev[-1])
+    return _topo_of(W).beta
 
 
-def lambda_min_plus(W: np.ndarray) -> float:
+def lambda_min_plus(W) -> float:
     """Smallest nonzero eigenvalue of I - W."""
-    ev = np.linalg.eigvalsh(np.eye(W.shape[0]) - W)
-    pos = ev[ev > 1e-10]
-    return float(pos[0]) if len(pos) else 0.0
+    return _topo_of(W).lambda_min_plus
 
 
-def kappa_g(W: np.ndarray) -> float:
-    lm = lambda_min_plus(W)
-    return beta(W) / lm if lm > 0 else float("inf")
+def kappa_g(W) -> float:
+    return _topo_of(W).kappa_g
 
 
-def check_mixing(W: np.ndarray, atol: float = 1e-8) -> None:
-    """Validate Assumption 1; raises AssertionError on violation."""
+def check_mixing(W, atol: float = 1e-8) -> None:
+    """Validate Assumption 1; raises AssertionError on violation.  Accepts
+    a Topology or a raw matrix."""
+    W = np.asarray(W)
     n = W.shape[0]
     assert W.shape == (n, n), "W must be square"
     assert np.allclose(W, W.T, atol=atol), "W must be symmetric"

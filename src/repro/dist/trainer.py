@@ -21,17 +21,22 @@ slice; see dist/sharding.py).  The engine state fields beyond the iterate
 engine's ``consensus_init`` spec — at a consensus start W x = x, so no init
 communication is needed.  Gradients come from a vmapped AD pass over the
 stacked params (GSPMD parallelizes it along the agent axis); the
-inter-agent communication is a fully-manual shard_map over ALL mesh axes in
-which core/gossip.RingGossip exchanges with the two ring neighbors via
-``jax.lax.ppermute`` — the only collective of an iteration, and the reason
-the lowering contains collective-permute ops.
+inter-agent communication is a fully-manual shard_map over ALL mesh axes
+whose ``jax.lax.ppermute`` schedule is derived from the run's
+``core/topology.Topology`` (``DistConfig.topology``: ring by default,
+torus_2d / erdos_renyi / any Assumption-1 graph): each
+``Topology.permute_rounds()`` entry is one partial permutation of the
+flattened agent axes, exchanged and decoded at the receiver — the only
+collectives of an iteration, and the reason the lowering contains
+collective-permute ops.
 
 Codes on the wire: compressed algorithms encode each leaf's message with
 the Compressor flat protocol (``encode_blocks`` / ``decode_blocks``,
 core/compression.py) *before* the shard_map; inside it only the payload
 (int8 code planes + per-block f32 scales for the quantizer; kept values for
-RandK/TopK) crosses agents — ``RingGossip.mix_encoded`` decodes at the
-receiver.  Exact algorithms ship the raw f32 leaf (d * 32 bits).  With
+RandK/TopK) crosses agents — each gossip round's ppermute output is
+decoded at the receiver.  Exact algorithms ship the raw f32 leaf (d * 32
+bits).  With
 ``wire_pack=True`` quantizer codes additionally travel as dense uint32
 words (kernels.ops.pack_codes) — the byte-accurate ICI payload.  Each
 step's metrics include ``bits_per_agent``, the actual payload bits summed
@@ -48,9 +53,10 @@ re-schedules the gradient pass as an accumulating scan, ``compute_dtype`` /
 
 Invariants mirror core/lead.py: 1^T D = 0 to roundoff for any compression
 error (tests/dist_worker.py asserts it after 20 distributed steps), and the
-ring mixing equals the dense ``topology.ring`` matrix multiply
-(dist_worker's registry_equivalence pins LEAD and NIDS against hand-rolled
-dense-W references step for step).
+permute-round mixing equals the dense ``topology.W`` matrix multiply for
+every graph (dist_worker's registry_equivalence pins LEAD and NIDS against
+hand-rolled dense-W references step for step; topology_multihost pins NIDS
+on torus_2d and erdos_renyi the same way).
 """
 from __future__ import annotations
 
@@ -68,7 +74,6 @@ from repro.core import topology
 from repro.core.compression import QuantizePNorm
 from repro.core.engines import ENGINES, engine_for, is_exact
 from repro.core.engines.base import _LAYOUT_FIELDS
-from repro.core.gossip import EncodedRingGossip, RingGossip
 from repro.core.lead import LEADHyper, _at
 from repro.dist import sharding as shr
 from repro.kernels.ops import pack_codes, unpack_codes
@@ -89,6 +94,13 @@ class DistConfig:
     blockwise p=inf quantizer QuantizePNorm(bits, block) for compressed
     algorithms, nothing for exact ones.
 
+    topology selects the communication graph the agents gossip over: None
+    -> the paper's uniform ring; a core/topology builder name ("ring",
+    "torus", "erdos_renyi", "chain", "star", "full"); a Topology instance
+    (n must equal the mesh's agent count); or a callable n_agents ->
+    Topology.  The trainer derives its shard_map collective-permute
+    schedule from Topology.permute_rounds() — no ring assumption.
+
     hyper sets the algorithm hyper-parameters; every value is a Schedule
     (float or callable of the step counter).  Three forms:
       * None (default) — the engine's own paper defaults, with the primal
@@ -107,6 +119,8 @@ class DistConfig:
     bits: int = 2                        # default quantizer bit-width
     block: int = 512                     # quantization block (paper: 512)
     compressor: Any = None               # explicit Compressor override
+    topology: Any = None                 # None -> ring | name | Topology |
+                                         # callable n_agents -> Topology
     hyper: Any = None                    # None | dict | LEADHyper (see above)
     optimizer: Any = SGD()
     seq_parallel: bool = False           # shard seq dim over tp between blocks
@@ -138,12 +152,35 @@ def _hyper_dict(dc: DistConfig) -> Dict[str, Any]:
     return dict(h)
 
 
+def topology_of(dc: DistConfig, n_agents: int) -> topology.Topology:
+    """Resolve DistConfig.topology for an n_agents mesh (see the DistConfig
+    docstring for the accepted forms).  Scheduled Topologies resolve at
+    k=0 — the trainer compiles one static gossip schedule."""
+    t = dc.topology
+    if t is None:
+        return topology.ring(n_agents)
+    if isinstance(t, str):
+        topo = topology.make_mixing(t, n_agents)
+    elif isinstance(t, topology.Topology):
+        topo = t
+    elif callable(t):
+        topo = topology.as_topology(t(n_agents))
+    else:
+        topo = topology.as_topology(t)
+    topo = topo(0)                       # resolve a schedule hook uniformly
+    assert topo.n == n_agents, (
+        f"DistConfig.topology has n={topo.n} agents but the mesh's agent "
+        f"axes hold {n_agents}")
+    return topo
+
+
 def engine_of(dc: DistConfig, n_agents: int):
-    """Resolve DistConfig through the engine_for registry for an A-agent
-    ring (None for the centralized allreduce reference).  The returned
-    engine supplies the trainer's update math (message/apply_stage) and its
-    resolved (algorithm, compressor, gossip) triple — print it with
-    core.engines.describe so runs and docs can't silently diverge.
+    """Resolve DistConfig through the engine_for registry over the config's
+    A-agent topology (None for the centralized allreduce reference).  The
+    returned engine supplies the trainer's update math (message/apply_stage)
+    and its resolved (algorithm, compressor, gossip, topology) tuple —
+    print it with core.engines.describe so runs and docs can't silently
+    diverge.
 
     Hypers the engine does not declare raise instead of being silently
     dropped or silently overriding the engine's paper defaults: NIDS for
@@ -170,11 +207,11 @@ def engine_of(dc: DistConfig, n_agents: int):
     comp = dc.compressor
     if comp is None and not is_exact(dc.algorithm):
         comp = QuantizePNorm(bits=dc.bits, block=dc.block)
-    # host numpy: engine_of may run inside a jitted init trace, where a
-    # jnp constant would become a tracer and break the ring-W validation
-    W = topology.ring(n_agents)
-    return engine_for(W, comp, dim=dc.block, interpret=dc.interpret,
-                      gossip="ring", algorithm=dc.algorithm, **hyp)
+    # host-numpy Topology: engine_of may run inside a jitted init trace,
+    # where a jnp constant would become a tracer and break validation
+    topo = topology_of(dc, n_agents)
+    return engine_for(topo, comp, dim=dc.block, interpret=dc.interpret,
+                      gossip="neighbor", algorithm=dc.algorithm, **hyp)
 
 
 def _hyper_fields_of(algorithm: str) -> set:
@@ -271,15 +308,42 @@ def make_train_step(cfg, mesh, prof: shr.ShardingProfile, dc: DistConfig):
     A = n_agents_of(mesh, prof)
     eng = engine_of(dc, A)
     comp = None if eng is None else eng.compressor
-    ring = RingGossip(axes=prof.agent_axes)
-    # (w_self, w_neighbor) read off the validated topology.ring(A) — 1/3 for
-    # A >= 3, 1/2 on the two-agent ring (RingGossip's fixed defaults only
-    # cover the A >= 3 case)
-    rw = EncodedRingGossip.weights_from(topology.ring(A))
-    w_self, w_neighbor = rw.w_self, rw.w_neighbor
+    # the engine already holds the resolved graph — re-resolving through
+    # topology_of would hand a non-deterministic DistConfig.topology
+    # callable a SECOND, different graph than the one engine_of validated
+    topo = eng.topology if eng is not None else topology_of(dc, A)
+    # the shard_map gossip schedule, derived from the topology's neighbor
+    # structure: each round is a partial permutation of the flattened agent
+    # axes (jax.lax.ppermute's native form) plus the per-receiver weight
+    rounds = topo.permute_rounds()
+    # the factored uniform form is valid only when every round is a FULL
+    # permutation (every agent receives every round — ring, fully
+    # connected): on partial rounds it would add the decoded ppermute
+    # zero-fill at full weight, silently relying on decode(0) == 0.
+    # Graphs with partial rounds (torus with collapsed sides, ER) take the
+    # per-receiver weighted branch, where rw[idx] == 0 masks the fill.
+    uniform = (topo.uniform_weights
+               if all(len(pairs) == A for pairs, _ in rounds) else None)
+    self_w = topo.weights[:, 0].copy()   # per-agent self weight (non-uniform)
+    axis_name = (prof.agent_axes if len(prof.agent_axes) > 1
+                 else prof.agent_axes[0])
     spec = P(prof.agent_axes)            # leading agent axis; rest replicated
     smap = functools.partial(compat.shard_map, mesh=mesh,
                              axis_names=set(mesh.axis_names), check_vma=False)
+
+    def _pperm(tree, pairs):
+        """One gossip round: ppermute every payload leaf along the
+        flattened agent axes (this IS the inter-agent wire traffic)."""
+        return tree_map(
+            lambda x: jax.lax.ppermute(x, axis_name, list(pairs)), tree)
+
+    def _agent_index():
+        """Flat agent id on the row-major flattened agent axes (matches the
+        ppermute pair numbering)."""
+        idx = jax.lax.axis_index(prof.agent_axes[0])
+        for a in prof.agent_axes[1:]:
+            idx = idx * compat.axis_size(a) + jax.lax.axis_index(a)
+        return idx
 
     # -- gradients ----------------------------------------------------------
     def loss_of(p, b):
@@ -315,10 +379,23 @@ def make_train_step(cfg, mesh, prof: shr.ShardingProfile, dc: DistConfig):
 
     def gossip_payloads(payloads):
         """Per leaf: (q, W q) with q the receiver-decoded own payload and
-        W q its ring mix — only the payload crosses agents (quantizer codes
-        packed into uint32 words when wire_pack).  Exact algorithms ship
-        {"values": raw_leaf} with identity decode — the uncompressed
-        ppermute exchange.
+        W q its neighbor-exchange mix over `topo` — only the payload crosses
+        agents (quantizer codes packed into uint32 words when wire_pack).
+        Exact algorithms ship {"values": raw_leaf} with identity decode —
+        the uncompressed ppermute exchange.
+
+        The collective schedule is Topology.permute_rounds(): one ppermute
+        per partial permutation of directed edges, decoded at the receiver
+        and combined with that round's receiver weight.  Uniform-weight
+        graphs whose rounds are all FULL permutations (ring, fully
+        connected) take the factored `w_self * own + w_nb * sum(rounds)`
+        form — for the ring (rounds = the classic fwd/bwd pair) this is
+        expression-for-expression the pre-Topology ppermute path, so its
+        trajectories are bit-identical.  Everything else (metropolis
+        weights, or partial rounds like the torus's wrap edges) looks its
+        per-receiver round weight up by jax.lax.axis_index — a receiver
+        with no edge in a round gets ppermute's zero fill, masked by
+        rw[idx] == 0 regardless of what decode makes of the fill.
 
         BOTH q and wq are decoded inside the one shard_map, from the same
         materialized payload operand.  Decoding q from a second copy of the
@@ -345,21 +422,21 @@ def make_train_step(cfg, mesh, prof: shr.ShardingProfile, dc: DistConfig):
                     dec = (comp.decode_blocks if comp is not None
                            else (lambda w: w["values"]))
                 own = dec(wire)
-                # weights come from topology.ring(A), matching the W that
-                # engine_of validated the engine against; degenerate rings
-                # mirror EncodedRingGossip.mix_encoded — A == 2 has ONE
-                # neighbor (both shifts deliver the same agent; summing
-                # them with the A >= 3 weights would mix (1/3, 2/3) instead
-                # of ring(2)'s (1/2, 1/2)), A == 1 has none
-                if A == 1:
+                if not rounds:                       # single agent: W = [1]
                     wq = own
-                elif A == 2:
-                    right = dec(ring.shift(wire, +1))
-                    wq = w_self * own + w_neighbor * right
+                elif uniform is not None:
+                    w_self, w_nb = uniform
+                    acc = None
+                    for pairs, _ in rounds:
+                        recv = dec(_pperm(wire, pairs))
+                        acc = recv if acc is None else acc + recv
+                    wq = w_self * own + w_nb * acc
                 else:
-                    right = dec(ring.shift(wire, +1))
-                    left = dec(ring.shift(wire, -1))
-                    wq = w_self * own + w_neighbor * (right + left)
+                    idx = _agent_index()
+                    wq = jnp.asarray(self_w, own.dtype)[idx] * own
+                    for pairs, rw in rounds:
+                        recv = dec(_pperm(wire, pairs))
+                        wq = wq + jnp.asarray(rw, own.dtype)[idx] * recv
                 outs.append((own, wq))
             return outs
         return smap(body, in_specs=(spec,), out_specs=spec)(payloads)

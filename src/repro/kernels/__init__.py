@@ -47,11 +47,12 @@ Encoded-payload interface (codes on the wire)
 Every compressor exposes a flat wire path over the same blocked layout
 (core/compression.py): ``encode_blocks(key, (n, nb, block), dim) ->
 (payload, bits)`` / ``decode_blocks(payload)``.  The payload is the ONLY
-thing that may cross agents — the gossip stages (core/gossip.py
-RingGossip.mix_encoded on mesh axes, EncodedRingGossip on the flat agent
-axis) permute payload leaves and decode at the receiver, and `bits` is the
-per-agent wire cost of the actual payload.  The kernels here are the fused
-producers of those payloads:
+thing that may cross agents — the gossip stages (dist/trainer.py's
+per-round ppermute exchange on mesh axes, core/gossip.py
+EncodedNeighborGossip on the flat agent axis) move payload leaves between
+agents and decode at the receiver, and `bits` is the per-agent wire cost
+of the actual payload.  The kernels here are the fused producers of those
+payloads:
 
     QuantizePNorm(p=inf)  LEAD's fused diff+encode is
                           lead_update.lead_diff_encode; the baseline engines

@@ -27,6 +27,7 @@ from jax.sharding import NamedSharding
 from repro import checkpoint as ckpt
 from repro.compat import AxisType, make_mesh, set_mesh
 from repro.configs.registry import get_config
+from repro.core import topology
 from repro.core.engines import ENGINES, describe
 from repro.data.synthetic import LMStreamConfig, lm_batch, stub_memory
 from repro.dist import sharding as shr
@@ -54,6 +55,11 @@ def main():
                     choices=sorted(set(ENGINES)) + ["allreduce"],
                     help="any core/engines registry algorithm, or the "
                          "centralized allreduce reference")
+    ap.add_argument("--topology", default="ring",
+                    choices=sorted(topology.TOPOLOGIES),
+                    help="communication graph over the agents; the gossip "
+                         "ppermute schedule is derived from its neighbor "
+                         "structure (core/topology.py)")
     ap.add_argument("--bits", type=int, default=2)
     ap.add_argument("--eta", type=float, default=0.03)
     ap.add_argument("--optimizer", default="sgd",
@@ -80,7 +86,7 @@ def main():
     # engine's paper defaults (gamma/alpha for LEAD, gamma for the
     # compressed baselines, nothing extra for the exact ones)
     dc = DistConfig(algorithm=args.algorithm, bits=args.bits,
-                    hyper={"eta": args.eta},
+                    topology=args.topology, hyper={"eta": args.eta},
                     optimizer=make_optimizer(args.optimizer))
     A = n_agents_of(mesh, prof)
     print(f"mesh {dict(zip(mesh.axis_names, mesh.devices.shape))} | "
@@ -94,7 +100,7 @@ def main():
               "pmean over agents — not a decentralized engine)")
     else:
         print(f"registry: {describe(eng)} "
-              f"(ppermute ring over mesh axes {prof.agent_axes})")
+              f"(ppermute rounds over mesh axes {prof.agent_axes})")
 
     key = jax.random.PRNGKey(0)
     state_sds = jax.eval_shape(lambda k: init_train_state(cfg, mesh, prof, dc, k), key)

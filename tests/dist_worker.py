@@ -54,13 +54,13 @@ from repro.utils.tree import tree_map
 
 
 def _setup(algorithm, mesh_shape=(4, 2), axes=("data", "model"),
-           n_agents=4):
+           n_agents=4, **dc_kwargs):
     mesh = make_mesh(mesh_shape, axes,
                          axis_types=(AxisType.Auto,) * len(axes))
     cfg = get_config("granite-3-2b").reduced()
     prof = shr.make_profile(cfg, mesh.axis_names)
     shr.set_mesh_for_rules(mesh)
-    dc = DistConfig(algorithm=algorithm)
+    dc = DistConfig(algorithm=algorithm, **dc_kwargs)
     key = jax.random.PRNGKey(0)
     state_sds = jax.eval_shape(lambda k: init_train_state(cfg, mesh, prof, dc, k), key)
     shardings = state_shardings(cfg, mesh, prof, state_sds)
@@ -399,6 +399,74 @@ def case_baselines_multihost():
     assert err < 1e-4 * max(scale, 1.0), err
 
 
+def case_topology_multihost():
+    """The Topology API on the multi-host path: the trainer's ppermute
+    schedule comes from Topology.permute_rounds(), so non-ring graphs run
+    multi-device.  NIDS (deterministic) is pinned against a dense-W host
+    reference on torus_2d(2, 2) (uniform weights, 3 permute rounds) and on
+    an irregular erdos_renyi graph (heterogeneous metropolis weights — the
+    per-receiver axis_index weight lookup); CHOCO then trains on the torus
+    with compressed payloads."""
+    from repro.dist.trainer import topology_of
+
+    er4 = topology.erdos_renyi(4, p=0.5, seed=1)
+    assert er4.uniform_weights is None     # irregular: exercises the
+    #                                        per-receiver weight path
+    for topo_cfg in ("torus", er4):
+        mesh, cfg, prof, dc, state, batch, key, ds = _setup(
+            "nids", topology=topo_cfg)
+        topo = topology_of(dc, 4)
+        W = jnp.asarray(topo.W, jnp.float32)
+        step = jax.jit(make_train_step(cfg, mesh, prof, dc))
+
+        def mixT(t, W=W):
+            return tree_map(lambda l: jnp.tensordot(W, l, axes=([1], [0])), t)
+
+        grad_fn = jax.vmap(jax.grad(lambda p, b: tfm.loss_fn(p, cfg, b)[0]))
+        eta = engine_of(dc, 4).eta
+        x_ref = jax.device_get(state.params)
+        d_ref = jax.device_get(state.algo["d"])
+        with set_mesh(mesh):
+            for i in range(3):
+                g = jax.device_get(grad_fn(jax.device_put(x_ref), batch))
+                y = tree_map(lambda xl, gl, dl: xl - eta * gl - eta * dl,
+                             x_ref, g, d_ref)
+                d_ref = tree_map(
+                    lambda dl, yl, myl: dl + (yl - myl) / (2 * eta),
+                    d_ref, y, mixT(y))
+                x_ref = tree_map(lambda xl, gl, dl: xl - eta * gl - eta * dl,
+                                 x_ref, g, d_ref)
+                state, _ = step(state, batch, jax.random.fold_in(key, i))
+        err = max(float(jnp.max(jnp.abs(a - b)))
+                  for a, b in zip(jax.tree_util.tree_leaves(
+                                      jax.device_get(state.params)),
+                                  jax.tree_util.tree_leaves(x_ref)))
+        scale = max(float(jnp.max(jnp.abs(a)))
+                    for a in jax.tree_util.tree_leaves(x_ref))
+        print("TOPOLOGY_NIDS_ERR", topo.name, err, "SCALE", scale)
+        assert err < 1e-4 * max(scale, 1.0), (topo.name, err)
+
+    # compressed algorithm on the torus: codes on the wire, loss down
+    mesh, cfg, prof, dc, state, batch, key, ds = _setup(
+        "choco", topology="torus")
+    dc = dataclasses.replace(dc, hyper={"eta": 0.03, "gamma": 0.3})
+    state = init_train_state(cfg, mesh, prof, dc, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, mesh, prof, dc))
+    loss_fn_v = jax.jit(jax.vmap(lambda p, b: tfm.loss_fn(p, cfg, b)[0]))
+    with set_mesh(mesh):
+        l0 = float(jnp.mean(loss_fn_v(state.params, batch)))
+        for i in range(10):
+            b = jax.device_put(lm_batch(ds, i),
+                               NamedSharding(mesh, shr.train_batch_spec(prof)))
+            state, metrics = step(state, b, jax.random.fold_in(key, i))
+        l1 = float(jnp.mean(loss_fn_v(state.params, batch)))
+    bits = float(metrics["bits_per_agent"])
+    print("CHOCO_TORUS", l0, "->", l1, "bits/agent/step", bits)
+    assert np.isfinite(l1) and l1 < l0, (l0, l1)
+    raw = 32 * sum(l[0].size for l in jax.tree_util.tree_leaves(state.params))
+    assert 0 < bits < 0.25 * raw
+
+
 if __name__ == "__main__":
     case = sys.argv[1]
     {"nids_equivalence": case_nids_equivalence,
@@ -406,5 +474,6 @@ if __name__ == "__main__":
      "baselines_multihost": case_baselines_multihost,
      "lead_train": case_lead_train,
      "dryrun_multipod": case_dryrun_multipod,
-     "perf_variants": case_perf_variants}[case]()
+     "perf_variants": case_perf_variants,
+     "topology_multihost": case_topology_multihost}[case]()
     print("PASS", case)

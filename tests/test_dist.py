@@ -97,3 +97,12 @@ def test_multipod_mesh_lowers_and_compiles():
 def test_perf_variant_knobs_train_correctly():
     """seq_parallel + wire_pack + microbatches + bf16 keep LEAD correct."""
     _run("perf_variants")
+
+
+@pytest.mark.slow
+def test_topology_api_runs_multihost():
+    """Non-ring Topologies through DistConfig.topology: the ppermute
+    schedule derives from Topology.permute_rounds(), NIDS matches dense-W
+    host references on torus_2d and an irregular Erdős–Rényi graph, and
+    CHOCO trains compressed on the torus."""
+    _run("topology_multihost")

@@ -48,6 +48,33 @@ def test_readme_engine_matrix_matches_registry():
         assert _CANONICAL[ENGINES[alias]] in documented, alias
 
 
+def test_readme_topology_axis_matches_module():
+    """The topology table (the engine_for matrix's third dispatch axis)
+    must list real core/topology builders, each returning a validating
+    Topology; and the documented gossip="neighbor" / "ring" modes must be
+    the ones the engine substrate accepts."""
+    from repro.core import topology as tp
+
+    rows = re.findall(r"^\| `([a-z_0-9]+)\(", README.read_text(), re.M)
+    assert rows, "README must contain the topology builders table"
+    sample_args = {"ring": (8,), "chain": (6,), "star": (5,),
+                   "fully_connected": (4,), "torus_2d": (2, 4),
+                   "erdos_renyi": (8,), "from_matrix": (tp.ring(5).W,)}
+    assert set(rows) == set(sample_args), (
+        f"documented {sorted(set(rows))} != expected builder set")
+    for name in rows:
+        fn = getattr(tp, name)
+        topo = fn(*sample_args[name])
+        assert isinstance(topo, tp.Topology), name
+        topo.validate()
+    # the documented gossip modes are exactly the substrate's
+    from repro.core.engines import engine_for
+    for mode in ("dense", "neighbor", "ring"):
+        engine_for(tp.ring(4), None, 16, algorithm="dgd", gossip=mode)
+    with pytest.raises(AssertionError):
+        engine_for(tp.ring(4), None, 16, algorithm="dgd", gossip="mesh")
+
+
 def _python_blocks(text):
     return re.findall(r"```python\n(.*?)```", text, re.S)
 

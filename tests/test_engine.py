@@ -391,8 +391,7 @@ def test_record_every_gated_metrics_match_dense_trace():
 def test_blockify_roundtrip_and_padding_fixed_point():
     """unblockify(blockify(x)) == x, and padded tail rows stay exactly zero
     through a step (the layout-contract fixed point)."""
-    W = jnp.asarray(topology.ring(4))
-    eng = FlatLEADEngine(W=W, dim=700,
+    eng = FlatLEADEngine(topology=topology.ring(4), dim=700,
                          compressor=QuantizePNorm(bits=2))  # 700 = 512 + 188
     key = jax.random.PRNGKey(3)
     x = jax.random.normal(key, (4, 700))

@@ -1,0 +1,246 @@
+"""Topology-first gossip across the engine family.
+
+The acceptance contract of the Topology API redesign:
+
+  * neighbor-exchange vs dense per-step equivalence — for every registry
+    engine, one step under ``gossip="neighbor"`` (sparse gather over the
+    topology's padded table) matches the same step under ``gossip="dense"``
+    (W @ q matmul) to summation-order tolerance, on ring, torus_2d, and
+    erdos_renyi alike.  The encode stage is identical (same key, same
+    dither), so only the mixing's float association separates the two.
+  * every registry engine *steps* on torus_2d(2, 4) — the quick-lane smoke
+    for the non-ring substrate (torus 2x4 also has heterogeneous weights:
+    the collapsed wrap-around edge carries 2/5 where the column edges carry
+    1/5, so the weighted gather path is exercised, not just uniform rings).
+  * simulator integration: run(..., topology=...) rebinds the graph on flat
+    engines, LEADSim, and tree baselines; EncodedNeighborGossip equals the
+    dense mix on every family, including degenerate rings.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import topology
+from repro.core.baselines import CHOCO_SGD
+from repro.core.compression import QuantizePNorm
+from repro.core.convex import LinearRegression
+from repro.core.engines import ENGINES, engine_for, is_exact
+from repro.core.engines.base import FlatEngineBase
+from repro.core.gossip import DenseGossip, EncodedNeighborGossip
+from repro.core.simulator import LEADSim, Trace, run, with_topology
+
+N, D = 8, 768          # two logical blocks per agent, second one ragged
+ATOL = 1e-5
+
+TOPOLOGIES = {
+    "ring": lambda: topology.ring(N),
+    "torus": lambda: topology.torus_2d(2, 4),
+    "er": lambda: topology.erdos_renyi(N, p=0.4, seed=1),
+}
+
+CANONICAL = sorted({"lead", "choco", "deepsqueeze", "qdgd", "dcd", "dgd",
+                    "nids", "extra", "d2"})
+
+
+def _engine(name, topo, gossip):
+    comp = None if is_exact(name) else QuantizePNorm(bits=4, block=512)
+    return engine_for(topo, comp, D, algorithm=name, gossip=gossip, eta=0.02)
+
+
+@pytest.mark.parametrize("topo_name", sorted(TOPOLOGIES))
+@pytest.mark.parametrize("algo_name", CANONICAL)
+def test_neighbor_exchange_step_equals_dense(algo_name, topo_name):
+    """Per-step equivalence: from common states along a real trajectory,
+    the sparse neighbor-exchange step matches the dense-mix step on every
+    registry engine x {ring, torus_2d, erdos_renyi}."""
+    topo = TOPOLOGIES[topo_name]()
+    key = jax.random.PRNGKey(0)
+    prob = LinearRegression.generate(key, n_agents=N, m=64, d=D)
+    eng_d = _engine(algo_name, topo, "dense")
+    eng_n = _engine(algo_name, topo, "neighbor")
+    step_d = jax.jit(eng_d.step_with_wire)
+    step_n = jax.jit(eng_n.step_with_wire)
+
+    x0 = jnp.zeros((N, D))
+    g0 = prob.full_grad(x0)
+    st = eng_d.init(x0, g0, key)
+    for k in range(5):
+        kk = jax.random.fold_in(key, k)
+        g = prob.full_grad(eng_d.x_of(st))
+        st_d, cerr_d, bits_d = step_d(st, g, kk)
+        st_n, cerr_n, bits_n = step_n(st, g, kk)
+        for f in st_d._fields:
+            if f == "k":
+                continue
+            ref = getattr(st_d, f)
+            dev = float(jnp.max(jnp.abs(getattr(st_n, f) - ref)))
+            tol = ATOL * (1.0 + float(jnp.max(jnp.abs(ref))))
+            assert dev <= tol, f"step {k}, field {f}: deviation {dev}"
+        np.testing.assert_allclose(float(cerr_n), float(cerr_d), atol=1e-5)
+        assert float(bits_n) == float(bits_d)
+        st = st_d
+
+
+def test_every_registry_engine_steps_on_torus():
+    """Quick-lane smoke: every registered algorithm takes one finite
+    neighbor-exchange step on torus_2d(2, 4)."""
+    topo = topology.torus_2d(2, 4)
+    key = jax.random.PRNGKey(1)
+    x0 = jax.random.normal(key, (N, D))
+    g0 = jax.random.normal(jax.random.fold_in(key, 1), (N, D))
+    for name in sorted({n for n in ENGINES}):
+        eng = _engine(name, topo, "neighbor")
+        st = eng.init(x0, g0, key)
+        st, cerr, bits = jax.jit(eng.step_with_wire)(st, g0, key)
+        assert bool(jnp.all(jnp.isfinite(eng.x_of(st)))), name
+        assert float(bits) > 0, name
+
+
+@pytest.mark.parametrize("topo_name", ["torus", "er"])
+def test_flat_engine_converges_on_nonring_topology(topo_name):
+    """A compressed engine driven by run() converges on the non-ring graphs
+    under sparse neighbor exchange (scan-compiled, actual wire bits)."""
+    topo = TOPOLOGIES[topo_name]()
+    key = jax.random.PRNGKey(0)
+    prob = LinearRegression.generate(key, n_agents=N, m=50, d=40)
+    algo = engine_for(topo, QuantizePNorm(bits=4), 40, algorithm="choco",
+                      gossip="neighbor", eta=0.05, gamma=0.8)
+    tr = run(algo, prob, prob.x_star, iters=200)
+    assert np.isfinite(tr.dist[-1])
+    assert tr.dist[-1] < 1e-2 * tr.dist[0]
+    assert np.all(np.diff(tr.bits_per_agent) > 0)
+
+
+def test_run_topology_kwarg_rebinds_graph():
+    """run(..., topology=...) swaps the communication graph on flat
+    engines, LEADSim, and tree baselines without reconstruction."""
+    key = jax.random.PRNGKey(0)
+    prob = LinearRegression.generate(key, n_agents=N, m=50, d=40)
+    torus = topology.torus_2d(2, 4)
+    q2 = QuantizePNorm(bits=2, block=512)
+
+    eng = engine_for(topology.ring(N), q2, 40, algorithm="choco",
+                     eta=0.05, gamma=0.8)
+    tr = run(eng, prob, prob.x_star, iters=60, topology=torus)
+    tr_ref = run(dataclasses.replace(eng, topology=torus), prob, prob.x_star,
+                 iters=60)
+    np.testing.assert_array_equal(tr.dist, tr_ref.dist)
+
+    sim = LEADSim(topology=topology.ring(N), compressor=q2, eta=0.1,
+                  engine="flat")
+    tr = run(sim, prob, prob.x_star, iters=60, topology=torus)
+    assert isinstance(tr, Trace) and np.isfinite(tr.dist[-1])
+    assert tr.dist[-1] < 1e-3
+
+    tree = CHOCO_SGD(gossip=DenseGossip(W=topology.ring(N)), compressor=q2,
+                     eta=0.05, gamma=0.8)
+    rebound = with_topology(tree, torus)
+    np.testing.assert_array_equal(np.asarray(rebound.gossip.W), torus.W)
+    tr = run(tree, prob, prob.x_star, iters=60, topology=torus)
+    assert np.isfinite(tr.dist[-1])
+
+
+def test_leadsim_accepts_topology_for_both_engines():
+    """LEADSim(topology=...) drives the tree and flat paths identically to
+    the legacy LEADSim(gossip=DenseGossip(W))."""
+    key = jax.random.PRNGKey(0)
+    prob = LinearRegression.generate(key, n_agents=N, m=50, d=40)
+    topo = topology.ring(N)
+    q2 = QuantizePNorm(bits=2, block=512)
+    for engine in ("tree", "flat"):
+        a = LEADSim(topology=topo, compressor=q2, eta=0.1, engine=engine)
+        b = LEADSim(gossip=DenseGossip(W=jnp.asarray(topo)), compressor=q2,
+                    eta=0.1, engine=engine)
+        tr_a = run(a, prob, prob.x_star, iters=40, key=key)
+        tr_b = run(b, prob, prob.x_star, iters=40, key=key)
+        np.testing.assert_allclose(tr_a.dist, tr_b.dist, rtol=1e-6)
+    with pytest.raises(AssertionError):
+        LEADSim(compressor=q2)                      # neither graph given
+    with pytest.raises(AssertionError):
+        LEADSim(gossip=DenseGossip(W=topo), topology=topo,
+                compressor=q2)                      # both given
+    with pytest.raises(AssertionError):
+        LEADSim(topology=topo)                      # tree path needs a
+        #                                             compressor up front
+    LEADSim(topology=topo, engine="flat", dim=40)   # flat: raw-payload LEAD
+
+
+def test_distconfig_topology_forms_resolve_consistently():
+    """topology_of accepts None | name | Topology | callable, resolves a
+    schedule hook at k=0 in EVERY branch, and rejects an agent-count
+    mismatch."""
+    from repro.dist.trainer import DistConfig, topology_of
+
+    ring4 = topology.ring(4)
+    torus4 = topology.torus_2d(2, 2)
+    np.testing.assert_array_equal(
+        topology_of(DistConfig(), 4).W, ring4.W)
+    np.testing.assert_array_equal(
+        topology_of(DistConfig(topology="torus"), 4).W, torus4.W)
+    np.testing.assert_array_equal(
+        topology_of(DistConfig(topology=ring4), 4).W, ring4.W)
+    sched = ring4.with_schedule(lambda k: torus4 if k == 0 else ring4)
+    # instance AND callable forms must both resolve the hook at k=0
+    got = topology_of(DistConfig(topology=sched), 4)
+    np.testing.assert_array_equal(got.W, torus4.W)
+    got = topology_of(DistConfig(topology=lambda n: sched), 4)
+    np.testing.assert_array_equal(got.W, torus4.W)
+    with pytest.raises(AssertionError):
+        topology_of(DistConfig(topology=topology.ring(6)), 4)
+
+
+@pytest.mark.parametrize("topo_name", sorted(TOPOLOGIES) + ["chain", "star",
+                                                            "n2", "n1"])
+def test_encoded_neighbor_gossip_equals_dense_mix(topo_name):
+    """EncodedNeighborGossip.mix == W @ x on every family, including the
+    degenerate 1- and 2-agent rings."""
+    topo = {
+        "chain": lambda: topology.chain(6),
+        "star": lambda: topology.star(5),
+        "n2": lambda: topology.ring(2),
+        "n1": lambda: topology.ring(1),
+        **TOPOLOGIES,
+    }[topo_name]()
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((topo.n, 7)),
+                    jnp.float32)
+    got = EncodedNeighborGossip.from_topology(topo).mix(x)
+    ref = jnp.asarray(topo.W, jnp.float32) @ x
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-6)
+
+
+def test_payload_decoded_once_per_step():
+    """Regression for the 3x receiver decode (ROADMAP open item): a
+    counting decode wrapped through mix_payload must run exactly once under
+    both gossip modes."""
+    topo = topology.ring(N)
+    eng = engine_for(topo, QuantizePNorm(bits=2), D, algorithm="choco")
+    calls = {"n": 0}
+
+    def decode(pl):
+        calls["n"] += 1
+        return pl["values"]
+
+    payload = {"values": jnp.ones((N, 2, 4))}
+    for gossip in ("dense", "neighbor", "ring"):
+        calls["n"] = 0
+        e = dataclasses.replace(eng, gossip=gossip)
+        q, wq = e.mix_payload(payload, decode)
+        assert calls["n"] == 1, gossip
+        np.testing.assert_allclose(
+            np.asarray(wq),
+            np.asarray(jnp.asarray(topo.W, jnp.float32)
+                       @ q.reshape(N, -1)).reshape(q.shape), atol=1e-6)
+
+
+def test_ring_alias_still_validates():
+    """gossip='ring' stays the uniform-ring-only alias; gossip='neighbor'
+    accepts any Assumption-1 graph."""
+    q2 = QuantizePNorm(bits=2)
+    with pytest.raises(AssertionError):
+        engine_for(topology.torus_2d(2, 4), q2, 64, gossip="ring")
+    eng = engine_for(topology.torus_2d(2, 4), q2, 64, gossip="neighbor")
+    assert isinstance(eng, FlatEngineBase)
+    assert engine_for(topology.ring(4), q2, 64, gossip="ring").gossip == "ring"

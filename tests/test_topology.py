@@ -1,32 +1,70 @@
-"""Mixing-matrix tests (Assumption 1 + spectral quantities)."""
+"""Topology API tests: Assumption 1, the neighbor/permute views, spectral
+quantities against eigvalsh ground truth, and the time-varying hook."""
 import numpy as np
 import pytest
 
 from repro.core import topology as tp
 
 
-@pytest.mark.parametrize("name", ["ring", "chain", "full", "star"])
+@pytest.mark.parametrize("name", ["ring", "chain", "full", "star", "torus",
+                                  "erdos_renyi"])
 @pytest.mark.parametrize("n", [2, 3, 8, 16, 32])
 def test_assumption1(name, n):
-    W = tp.make_mixing(name, n)
-    tp.check_mixing(W)
+    topo = tp.make_mixing(name, n)
+    tp.check_mixing(topo)
+    topo.validate()          # neighbor table reconstructs W
 
 
 def test_ring_paper_weights():
-    W = tp.ring(8)
+    W = tp.ring(8).W
     assert np.allclose(np.diag(W), 1 / 3)
     assert np.allclose(W[0, 1], 1 / 3) and np.allclose(W[0, 7], 1 / 3)
     assert W[0, 2] == 0
 
 
+def test_topology_is_array_like():
+    """np.asarray(topo) yields the dense W — a Topology drops in wherever a
+    mixing matrix went (DenseGossip, jnp.asarray, spectral helpers)."""
+    topo = tp.torus_2d(4, 4)
+    W = np.asarray(topo)
+    assert W.shape == (16, 16) and topo.shape == (16, 16)
+    np.testing.assert_array_equal(W, topo.W)
+    assert tp.beta(W) == pytest.approx(topo.beta)
+
+
 def test_torus():
-    W = tp.torus_2d(4, 4)
-    tp.check_mixing(W)
+    topo = tp.torus_2d(4, 4)
+    tp.check_mixing(topo)
+    assert topo.deg_max == 4
+    assert topo.uniform_weights == pytest.approx((0.2, 0.2))
+
+
+def test_torus_collapsed_sides_not_uniform():
+    """Length-2 sides fold both wrap edges onto one neighbor (weight 2/5) —
+    the table must carry per-edge weights, not a single scalar."""
+    topo = tp.torus_2d(2, 4)
+    tp.check_mixing(topo)
+    assert topo.uniform_weights is None
+    assert topo.deg_max == 3
 
 
 def test_erdos_renyi_connected():
-    W = tp.erdos_renyi(12, p=0.3, seed=3)
-    tp.check_mixing(W)
+    topo = tp.erdos_renyi(12, p=0.3, seed=3)
+    tp.check_mixing(topo)
+
+
+def test_erdos_renyi_deterministic_and_seed_sensitive():
+    """The edge draw goes through SeedSequence (fixed hashing spec), so the
+    same seed reproduces the same graph on any numpy version; different
+    seeds give different graphs."""
+    a = tp.erdos_renyi(16, p=0.4, seed=7)
+    b = tp.erdos_renyi(16, p=0.4, seed=7)
+    np.testing.assert_array_equal(a.W, b.W)
+    c = tp.erdos_renyi(16, p=0.4, seed=8)
+    assert not np.array_equal(a.W, c.W)
+    # the retry loop is gone: the ring backbone makes every draw connected,
+    # including the empty p=0 graph
+    tp.check_mixing(tp.erdos_renyi(9, p=0.0, seed=0))
 
 
 def test_kappa_g_ordering():
@@ -41,3 +79,129 @@ def test_kappa_g_ordering():
 def test_beta_full_graph():
     """Paper: fully connected => beta = lambda_max(I - W) = 1."""
     assert tp.beta(tp.fully_connected(8)) == pytest.approx(1.0)
+
+
+# -- spectral helpers vs eigvalsh ground truth --------------------------------
+
+_FAMILIES = {
+    "ring": lambda: tp.ring(12),
+    "chain": lambda: tp.chain(9),
+    "star": lambda: tp.star(7),
+    "full": lambda: tp.fully_connected(10),
+    "torus": lambda: tp.torus_2d(3, 4),
+    "er": lambda: tp.erdos_renyi(11, p=0.35, seed=5),
+}
+
+
+@pytest.mark.parametrize("family", sorted(_FAMILIES))
+def test_spectral_quantities_match_eigvalsh(family):
+    """Topology.beta / kappa_g / lambda_min_plus / spectral_gap agree with
+    quantities computed directly from numpy.linalg.eigvalsh on I - W."""
+    topo = _FAMILIES[family]()
+    n = topo.n
+    ev_iw = np.sort(np.linalg.eigvalsh(np.eye(n) - topo.W))
+    beta_ref = float(ev_iw[-1])
+    lam_ref = float(ev_iw[ev_iw > 1e-10][0])
+    assert topo.beta == pytest.approx(beta_ref, rel=1e-10)
+    assert topo.lambda_min_plus == pytest.approx(lam_ref, rel=1e-8)
+    assert topo.kappa_g == pytest.approx(beta_ref / lam_ref, rel=1e-8)
+    ev_w = np.sort(np.linalg.eigvalsh(topo.W))
+    assert topo.spectral_gap == pytest.approx(
+        1.0 - max(abs(ev_w[0]), abs(ev_w[-2])), abs=1e-10)
+    # module-level helpers agree on both the Topology and the raw matrix
+    for arg in (topo, topo.W):
+        assert tp.beta(arg) == pytest.approx(beta_ref, rel=1e-10)
+        assert tp.kappa_g(arg) == pytest.approx(beta_ref / lam_ref, rel=1e-8)
+
+
+def test_metropolis_random_adjacency_is_doubly_stochastic():
+    """Pin: metropolis weights for a random symmetric adjacency are
+    symmetric and doubly stochastic with nonnegative entries."""
+    rng = np.random.default_rng(0)
+    for trial in range(5):
+        n = int(rng.integers(4, 20))
+        A = rng.random((n, n)) < 0.4
+        A = np.triu(A, 1)
+        A = A | A.T
+        for i in range(n):                # keep it connected
+            A[i, (i + 1) % n] = A[(i + 1) % n, i] = True
+        W = tp.metropolis_matrix(A)
+        np.testing.assert_allclose(W, W.T, atol=1e-12)
+        np.testing.assert_allclose(W.sum(axis=0), 1.0, atol=1e-12)
+        np.testing.assert_allclose(W.sum(axis=1), 1.0, atol=1e-12)
+        assert np.all(W >= 0)
+        assert np.all((W > 0) == (A | np.eye(n, dtype=bool))) or \
+            np.all(W[~(A | np.eye(n, dtype=bool))] == 0)
+        tp.metropolis(A).validate()
+
+
+# -- neighbor table / permute rounds -----------------------------------------
+
+@pytest.mark.parametrize("family", sorted(_FAMILIES))
+def test_neighbor_table_and_rounds_reconstruct_w(family):
+    """Both sparse views — the padded gather table and the ppermute round
+    decomposition — reproduce W @ x exactly (up to float summation)."""
+    topo = _FAMILIES[family]()
+    x = np.random.default_rng(1).standard_normal((topo.n, 5))
+    ref = topo.W @ x
+
+    gather = topo.weights[:, :1] * x
+    for j in range(topo.deg_max):
+        gather += topo.weights[:, 1 + j:2 + j] * x[topo.neighbors[:, j]]
+    np.testing.assert_allclose(gather, ref, atol=1e-12)
+
+    acc = np.diag(topo.W)[:, None] * x
+    seen = set()
+    for pairs, rw in topo.permute_rounds():
+        srcs = [i for i, _ in pairs]
+        dsts = [j for _, j in pairs]
+        assert len(set(srcs)) == len(srcs), "round sources must be unique"
+        assert len(set(dsts)) == len(dsts), "round dests must be unique"
+        assert not seen & set(pairs)
+        seen |= set(pairs)
+        recv = np.zeros_like(x)
+        for i, j in pairs:
+            recv[j] = x[i]
+        acc += rw[:, None] * recv
+    np.testing.assert_allclose(acc, ref, atol=1e-12)
+    n_edges = int(np.sum((topo.W > 1e-12) & ~np.eye(topo.n, dtype=bool)))
+    assert len(seen) == n_edges, "rounds must cover every directed edge once"
+
+
+def test_ring_rounds_are_classic_fwd_bwd():
+    """The ring decomposes into exactly the pre-Topology trainer's fwd/bwd
+    ppermute pair, in that order — the bit-identity anchor for the dist
+    path."""
+    n = 8
+    rounds = tp.ring(n).permute_rounds()
+    assert len(rounds) == 2
+    fwd = tuple((i, (i + 1) % n) for i in range(n))
+    bwd = tuple((i, (i - 1) % n) for i in range(n))
+    assert rounds[0][0] == fwd
+    assert rounds[1][0] == bwd
+    for _, rw in rounds:
+        np.testing.assert_allclose(rw, 1 / 3)
+    assert tp.ring(n).uniform_weights == pytest.approx((1 / 3, 1 / 3))
+
+
+def test_from_matrix_validates():
+    topo = tp.from_matrix(tp.ring(6).W, name="custom")
+    assert topo.n == 6 and topo.name == "custom"
+    bad = np.eye(4)                      # disconnected: lambda_2 = 1
+    with pytest.raises(AssertionError):
+        tp.from_matrix(bad)
+    assert tp.as_topology(topo) is topo
+
+
+def test_schedule_hook():
+    """A Topology is a callable of the iteration counter: static graphs
+    return themselves, with_schedule resolves through the hook (the CEDAS
+    randomized/time-varying gossip entry point)."""
+    ring8 = tp.ring(8)
+    assert ring8(0) is ring8 and ring8(17) is ring8
+    sched = ring8.with_schedule(
+        lambda k: ring8 if k % 2 == 0 else tp.torus_2d(2, 4))
+    assert sched(0).name == "ring"
+    assert sched(1).name == "torus_2x4"
+    assert sched(2).name == "ring"
+    assert sched.schedule is not None and ring8.schedule is None
