@@ -1,0 +1,66 @@
+"""Fault-injection overhead: masked degraded mixing vs the clean path.
+
+The graceful-degradation layer (core/faults.py) replaces the engine's
+communication stage with a masked mix: a counter-hashed Bernoulli mask is
+realized per step, dropped links are renormalized mass-to-self, and a
+FaultState (stale cache + staleness ages) rides along through the scan.
+All of that is elementwise math plus one extra where/add per mix, so a
+faulted step must stay within ~15% of the clean step — this bench pins
+that ratio per gossip backend.
+
+Rows (``derived`` carries overhead_vs_clean for the faulted rows):
+    faults/step_lead_{dense|neighbor}_clean_n<N>     step_with_wire
+    faults/step_lead_{dense|neighbor}_drop10_n<N>    step_with_wire_faulted
+                                                     (10% link drops,
+                                                     renormalize policy)
+
+Writes BENCH_faults.json to the CWD when run directly; under
+benchmarks/run.py --json it is collected like every other module.
+"""
+import jax
+
+from benchmarks.common import emit, peek_rows, time_us, write_json
+from repro.core import topology
+from repro.core.compression import QuantizePNorm
+from repro.core.engines import engine_for
+from repro.core.faults import FaultModel
+
+D = 2 ** 13                                  # per-agent dim (16 blocks)
+NS = (8, 32)
+
+
+def _engine(topo, gossip, fm):
+    return engine_for(topo, QuantizePNorm(bits=2, block=512), D,
+                      algorithm="lead", gossip=gossip, dither="fast",
+                      faults=fm, eta=0.05, gamma=1.0, alpha=0.5)
+
+
+def bench_step(n: int) -> None:
+    key = jax.random.PRNGKey(0)
+    topo = topology.ring(n)
+    x0 = jax.random.normal(key, (n, D))
+    g0 = jax.random.normal(jax.random.fold_in(key, 1), (n, D))
+    fm = FaultModel(seed=0, link_drop=0.1)
+    for gossip in ("dense", "neighbor"):
+        clean = _engine(topo, gossip, None)
+        faulted = _engine(topo, gossip, fm)
+        st = clean.init(x0, g0, key)
+        fst = faulted.init_fault_state(st)
+        gb = clean.blockify(g0)
+        step_c = jax.jit(clean.step_with_wire)
+        step_f = jax.jit(faulted.step_with_wire_faulted)
+        us_c = time_us(step_c, st, gb, key, iters=20, warmup=3)
+        us_f = time_us(step_f, st, fst, gb, key, iters=20, warmup=3)
+        emit(f"faults/step_lead_{gossip}_clean_n{n}", us_c, "2-bit wire")
+        emit(f"faults/step_lead_{gossip}_drop10_n{n}", us_f,
+             f"overhead_vs_clean={us_f / us_c:.3f}")
+
+
+def main() -> None:
+    for n in NS:
+        bench_step(n)
+
+
+if __name__ == "__main__":
+    main()
+    write_json("BENCH_faults.json", "faults", peek_rows())

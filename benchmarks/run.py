@@ -11,6 +11,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
     bench_lead_step     flat-buffer engine vs pytree path step latency
     bench_baselines     flat engine family vs tree baselines (Fig 2-4 sweep)
     bench_gossip        dense vs neighbor-exchange mixing at n in {8,32,128}
+    bench_faults        masked degraded mixing overhead vs the clean path
 
 ``--json OUT``: additionally write one machine-readable ``BENCH_<name>.json``
 per executed module into directory OUT (rows: name, us_per_call, derived) so
@@ -20,9 +21,10 @@ import os
 import sys
 import traceback
 
-from benchmarks import (bench_baselines, bench_compression, bench_gossip,
-                        bench_lead_step, bench_linreg, bench_logreg, bench_nn,
-                        bench_roofline, bench_sensitivity, bench_theory)
+from benchmarks import (bench_baselines, bench_compression, bench_faults,
+                        bench_gossip, bench_lead_step, bench_linreg,
+                        bench_logreg, bench_nn, bench_roofline,
+                        bench_sensitivity, bench_theory)
 from benchmarks.common import drain_rows, write_json
 
 ALL = {
@@ -36,6 +38,7 @@ ALL = {
     "lead_step": bench_lead_step.main,
     "baselines": bench_baselines.main,
     "gossip": bench_gossip.main,
+    "faults": bench_faults.main,
 }
 
 

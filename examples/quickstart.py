@@ -4,17 +4,26 @@ Reproduces the paper's headline in ~10 seconds on CPU: linear convergence to
 the consensual optimum under 16x communication compression, where DGD stalls.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Robustness demo — drop 10% of the gossip links per step (deterministic
+counter-hashed fault schedule, mass-to-self renormalization; see
+docs/ARCHITECTURE.md "Fault model & degradation policies"):
+
+    PYTHONPATH=src python examples/quickstart.py --fault-rate 0.1
 """
+import argparse
+
 import jax
 
 from repro.core import topology
 from repro.core.compression import QuantizePNorm
 from repro.core.convex import LinearRegression
 from repro.core.engines import describe, engine_for
+from repro.core.faults import FaultModel
 from repro.core.simulator import LEADSim, run
 
 
-def main():
+def main(fault_rate: float = 0.0):
     key = jax.random.PRNGKey(0)
     prob = LinearRegression.generate(key, n_agents=8, m=100, d=100)
     topo = topology.ring(8)     # the paper's graph; torus_2d/erdos_renyi
@@ -28,9 +37,11 @@ def main():
     # every algorithm on the flat engine family (core/engines): one
     # scan-compiled fast path, byte-accurate wire accounting
     q2 = QuantizePNorm(bits=2, block=512)
+    fm = (FaultModel(seed=0, link_drop=fault_rate)
+          if fault_rate > 0 else None)
     algos = {
         "LEAD (2-bit)": LEADSim(topology=topo, compressor=q2, eta=eta,
-                                engine="flat"),
+                                engine="flat", faults=fm),
         "NIDS (32-bit)": engine_for(topo, None, prob.d, algorithm="nids",
                                     eta=eta),
         "DGD  (32-bit)": engine_for(topo, None, prob.d, algorithm="dgd",
@@ -54,6 +65,22 @@ def main():
     print("LEAD reaches machine-precision-level error with ~10x fewer bits;")
     print("DGD stalls at its heterogeneity bias (the paper's motivation).")
 
+    if fm is not None:
+        tr = traces["LEAD (2-bit)"]
+        print(f"\nfaults: link_drop={fault_rate:g} (renormalize policy) — "
+              f"mean dropped links/step {tr.dropped_links.mean():.2f} of "
+              f"{int(topo.edge_mask.sum())} directed edges, realized "
+              f"spectral gap {tr.realized_gap.mean():.3f} "
+              f"(fault-free {topo.spectral_gap:.3f})")
+        print("LEAD degrades gracefully: dropped mass is reassigned to the "
+              "diagonal, so every realized W stays doubly stochastic — the "
+              "loss keeps decreasing and consensus error stays bounded "
+              "instead of diverging.")
+
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="per-step Bernoulli link-drop probability "
+                         "(0 disables fault injection)")
+    main(fault_rate=ap.parse_args().fault_rate)

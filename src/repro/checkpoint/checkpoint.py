@@ -10,6 +10,7 @@ from __future__ import annotations
 import json
 import os
 import tempfile
+import zipfile
 from typing import Any, Optional
 
 import jax
@@ -49,15 +50,34 @@ def load_pytree(path: str, like: Any, shardings: Optional[Any] = None) -> Any:
     TrainState whose h/hw/d fields moved into an `algo` dict — would pass a
     positional count+shape check silently permuted, so a path mismatch
     raises instead of corrupting the restored state.  Checkpoints written
-    before the path meta existed fall back to positional order."""
-    with np.load(path, allow_pickle=False) as z:
-        meta = (json.loads(z["__meta__"].item())
-                if "__meta__" in z.files else None)
-        n = len([k for k in z.files if k.startswith("leaf_")])
-        arrays = [z[f"leaf_{i}"] for i in range(n)]
+    before the path meta existed fall back to positional order.
+
+    A truncated, corrupted, or otherwise undeserializable file raises
+    ValueError naming the file (never a raw zipfile/pickle traceback), as
+    do leaf-count and per-leaf shape mismatches — a killed-mid-write or
+    bit-rotted checkpoint must fail loudly at restore, not propagate
+    garbage into a resumed run (save_pytree's tmp-file rename keeps the
+    published path atomic, but external copies can still truncate)."""
+    try:
+        with np.load(path, allow_pickle=False) as z:
+            meta = (json.loads(z["__meta__"].item())
+                    if "__meta__" in z.files else None)
+            n = len([k for k in z.files if k.startswith("leaf_")])
+            arrays = [z[f"leaf_{i}"] for i in range(n)]
+    except (OSError, EOFError, KeyError, ValueError,
+            zipfile.BadZipFile) as e:
+        if isinstance(e, FileNotFoundError):
+            raise
+        raise ValueError(
+            f"checkpoint {path} is corrupt or truncated and cannot be "
+            f"deserialized ({type(e).__name__}: {e}); restore from an "
+            "earlier step") from e
     keys, leaves, treedef = _paths(like)
-    assert len(leaves) == len(arrays), \
-        f"checkpoint has {len(arrays)} leaves, target {len(leaves)}"
+    if len(leaves) != len(arrays):
+        raise ValueError(
+            f"checkpoint {path} holds {len(arrays)} leaves but the target "
+            f"pytree has {len(leaves)} — it was written for a different "
+            "state structure")
     saved_keys = (meta or {}).get("keys")
     if saved_keys:
         by_key = dict(zip(saved_keys, arrays))
@@ -71,8 +91,12 @@ def load_pytree(path: str, like: Any, shardings: Optional[Any] = None) -> Any:
         arrays = [by_key[k] for k in keys]
     out = []
     shard_leaves = jax.tree_util.tree_leaves(shardings) if shardings is not None else [None] * len(arrays)
-    for a, ref, sh in zip(arrays, leaves, shard_leaves):
-        assert a.shape == ref.shape, f"shape mismatch {a.shape} vs {ref.shape}"
+    for key, a, ref, sh in zip(keys, arrays, leaves, shard_leaves):
+        if a.shape != ref.shape:
+            raise ValueError(
+                f"checkpoint {path}: leaf {key!r} has shape {a.shape} but "
+                f"the target expects {ref.shape} — refusing a reshaping "
+                "restore")
         arr = jax.device_put(a.astype(ref.dtype), sh) if sh is not None else a.astype(ref.dtype)
         out.append(arr)
     return jax.tree_util.tree_unflatten(treedef, out)

@@ -107,7 +107,7 @@ _TREE_TWINS = {
 def engine_for(topology, compressor, dim: int,
                interpret: Optional[bool] = None,
                dither: str = "match", gossip: str = "dense",
-               algorithm: str = "lead", **hyper) -> FlatEngineBase:
+               algorithm: str = "lead", faults=None, **hyper) -> FlatEngineBase:
     """Registry dispatch: (algorithm, compressor, topology) -> flat engine.
 
     `topology` is a core/topology.Topology — built by topology.ring(n),
@@ -132,6 +132,12 @@ def engine_for(topology, compressor, dim: int,
     (Theorem 2 diminishing stepsizes), resolved inside the scan — so the
     Fig. 3 stochastic sweep runs on the flat path for every algorithm.
     Every returned engine is directly drivable by core/simulator.py run().
+
+    `faults` attaches a core/faults.FaultModel: drivers then route the
+    communication stage through the engine's masked-mixing path
+    (step_with_wire_faulted) with deterministic, replayable link drops,
+    agent dropout, stragglers, and payload corruption.  None (the default)
+    leaves the clean path untouched.
     """
     from repro.core.compression import Identity
 
@@ -153,7 +159,8 @@ def engine_for(topology, compressor, dim: int,
 
     block = getattr(compressor, "block", DEFAULT_BLOCK)
     return cls(topology=topology, dim=dim, compressor=compressor, block=block,
-               interpret=interpret, gossip=gossip, dither=dither, **hyper)
+               interpret=interpret, gossip=gossip, dither=dither,
+               faults=faults, **hyper)
 
 
 def flat_twin(algo, dim: int, *, gossip: str = "dense",

@@ -80,8 +80,9 @@ from typing import Any, ClassVar, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import faults as faults_mod
 from repro.core import topology as topology_mod
-from repro.core.gossip import EncodedNeighborGossip
+from repro.core.gossip import DenseGossip, EncodedNeighborGossip
 from repro.core.lead import _at
 from repro.kernels import quantize as _q
 from repro.kernels.ops import DEFAULT_BLOCK, _pick_tile
@@ -152,6 +153,7 @@ class FlatEngineBase:
     interpret: Optional[bool] = None
     gossip: str = "dense"              # "dense" | "neighbor" | "ring" alias
     dither: str = "match"              # "match" | "fast"
+    faults: Optional[Any] = None       # core/faults.FaultModel (None = clean)
 
     # subclass metadata: the state NamedTuple and its consensus start
     # (field -> "copy" of x0 | "zeros"); x and k are implicit
@@ -163,6 +165,9 @@ class FlatEngineBase:
                            topology_mod.as_topology(self.topology))
         assert self.gossip in ("dense", "neighbor", "ring"), self.gossip
         assert self.dither in ("match", "fast"), self.dither
+        assert self.faults is None or isinstance(self.faults,
+                                                 faults_mod.FaultModel), \
+            f"faults must be a core/faults.FaultModel, got {self.faults!r}"
         if self.gossip == "ring":
             import numpy as np
             W = self.topology.W
@@ -335,6 +340,49 @@ class FlatEngineBase:
         q = jax.lax.optimization_barrier(q)
         return q, EncodedNeighborGossip.from_topology(self.topology).mix(q)
 
+    # -- fault injection + graceful degradation ------------------------------
+    def init_fault_state(self, state) -> faults_mod.FaultState:
+        """Fresh FaultState (stale cache + staleness ages) for a run of
+        this engine — carried alongside the engine state through the scan
+        by drivers on the faulted path (core/simulator.py run())."""
+        assert self.faults is not None, "engine has no FaultModel attached"
+        return faults_mod.init_fault_state(self.faults, state.x)
+
+    def mix_payload_faulted(self, payload, decode, k, fstate):
+        """The communication stage under the engine's FaultModel: returns
+        ``(q, wq, new_fstate)`` where q is the clean own decode (an agent
+        needs no wire to read its own payload) and wq the *degraded* mix —
+        links that did not deliver at step k are either renormalized away
+        (policy="renormalize": the realized mixing matrix stays
+        row-stochastic, so the consensus contraction survives with a
+        weaker step graph) or served from the stale cache of the sender's
+        last successful broadcast (policy="stale").  Undetected bit-flip
+        corruption is applied to the wire copy only, never to q or the
+        self column.  The fault realization is the counter hash of
+        (seed, k, edge) — deterministic and replayable (core/faults.py)."""
+        fm = self.faults
+        topo = self.topology
+        q = decode(payload)
+        q_tx = fm.corrupt_values(q, k)
+        cache = fstate.cache if fm.policy == "stale" else None
+        if self.gossip == "dense":
+            mask = fm.dense_mask(k, self.n)
+            wq = DenseGossip(W=topo).mix_masked(q, mask, x_tx=q_tx,
+                                                cache=cache)
+        else:
+            mask = fm.table_mask(k, topo.neighbors)
+            # decode-once: same barrier discipline as the clean path
+            q, q_tx = jax.lax.optimization_barrier((q, q_tx))
+            wq = EncodedNeighborGossip.from_topology(topo).mix_masked(
+                q, mask, x_tx=q_tx, cache=cache)
+        ok = fm.broadcast_ok(k, self.n)
+        age = jnp.where(ok, 0, fstate.age + 1)
+        new_cache = fstate.cache
+        if fm.policy == "stale":
+            sel = ok.reshape((self.n,) + (1,) * (q.ndim - 1))
+            new_cache = jnp.where(sel, q_tx, fstate.cache)
+        return q, wq, faults_mod.FaultState(cache=new_cache, age=age)
+
     @staticmethod
     def rel_err(q: jnp.ndarray, target: jnp.ndarray,
                 ref: jnp.ndarray) -> jnp.ndarray:
@@ -380,6 +428,20 @@ class FlatEngineBase:
         """(new_state, comp_err, wire_bits) with the engine's stored hypers
         resolved at state.k (schedules supported)."""
         return self._step_core(state, g, key, self.hypers_at(state.k))
+
+    def step_with_wire_faulted(self, state, fstate, g, key):
+        """Faulted twin of step_with_wire: same iteration shape, but the
+        communication stage goes through mix_payload_faulted and a
+        FaultState rides along.  Returns (new_state, new_fstate, comp_err,
+        wire_bits).  Engines that override encode_stage/apply_stage (LEAD's
+        fused kernel included) inherit this unchanged."""
+        hy = self.hypers_at(state.k)
+        gb = self._blockify_g(g)
+        payload, decode, bits, ctx = self.encode_stage(state, gb, key, hy)
+        q, wq, fstate = self.mix_payload_faulted(payload, decode, state.k,
+                                                 fstate)
+        new, comp_err = self.apply_stage(state, gb, q, wq, hy, ctx)
+        return new, fstate, comp_err, bits
 
     def x_of(self, state):
         """Current iterates as (n, d) regardless of the blocked layout."""

@@ -1,0 +1,369 @@
+"""Fault injection + graceful degradation for the compressed gossip substrate.
+
+LEAD's Theorem 1 is proved on a fixed, reliable mixing matrix; a production
+multi-pod run sees dropped links, dead/rejoining agents, stragglers, and
+corrupted payloads as the *normal* case.  This module makes those faults a
+first-class, deterministic part of the substrate:
+
+  * :class:`FaultModel` — a frozen description of the fault process:
+    per-step Bernoulli link drops, windowed agent dropout/rejoin, straggler
+    episodes of length tau, and payload bit-flip corruption.  Every
+    realization is derived from a counter-based hash of
+    ``(seed, step, edge-or-agent)`` — the same trick as the engines' fast
+    dither plane (engines/base.py ``fast_uniform``) — so fault schedules are
+    **deterministic, replayable, and lax.scan-compatible with zero host
+    RNG**: the same ``(seed, step)`` always realizes the same faults, on any
+    device, after any checkpoint-resume.
+
+  * degradation policies — what the gossip layer does about a fault:
+
+      ``policy="renormalize"``  surviving row weights keep their values
+        and each row's lost mass is reassigned to the diagonal, keeping
+        the *realized* mixing matrix row-stochastic with nonnegative
+        entries — and, for symmetric masks (link drops kill both
+        directions), symmetric hence doubly stochastic, which is what
+        LEAD's dual invariant needs to survive (see
+        :func:`renormalize_dense` for why row-sum division instead would
+        make LEAD diverge).  The consensus contraction survives with a
+        step-dependent (weaker) graph; an agent whose every incident link
+        dropped degenerates to self-weight exactly 1.0 — no division, no
+        NaN/Inf.
+
+      ``policy="stale"``  the full weights are kept but a dropped link is
+        served from the cache of the sender's last successfully broadcast
+        payload (:class:`FaultState`, carried through the scan).  Rows
+        stay stochastic trivially; the price is staleness, tracked per
+        agent in ``FaultState.age``.  Suits algorithms whose payload is
+        (close to) an absolute iterate — DGD's raw x, CHOCO's damped hat
+        updates converge fine under it — but NOT LEAD, whose payload is
+        an incremental difference Y - H: replaying a stale increment
+        corrupts the receiver's running H_w sum and the run diverges.
+        Keep LEAD on the default renormalize policy.
+
+  * realized-graph algebra — :func:`renormalize_dense` /
+    :func:`renormalize_table` build the degraded mixing weights in the two
+    forms the gossip backends consume (dense (n, n) matrix, padded
+    neighbor table), and :func:`step_metrics` derives the on-device Trace
+    metrics (dropped-link count, realized spectral gap, staleness
+    mean/max) from nothing but ``(model, topology, step, age)`` — so the
+    simulator can recompute them inside its ``record_every`` gate without
+    threading anything extra through the step.
+
+Fault semantics
+---------------
+All faults are *communication* faults: a down or straggling agent keeps
+computing locally (the scan is shape-static), it just stops being heard.
+
+  link drop      each undirected edge {i, j} fails independently per step
+                 with probability ``link_drop`` (both directions at once —
+                 a dead link carries no traffic either way).
+  agent dropout  each agent is down for whole windows of
+                 ``dropout_window`` steps with probability ``agent_drop``
+                 per window (draw keyed on ``step // dropout_window``) —
+                 dropout *and* rejoin, deterministically.  A down agent's
+                 incident links all drop (it neither sends nor receives).
+  straggler      each agent's outgoing payload is late for episodes of
+                 ``straggler_tau`` steps with probability
+                 ``straggler_rate`` per episode; receivers degrade per the
+                 policy (stale-cache makes the emergent staleness visible).
+  corruption     each agent's broadcast payload is corrupted per step with
+                 probability ``bitflip_rate``; a corrupted payload has a
+                 ``bitflip_frac`` fraction of its elements hit by a random
+                 single-bit flip of the f32 pattern.  With
+                 ``detect_corruption=True`` (a checksum on the wire) the
+                 payload is discarded — equivalent to dropping the sender's
+                 outgoing links; with ``False`` the flipped values enter
+                 the mix (chaos mode — pair with utils/finite.py).
+
+Consumers: ``FlatEngineBase.mix_payload_faulted`` + ``core/simulator.py``
+(single-device scan), ``dist/trainer.py`` (the shard_map comm stage masks
+its ppermute rounds with :meth:`FaultModel.link_ok`), and the masked-mixing
+methods on ``DenseGossip`` / ``EncodedNeighborGossip`` (core/gossip.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# weight below this counts as "no surviving mass" (zero-survivor guard)
+_EPS = 1e-12
+
+# distinct hash salts per fault plane (so the Bernoulli streams are
+# independent even when they share seed/step/agent counters)
+_SALT_LINK = 0x1001
+_SALT_DOWN = 0x2002
+_SALT_STRAGGLER = 0x3003
+_SALT_CORRUPT = 0x4004
+_SALT_ELEM = 0x5005
+
+_GOLD = 0x9E3779B9            # 2^32 / golden ratio (Weyl increment)
+
+
+def _mix32(x: jnp.ndarray) -> jnp.ndarray:
+    """Murmur3-style 32-bit integer finalizer (vectorized)."""
+    x = x.astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    return x ^ (x >> 16)
+
+
+def counter_hash(seed: int, k, a, b, salt: int) -> jnp.ndarray:
+    """uint32 hash of the counters ``(seed, step k, ids a/b, salt)``.
+
+    Pure integer arithmetic over broadcastable arrays — no host RNG, no
+    key threading, identical under jit/scan/shard_map — the fault
+    analogue of the dither plane's ``fast_uniform`` counter hash."""
+    k = jnp.asarray(k).astype(jnp.uint32)
+    a = jnp.asarray(a).astype(jnp.uint32)
+    b = jnp.asarray(b).astype(jnp.uint32)
+    h = jnp.uint32(np.uint32(seed)) ^ _mix32(k + jnp.uint32(salt) * jnp.uint32(_GOLD))
+    h = _mix32(h ^ (a * jnp.uint32(_GOLD) + jnp.uint32(0x85EBCA6B)))
+    h = _mix32(h ^ (b * jnp.uint32(0xC2B2AE35) + jnp.uint32(_GOLD)))
+    return h
+
+
+def counter_u01(seed: int, k, a, b, salt: int) -> jnp.ndarray:
+    """U[0, 1) from the counter hash (top 24 bits -> full f32 mantissa)."""
+    return (counter_hash(seed, k, a, b, salt) >> 8).astype(jnp.float32) \
+        * jnp.float32(1.0 / (1 << 24))
+
+
+class FaultState(NamedTuple):
+    """Per-run fault bookkeeping carried through the scan.
+
+    cache  (n, nb, block) — each agent's last *successfully broadcast*
+           decoded payload, the stale-cache fallback (``policy="stale"``
+           only; the renormalize policy carries a (0,) placeholder).
+           Initialized to zeros: a link dropped before its sender ever
+           broadcast successfully contributes the zero payload.
+    age    (n,) int32 — steps since each agent last broadcast successfully
+           (0 = fresh this step).  Feeds the staleness Trace metrics and
+           the recovery-time analysis after dropout windows.
+    """
+    cache: jnp.ndarray
+    age: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """Deterministic fault process + degradation policy (frozen, hashable —
+    engines close over it as a jit constant like every other layout knob).
+
+    All rates are probabilities in [0, 1]; the model with every rate 0 is
+    inactive (``is_active`` False) and drivers take the clean path, which
+    keeps the drop-rate-0 trajectory *bit-identical* to the fault-free one.
+    """
+    seed: int = 0
+    link_drop: float = 0.0        # per-step, per-undirected-edge
+    agent_drop: float = 0.0       # per-window, per-agent outage
+    dropout_window: int = 1       # steps an agent outage lasts
+    straggler_rate: float = 0.0   # per-episode, per-agent late payload
+    straggler_tau: int = 1        # steps a straggler episode lasts
+    bitflip_rate: float = 0.0     # per-step, per-agent payload corruption
+    bitflip_frac: float = 1.0 / 64.0  # fraction of elements hit when corrupted
+    detect_corruption: bool = True    # checksum: corrupted -> dropped
+    policy: str = "renormalize"   # "renormalize" | "stale"
+
+    def __post_init__(self):
+        assert self.policy in ("renormalize", "stale"), self.policy
+        for f in ("link_drop", "agent_drop", "straggler_rate",
+                  "bitflip_rate", "bitflip_frac"):
+            v = getattr(self, f)
+            assert 0.0 <= v <= 1.0, f"{f}={v} must be a probability"
+        assert self.dropout_window >= 1 and self.straggler_tau >= 1
+
+    @property
+    def is_active(self) -> bool:
+        """True when any fault can ever realize; inactive models cost
+        nothing (drivers skip the fault plumbing entirely)."""
+        return (self.link_drop > 0 or self.agent_drop > 0
+                or self.straggler_rate > 0 or self.bitflip_rate > 0)
+
+    # -- per-agent fault planes (all elementwise over broadcastable ids) ----
+    def agent_down(self, k, ids) -> jnp.ndarray:
+        """Agent outage flag for step k (windowed draw: the same agents
+        stay down for ``dropout_window`` consecutive steps, then rejoin)."""
+        if self.agent_drop <= 0:
+            return jnp.zeros(jnp.shape(ids), bool)
+        win = jnp.asarray(k).astype(jnp.int32) // self.dropout_window
+        return counter_u01(self.seed, win, ids, 0, _SALT_DOWN) \
+            < self.agent_drop
+
+    def straggler(self, k, ids) -> jnp.ndarray:
+        """Straggler flag: the agent's outgoing payload is late for the
+        whole ``straggler_tau`` episode containing step k."""
+        if self.straggler_rate <= 0:
+            return jnp.zeros(jnp.shape(ids), bool)
+        ep = jnp.asarray(k).astype(jnp.int32) // self.straggler_tau
+        return counter_u01(self.seed, ep, ids, 0, _SALT_STRAGGLER) \
+            < self.straggler_rate
+
+    def corrupted(self, k, ids) -> jnp.ndarray:
+        """Payload-corruption flag for the agent's step-k broadcast."""
+        if self.bitflip_rate <= 0:
+            return jnp.zeros(jnp.shape(ids), bool)
+        return counter_u01(self.seed, k, ids, 0, _SALT_CORRUPT) \
+            < self.bitflip_rate
+
+    def broadcast_ok(self, k, n: int) -> jnp.ndarray:
+        """(n,) — did each agent's step-k broadcast reach the wire intact?
+        False for down agents, stragglers, and (when detected) corrupted
+        payloads.  Drives the stale cache + staleness age updates.  An
+        UNdetected corrupted broadcast counts as ok — it really was
+        delivered, poisoned (that is the failure mode it models)."""
+        ids = jnp.arange(n)
+        ok = ~self.agent_down(k, ids) & ~self.straggler(k, ids)
+        if self.detect_corruption:
+            ok &= ~self.corrupted(k, ids)
+        return ok
+
+    # -- link survival -------------------------------------------------------
+    def link_ok(self, k, src, dst) -> jnp.ndarray:
+        """Does the directed link dst <- src deliver at step k?  Elementwise
+        over broadcastable integer arrays — the one primitive every
+        consumer derives its mask from (neighbor table, dense matrix, the
+        trainer's ppermute rounds), so they cannot disagree.
+
+        A link fails when its undirected edge drops (hash on the sorted
+        pair: both directions fail together), when either endpoint is
+        down, or when the sender's broadcast failed (straggler / detected
+        corruption)."""
+        src = jnp.asarray(src)
+        dst = jnp.asarray(dst)
+        ok = jnp.ones(jnp.broadcast_shapes(src.shape, dst.shape), bool)
+        if self.link_drop > 0:
+            lo = jnp.minimum(src, dst)
+            hi = jnp.maximum(src, dst)
+            ok &= counter_u01(self.seed, k, lo, hi, _SALT_LINK) \
+                >= self.link_drop
+        if self.agent_drop > 0:
+            ok &= ~self.agent_down(k, src) & ~self.agent_down(k, dst)
+        if self.straggler_rate > 0:
+            ok &= ~self.straggler(k, src)
+        if self.bitflip_rate > 0 and self.detect_corruption:
+            ok &= ~self.corrupted(k, src)
+        return ok
+
+    def table_mask(self, k, neighbors) -> jnp.ndarray:
+        """(n, deg_max) survival mask over a Topology's padded neighbor
+        table (row i = receiver, entries = senders).  Padded entries
+        (self-indexed, weight 0) may realize either way — their weight is
+        0, so they never contribute."""
+        nbr = jnp.asarray(neighbors)
+        dst = jnp.arange(nbr.shape[0])[:, None]
+        return self.link_ok(k, nbr, dst)
+
+    def dense_mask(self, k, n: int) -> jnp.ndarray:
+        """(n, n) survival mask, [i, j] = link i <- j; the diagonal (an
+        agent's own payload needs no wire) is always True."""
+        ids = jnp.arange(n)
+        m = self.link_ok(k, ids[None, :], ids[:, None])
+        return m | jnp.eye(n, dtype=bool)
+
+    # -- payload corruption --------------------------------------------------
+    def corrupt_values(self, buf: jnp.ndarray, k) -> jnp.ndarray:
+        """The buffer as *received over the wire*: agents whose step-k
+        broadcast is corrupted AND undetected get a ``bitflip_frac``
+        fraction of their f32 elements hit by a random single-bit flip
+        (sign/exponent/mantissa alike — flipped exponents may well produce
+        inf; that is the point).  With detection on (or rate 0) this is the
+        identity — detected corruption is handled as a link drop."""
+        if self.bitflip_rate <= 0 or self.detect_corruption:
+            return buf
+        n = buf.shape[0]
+        bad = self.corrupted(k, jnp.arange(n))
+        cnt = jax.lax.iota(jnp.uint32, buf.size).reshape(buf.shape)
+        h = counter_hash(self.seed, k, cnt, 0, _SALT_ELEM)
+        hit = (h >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24)) \
+            < self.bitflip_frac
+        bitpos = (h & jnp.uint32(31)).astype(jnp.uint32)
+        flip = jnp.where(hit, jnp.uint32(1) << bitpos, jnp.uint32(0))
+        bits = jax.lax.bitcast_convert_type(buf.astype(jnp.float32),
+                                            jnp.uint32) ^ flip
+        corrupt = jax.lax.bitcast_convert_type(bits, jnp.float32)
+        sel = bad.reshape((n,) + (1,) * (buf.ndim - 1))
+        return jnp.where(sel, corrupt.astype(buf.dtype), buf)
+
+
+# -- realized (degraded) mixing weights --------------------------------------
+
+def renormalize_dense(W: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Renormalized realized mixing matrix: surviving entries of W keep
+    their weight and each row's *lost* mass is reassigned to the diagonal
+    (the "lazy" degradation of the time-varying-gossip literature).  Rows
+    stay row-stochastic and nonnegative with no division at all, so a
+    fully isolated agent (every incident link dropped) degenerates to the
+    identity row — self-weight exactly 1.0, never NaN/Inf.
+
+    Reassigning to the diagonal rather than dividing by the surviving row
+    sum is deliberate: for a symmetric W and a symmetric mask (link drops
+    fail both directions at once) the realized matrix stays *symmetric,
+    hence doubly stochastic* — the property LEAD's dual/gradient-tracking
+    invariant (sum_i d_i = 0 needs zero column sums of I - W_k) and
+    CHOCO's contraction argument actually use.  Row-sum division keeps
+    rows stochastic but silently breaks column stochasticity, and LEAD
+    visibly diverges under it at a 10% drop rate.  Sender-side faults
+    (stragglers, detected corruption) still realize asymmetric masks;
+    rows remain stochastic, which is the best a receiver can do about a
+    payload that never arrived."""
+    W = jnp.asarray(W)
+    Wm = W * mask
+    lost = W.sum(axis=1) - Wm.sum(axis=1)
+    n = W.shape[0]
+    return Wm + lost[:, None] * jnp.eye(n, dtype=Wm.dtype)
+
+
+def renormalize_table(weights: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """The neighbor-table form of :func:`renormalize_dense`: ``weights`` is
+    a Topology's padded (n, deg_max + 1) table (self weight in column 0,
+    0.0 padding), ``mask`` the (n, deg_max) link survival.  Returns the
+    same layout with dropped entries zeroed and their mass added to the
+    self column — same guarantees as the dense form (row-stochastic, no
+    division, isolated row -> self weight 1.0)."""
+    weights = jnp.asarray(weights)
+    m = jnp.concatenate([jnp.ones_like(mask[:, :1]), mask], axis=1)
+    wm = weights * m
+    lost = weights.sum(axis=1) - wm.sum(axis=1)
+    return wm.at[:, 0].add(lost)
+
+
+# -- on-device step metrics ---------------------------------------------------
+
+def step_metrics(model: FaultModel, topo, k, age):
+    """The Trace's fault metrics for step k, derived from nothing but the
+    (deterministic) fault realization plus the staleness ages — so the
+    simulator recomputes them only on *recorded* iterations, behind its
+    ``record_every`` lax.cond gate, and the step itself stays lean.
+
+    Returns four f32 scalars:
+      dropped_links  directed real edges (W > 0) that did not deliver
+      realized_gap   1 - sigma_2 of the renormalized realized mixing matrix
+                     (for the fault-free symmetric W this equals
+                     ``topo.spectral_gap``); the consensus-contraction
+                     strength of the fresh-information graph this step
+      stale_mean / stale_max   of FaultState.age over agents
+    """
+    n = topo.n
+    W = jnp.asarray(topo.W, jnp.float32)
+    edges = jnp.asarray(topo.edge_mask)
+    m = model.dense_mask(k, n)
+    dropped = jnp.sum(edges & ~m).astype(jnp.float32)
+    Wr = renormalize_dense(W, m)
+    sv = jnp.linalg.svd(Wr, compute_uv=False)
+    gap = (1.0 - sv[1]) if n > 1 else jnp.ones((), jnp.float32)
+    agef = age.astype(jnp.float32)
+    return dropped, gap, jnp.mean(agef), jnp.max(agef)
+
+
+def init_fault_state(model: FaultModel, x_like: jnp.ndarray) -> FaultState:
+    """Fresh FaultState for a run over buffers shaped like ``x_like``
+    ((n, ...) with the agent axis leading).  The stale policy carries a
+    full payload cache; renormalize needs only the ages."""
+    n = x_like.shape[0]
+    cache = (jnp.zeros_like(x_like, dtype=jnp.float32)
+             if model.policy == "stale" else jnp.zeros((0,), jnp.float32))
+    return FaultState(cache=cache, age=jnp.zeros((n,), jnp.int32))

@@ -26,7 +26,12 @@ Interchangeable implementations of `mix` over the Topology API
 * EncodedRingGossip — the uniform-ring special case of
   EncodedNeighborGossip, kept for its (w_self, w_neighbor) reading API.
 
-All back-ends operate on pytrees leaf-wise.
+All back-ends operate on pytrees leaf-wise.  DenseGossip and
+EncodedNeighborGossip additionally expose ``mix_masked`` — the degraded
+mixing path under a core/faults.py link-survival mask (renormalized
+surviving weights, or stale-cache substitution for dropped links) — used
+by the engines' fault-injection layer (engines/base.py
+``mix_payload_faulted``).
 """
 from __future__ import annotations
 
@@ -69,6 +74,41 @@ class DenseGossip:
     def i_minus_w(self, tree: Pytree) -> Pytree:
         mixed = self.mix(tree)
         return tree_map(jnp.subtract, tree, mixed)
+
+    def mix_masked(self, x: jnp.ndarray, mask: jnp.ndarray, *,
+                   x_tx: jnp.ndarray = None,
+                   cache: jnp.ndarray = None) -> jnp.ndarray:
+        """Degraded ``W @ x`` under a link-survival mask (core/faults.py):
+        ``mask[i, j]`` says whether link i <- j delivered this step (the
+        diagonal must be True).  With ``cache=None`` the surviving row
+        weights are renormalized — dropped mass reassigned to the self
+        weight, so realized rows stay stochastic (and symmetric masks stay
+        doubly stochastic; isolated rows degenerate to self-weight 1.0,
+        see faults.renormalize_dense); with a cache buffer, dropped links
+        are served at full weight from the sender's last successful
+        broadcast (stale policy).  ``x_tx`` is the buffer
+        as transmitted (bit-flip corruption applies to the wire copy);
+        the self column always uses the clean local ``x``.  Operates on a
+        single (n, ...) buffer — the engines' blocked payloads — not a
+        pytree."""
+        from repro.core import faults as faults_mod
+        W = jnp.asarray(self.W, x.dtype)
+        n = W.shape[0]
+        x_tx = x if x_tx is None else x_tx
+        eye = jnp.eye(n, dtype=x.dtype)
+        shape = (-1,) + (1,) * (x.ndim - 1)
+
+        def matmul(M, b):
+            return (M @ b.reshape(n, -1)).reshape(b.shape)
+
+        if cache is None:
+            Wr = faults_mod.renormalize_dense(W, mask)
+            own = jnp.diagonal(Wr).reshape(shape) * x
+            return own + matmul(Wr * (1.0 - eye), x_tx)
+        off = W * (1.0 - eye)
+        own = jnp.diagonal(W).reshape(shape) * x
+        return (own + matmul(off * mask, x_tx)
+                + matmul(off * ~mask, cache))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -121,6 +161,38 @@ class EncodedNeighborGossip:
         per-agent gather, so the single decoded copy serves every
         receiver."""
         return self.mix(decode(payload))
+
+    def mix_masked(self, x: jnp.ndarray, mask: jnp.ndarray, *,
+                   x_tx: jnp.ndarray = None,
+                   cache: jnp.ndarray = None) -> jnp.ndarray:
+        """Degraded sparse mix under a (n, deg_max) link-survival mask
+        (core/faults.py; mask[i, j] = did neighbors[i, j] deliver to i).
+        ``cache=None`` renormalizes the surviving table weights — dropped
+        mass moves to the self column, rows stay stochastic, isolated
+        rows degenerate to self-weight 1.0 (faults.renormalize_table); a
+        cache buffer instead serves dropped links from the sender's last
+        successful broadcast at full weight (stale policy).
+        ``x_tx`` is the as-transmitted buffer (corruption applies to the
+        wire copy); the self column always reads the clean local ``x``.
+        Same O(n * deg * d) column-at-a-time accumulation as ``mix``;
+        operates on one (n, ...) buffer, not a pytree."""
+        from repro.core import faults as faults_mod
+        nbr = jnp.asarray(self.neighbors)
+        x_tx = x if x_tx is None else x_tx
+        shape = (-1,) + (1,) * (x.ndim - 1)
+        w = jnp.asarray(self.weights, x.dtype)
+        if cache is None:
+            wr = faults_mod.renormalize_table(w, mask).astype(x.dtype)
+            out = wr[:, 0].reshape(shape) * x
+            for j in range(nbr.shape[1]):
+                out = out + wr[:, 1 + j].reshape(shape) * x_tx[nbr[:, j]]
+            return out
+        out = w[:, 0].reshape(shape) * x
+        for j in range(nbr.shape[1]):
+            src = nbr[:, j]
+            val = jnp.where(mask[:, j].reshape(shape), x_tx[src], cache[src])
+            out = out + w[:, 1 + j].reshape(shape) * val
+        return out
 
 
 @dataclasses.dataclass(frozen=True)

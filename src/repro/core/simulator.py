@@ -30,6 +30,14 @@ core/engines (LEAD via LEADSim, the baseline twins directly — build one
 with ``core.engines.engine_for(..., algorithm=...)`` or
 ``core.engines.flat_twin(tree_algo, dim)``) scan-compiles the same way,
 with Trace.bits_per_agent accumulated from the actual encoded payloads.
+
+Fault injection: an algorithm carrying an *active* core/faults.FaultModel
+(LEADSim(faults=...) or engine_for(..., faults=...)) is driven through the
+engine's masked-mixing path instead — deterministic link drops / dropout /
+stragglers / corruption with graceful degradation — and the Trace gains
+per-recorded-step fault metrics (dropped_links, realized_gap,
+staleness_mean/max).  An inactive model (all rates 0) takes the clean path
+bit for bit.
 """
 from __future__ import annotations
 
@@ -40,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults as faults_mod
 from repro.core import lead as lead_mod
 from repro.core import topology as topology_mod
 from repro.core.engines import engine_for
@@ -48,6 +57,7 @@ from repro.core.engines.lead import FlatLEADState
 from repro.core.gossip import DenseGossip
 from repro.core.lead import LEADHyper
 from repro.core.convex import consensus_error, distance_to_opt
+from repro.utils.finite import assert_finite_tree, finite_checks_enabled
 
 
 def vmap_compress(compressor) -> Callable:
@@ -86,9 +96,15 @@ class LEADSim:
     dim: Optional[int] = None   # logical per-agent d; run() binds it for
                                 # engine="flat" (needed to unblockify states)
     topology: Any = None        # Topology | matrix (alternative to gossip)
+    faults: Any = None          # core/faults.FaultModel (flat engine only)
 
     def __post_init__(self):
         assert self.engine in ("tree", "flat"), self.engine
+        if self.faults is not None:
+            assert isinstance(self.faults, faults_mod.FaultModel), self.faults
+            assert self.engine == "flat", (
+                "fault injection runs on the flat engine's masked-mixing "
+                "path; pass engine='flat'")
         assert (self.gossip is None) != (self.topology is None), \
             "give exactly one of gossip= (DenseGossip) or topology="
         # fail at construction, not deep inside a trace: the tree path
@@ -113,9 +129,13 @@ class LEADSim:
                 else DenseGossip(W=self._topology))
 
     def _flat_engine(self, dim: int):
+        # stored hypers forwarded so the faulted driver protocol (which
+        # resolves hypers_at(k) on the engine) agrees with the per-call
+        # LEADHyper the clean path passes to step_wire
         return engine_for(self._topology, self.compressor, dim,
                           interpret=self.interpret, dither=self.dither,
-                          gossip=self.engine_gossip)
+                          gossip=self.engine_gossip, faults=self.faults,
+                          eta=self.eta, gamma=self.gamma, alpha=self.alpha)
 
     @property
     def hyper(self):
@@ -158,6 +178,15 @@ class LEADSim:
                                                vmap_compress(self.compressor))
         bits = jnp.asarray(self.compressor.wire_bits(g.shape[1]), jnp.float32)
         return new, cerr, bits
+
+    # -- faulted driver protocol (delegates to the flat engine) -------------
+    def init_fault_state(self, state):
+        assert self.dim is not None, "run() binds dim before init"
+        return self._flat_engine(self.dim).init_fault_state(state)
+
+    def step_with_wire_faulted(self, state, fstate, g, key):
+        return self._flat_engine(self._dim_of(g)).step_with_wire_faulted(
+            state, fstate, g, key)
 
     def x_of(self, state):
         """Current iterates as (n, d) regardless of engine layout."""
@@ -213,12 +242,25 @@ class Trace(NamedTuple):
     at the state's counter inside the scan — so the Theorem-2 diminishing
     stepsizes (Fig. 3) trace on the tree path and the flat engine family
     alike, with the same byte-accurate bits_per_agent x-axis.
+
+    The last four rows are the fault metrics (core/faults.py step_metrics),
+    recomputed per recorded iteration from the deterministic fault
+    realization: dropped_links counts directed real edges that did not
+    deliver, realized_gap is 1 - sigma_2 of the renormalized realized
+    mixing matrix (the consensus-contraction strength of the
+    fresh-information graph that step), staleness_mean/max summarize
+    FaultState.age.  On a fault-free run all four are identically zero
+    except realized_gap, which is 0 as well (the fault pass never ran).
     """
     dist: np.ndarray
     consensus: np.ndarray
     loss: np.ndarray
     bits_per_agent: np.ndarray
     comp_err: np.ndarray
+    dropped_links: np.ndarray = None
+    realized_gap: np.ndarray = None
+    staleness_mean: np.ndarray = None
+    staleness_max: np.ndarray = None
 
 
 def run(algo, problem, x_star, *, iters=300, key=None, stochastic=False,
@@ -274,13 +316,32 @@ def run(algo, problem, x_star, *, iters=300, key=None, stochastic=False,
     step_with_wire = getattr(algo, "step_with_wire", None)
     step_with_metrics = getattr(algo, "step_with_metrics", None)
     xs = jnp.asarray(x_star)
+    finite_on = finite_checks_enabled()
+
+    # fault injection: an *active* FaultModel reroutes the step through the
+    # engine's masked-mixing path and threads a FaultState through the scan;
+    # an inactive model (every rate 0) takes this exact clean path, which is
+    # what makes the drop-rate-0 trajectory bit-identical to fault-free
+    fm = getattr(algo, "faults", None)
+    faulted = fm is not None and fm.is_active
+    if faulted:
+        topo_m = (algo._topology if isinstance(algo, LEADSim)
+                  else topology_mod.as_topology(algo.topology))
+        fstate0 = algo.init_fault_state(state)
+    else:
+        fstate0 = jnp.zeros((), jnp.float32)   # inert carry placeholder
+    n_metrics = 8 if faulted else 4
 
     def body(carry, it):
-        state, k, bits_acc = carry
+        state, fstate, k, bits_acc = carry
         k, sub = jax.random.split(k)
         g = grad_at(x_of(state), sub)
         step_key = jax.random.fold_in(sub, 2)
-        if step_with_wire is not None:
+        new_fstate = fstate
+        if faulted:
+            new, new_fstate, cerr, bits = algo.step_with_wire_faulted(
+                state, fstate, g, step_key)
+        elif step_with_wire is not None:
             new, cerr, bits = step_with_wire(state, g, step_key)
         elif step_with_metrics is not None:
             new, cerr = step_with_metrics(state, g, step_key)
@@ -293,29 +354,49 @@ def run(algo, problem, x_star, *, iters=300, key=None, stochastic=False,
 
         def measure():
             X = x_of(new)
-            return (distance_to_opt(X, xs), consensus_error(X),
-                    problem.loss(X), cerr)
+            if finite_on:
+                assert_finite_tree({"x": X, "comp_err": cerr},
+                                   where="simulator recorded step")
+            m = (distance_to_opt(X, xs), consensus_error(X),
+                 problem.loss(X), cerr)
+            if faulted:
+                # recomputed from the deterministic realization at the
+                # pre-step counter (the mask this step actually used) —
+                # the step itself threads nothing extra
+                m = m + faults_mod.step_metrics(fm, topo_m, state.k,
+                                                new_fstate.age)
+            return m
 
         if record_every > 1:
             m = jax.lax.cond(it % record_every == 0, measure,
-                             lambda: (jnp.zeros(()),) * 4)
+                             lambda: (jnp.zeros(()),) * n_metrics)
         else:
             m = measure()
-        return (new, k, bits_acc), (*m, bits_acc)
+        return (new, new_fstate, k, bits_acc), (*m, bits_acc)
 
     @jax.jit
-    def trace(state, key):
-        carry = (state, key, jnp.zeros((), jnp.float32))
+    def trace(state, fstate, key):
+        carry = (state, fstate, key, jnp.zeros((), jnp.float32))
         _, ms = jax.lax.scan(body, carry, jnp.arange(iters))
         return ms
 
-    dist, cons, loss, cerr, bits = trace(state, key)
+    ms = trace(state, fstate0, key)
     # single device->host transfer for the whole trace
-    dist, cons, loss, cerr, bits = (
-        np.asarray(m, np.float64) for m in (dist, cons, loss, cerr, bits))
+    ms = tuple(np.asarray(m, np.float64) for m in ms)
     sel = slice(0, iters, record_every)
+    n_rec = len(ms[0][sel])
+    zeros = np.zeros(n_rec, np.float64)
+    if faulted:
+        dist, cons, loss, cerr, dropped, gap, st_mean, st_max, bits = ms
+    else:
+        dist, cons, loss, cerr, bits = ms
+        dropped = gap = st_mean = st_max = None
     return Trace(dist=dist[sel], consensus=cons[sel], loss=loss[sel],
-                 bits_per_agent=bits[sel], comp_err=cerr[sel])
+                 bits_per_agent=bits[sel], comp_err=cerr[sel],
+                 dropped_links=zeros if dropped is None else dropped[sel],
+                 realized_gap=zeros if gap is None else gap[sel],
+                 staleness_mean=zeros if st_mean is None else st_mean[sel],
+                 staleness_max=zeros if st_max is None else st_max[sel])
 
 
 def _compression_error(algo, state, problem, key) -> jnp.ndarray:

@@ -135,6 +135,14 @@ class Topology:
 
     # -- sparse-exchange views ----------------------------------------------
     @functools.cached_property
+    def edge_mask(self) -> np.ndarray:
+        """(n, n) bool — True where a *real* directed edge exists (W above
+        the edge tolerance, off-diagonal).  The fault layer (core/faults.py)
+        counts dropped links against this set, and the masked dense mix
+        reads it to keep non-edges out of the degraded-graph accounting."""
+        return (self.W > _EDGE_TOL) & ~np.eye(self.n, dtype=bool)
+
+    @functools.cached_property
     def uniform_weights(self) -> Optional[Tuple[float, float]]:
         """(w_self, w_neighbor) when every agent has the same self weight
         and every edge the same weight (ring, torus, fully_connected) —

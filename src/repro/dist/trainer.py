@@ -70,6 +70,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.core import faults as faults_mod
 from repro.core import topology
 from repro.core.compression import QuantizePNorm
 from repro.core.engines import ENGINES, engine_for, is_exact
@@ -79,6 +80,7 @@ from repro.dist import sharding as shr
 from repro.kernels.ops import pack_codes, unpack_codes
 from repro.models import transformer as tfm
 from repro.optim.optimizers import SGD
+from repro.utils.finite import assert_finite_tree, finite_checks_enabled
 from repro.utils.tree import tree_map, tree_zeros_like
 
 Pytree = Any
@@ -114,6 +116,14 @@ class DistConfig:
 
     interpret is the kernels' tri-state backend flag (None = auto: jnp on
     CPU, Pallas on TPU).
+
+    faults attaches a core/faults.FaultModel: the shard_map comm stage then
+    masks each gossip round with the model's deterministic link_ok
+    realization (keyed on state.step — the fault schedule replays
+    identically across restarts and checkpoint-resumes) and degrades by
+    the mass-to-self renormalization.  The trainer supports
+    policy="renormalize" with detect_corruption=True; the stale policy and
+    undetected bit flips are single-device simulator modes.
     """
     algorithm: str = "lead"
     bits: int = 2                        # default quantizer bit-width
@@ -129,6 +139,7 @@ class DistConfig:
     compute_dtype: str = "float32"
     state_dtype: str = "float32"
     interpret: Optional[bool] = None     # kernel backend (None = auto)
+    faults: Any = None                   # core/faults.FaultModel (see below)
 
     def __post_init__(self):
         if self.algorithm != "allreduce":
@@ -136,6 +147,20 @@ class DistConfig:
             assert key in ENGINES, (
                 f"unknown algorithm {self.algorithm!r}; registry has "
                 f"{sorted(set(ENGINES))} + 'allreduce'")
+        if self.faults is not None:
+            assert isinstance(self.faults, faults_mod.FaultModel), self.faults
+            if self.faults.is_active:
+                assert self.algorithm != "allreduce", (
+                    "fault injection degrades the decentralized gossip "
+                    "stage; the centralized allreduce reference has none")
+                assert self.faults.policy == "renormalize", (
+                    "the multi-host trainer supports policy='renormalize' "
+                    "only (the stale policy needs a per-leaf payload cache "
+                    "— use the single-device simulator for it)")
+                assert self.faults.detect_corruption, (
+                    "undetected bit-flip corruption is a single-device "
+                    "simulator mode; the trainer models detected "
+                    "corruption as sender-side link drops")
 
 
 _DEFAULT_ETA = 0.03                      # the trainer's LM-tuned stepsize
@@ -211,7 +236,8 @@ def engine_of(dc: DistConfig, n_agents: int):
     # where a jnp constant would become a tracer and break validation
     topo = topology_of(dc, n_agents)
     return engine_for(topo, comp, dim=dc.block, interpret=dc.interpret,
-                      gossip="neighbor", algorithm=dc.algorithm, **hyp)
+                      gossip="neighbor", algorithm=dc.algorithm,
+                      faults=dc.faults, **hyp)
 
 
 def _hyper_fields_of(algorithm: str) -> set:
@@ -299,7 +325,10 @@ def make_train_step(cfg, mesh, prof: shr.ShardingProfile, dc: DistConfig):
 
     batch: {tokens, labels[, memory]} with leading (A, B_local, ...) dims.
     metrics: grad_norm + (decentralized algorithms) bits_per_agent, the
-    actual payload bits this step put on the wire, summed over leaves.
+    actual payload bits this step put on the wire, summed over leaves;
+    faulted runs (DistConfig.faults active) additionally report
+    dropped_links, the directed gossip edges that did not deliver this
+    step.
     """
     cfg_fwd = cfg
     if dc.seq_parallel and prof.tp_axis and cfg.seq_shard_axis is None:
@@ -316,14 +345,31 @@ def make_train_step(cfg, mesh, prof: shr.ShardingProfile, dc: DistConfig):
     # structure: each round is a partial permutation of the flattened agent
     # axes (jax.lax.ppermute's native form) plus the per-receiver weight
     rounds = topo.permute_rounds()
+    # fault injection: an active FaultModel masks the gossip rounds with
+    # the same deterministic link_ok realization as the single-device
+    # engines (keyed on state.step, so a checkpoint-resumed run sees the
+    # identical fault schedule).  src_of[r][j] = the agent j receives from
+    # in round r (-1: no edge) — the static arrays the per-step masks are
+    # derived from.
+    fm = (dc.faults if dc.faults is not None and dc.faults.is_active
+          else None)
+    src_of = []
+    for pairs, _ in rounds:
+        s = np.full((A,), -1, np.int32)
+        for i, j in pairs:
+            s[j] = i
+        src_of.append(s)
     # the factored uniform form is valid only when every round is a FULL
     # permutation (every agent receives every round — ring, fully
     # connected): on partial rounds it would add the decoded ppermute
     # zero-fill at full weight, silently relying on decode(0) == 0.
     # Graphs with partial rounds (torus with collapsed sides, ER) take the
     # per-receiver weighted branch, where rw[idx] == 0 masks the fill.
+    # Faulted runs always take the weighted branch — the mask substitution
+    # is per receiver.
     uniform = (topo.uniform_weights
-               if all(len(pairs) == A for pairs, _ in rounds) else None)
+               if fm is None and all(len(pairs) == A for pairs, _ in rounds)
+               else None)
     self_w = topo.weights[:, 0].copy()   # per-agent self weight (non-uniform)
     axis_name = (prof.agent_axes if len(prof.agent_axes) > 1
                  else prof.agent_axes[0])
@@ -377,7 +423,7 @@ def make_train_step(cfg, mesh, prof: shr.ShardingProfile, dc: DistConfig):
             lambda l: jax.lax.pmean(l, axis), t),
             in_specs=(spec,), out_specs=spec)(tree)
 
-    def gossip_payloads(payloads):
+    def gossip_payloads(payloads, masks=None):
         """Per leaf: (q, W q) with q the receiver-decoded own payload and
         W q its neighbor-exchange mix over `topo` — only the payload crosses
         agents (quantizer codes packed into uint32 words when wire_pack).
@@ -402,8 +448,16 @@ def make_train_step(cfg, mesh, prof: shr.ShardingProfile, dc: DistConfig):
         encode outside the shard_map would let XLA re-derive it in a
         different fusion context, and the two floor() evaluations can then
         disagree on knife-edge elements — the own-decode and the wire would
-        carry different codes."""
-        def body(pls):
+        carry different codes.
+
+        ``masks`` (faulted runs only) is one (A,) bool array per round —
+        the deterministic link_ok realization for this step, replicated
+        across the mesh.  A receiver whose round-r link dropped substitutes
+        its OWN decoded payload for the undelivered one at the round's
+        weight — exactly faults.renormalize_*'s mass-to-self degradation,
+        so the realized mixing stays row-stochastic (and doubly stochastic
+        for the symmetric link-drop masks LEAD needs)."""
+        def body(pls, msks=None):
             outs = []
             for pl in pls:
                 if dc.wire_pack and "code" in pl:
@@ -434,12 +488,18 @@ def make_train_step(cfg, mesh, prof: shr.ShardingProfile, dc: DistConfig):
                 else:
                     idx = _agent_index()
                     wq = jnp.asarray(self_w, own.dtype)[idx] * own
-                    for pairs, rw in rounds:
+                    for r, (pairs, rw) in enumerate(rounds):
                         recv = dec(_pperm(wire, pairs))
+                        if msks is not None:
+                            recv = jnp.where(msks[r][idx], recv, own)
                         wq = wq + jnp.asarray(rw, own.dtype)[idx] * recv
                 outs.append((own, wq))
             return outs
-        return smap(body, in_specs=(spec,), out_specs=spec)(payloads)
+        if masks is None:
+            return smap(lambda pls: body(pls),
+                        in_specs=(spec,), out_specs=spec)(payloads)
+        return smap(body, in_specs=(spec, P()),
+                    out_specs=spec)(payloads, tuple(masks))
 
     # -- the step -----------------------------------------------------------
     def step(state: TrainState, batch: Dict[str, jnp.ndarray], key):
@@ -487,7 +547,19 @@ def make_train_step(cfg, mesh, prof: shr.ShardingProfile, dc: DistConfig):
             ctxs.append(ctx)
             payloads.append(payload)
             bits_total = bits_total + bits
-        q_wqs = gossip_payloads(payloads)
+
+        masks = None
+        if fm is not None:
+            # one (A,) survival mask per gossip round, from the same
+            # counter-hash realization the simulator uses (keyed on
+            # state.step — replayable across restarts and checkpoints)
+            ids = jnp.arange(A)
+            masks = [fm.link_ok(state.step, jnp.asarray(s), ids)
+                     & jnp.asarray(s >= 0) for s in src_of]
+            metrics["dropped_links"] = sum(
+                jnp.sum(jnp.asarray(s >= 0) & ~m).astype(jnp.float32)
+                for s, m in zip(src_of, masks))
+        q_wqs = gossip_payloads(payloads, masks)
 
         new_x = []
         new_algo = {f: [] for f in leaves_algo}
@@ -504,6 +576,9 @@ def make_train_step(cfg, mesh, prof: shr.ShardingProfile, dc: DistConfig):
             algo={f: jax.tree_util.tree_unflatten(treedef, ls)
                   for f, ls in new_algo.items()},
             opt=opt_state, step=state.step + 1)
+        if finite_checks_enabled():
+            assert_finite_tree({"params": new.params, "metrics": metrics},
+                               where="dist train step")
         return new, metrics
 
     return step

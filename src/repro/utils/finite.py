@@ -1,0 +1,68 @@
+"""Env-gated finite-value guards for long-running training loops.
+
+Fault injection (core/faults.py) deliberately admits failure modes that can
+poison a trajectory with inf/NaN — undetected bit flips land directly in
+the mixing stage — and a multi-day run should fail loudly at the step that
+went nonfinite, not silently produce a NaN checkpoint.  These guards are
+OFF by default (a per-step ``isfinite`` reduction is not free) and enabled
+by setting the environment variable ``REPRO_ASSERT_FINITE`` to anything
+truthy (``1``, ``true``, ...):
+
+    REPRO_ASSERT_FINITE=1 python -m repro.launch.train ...
+
+``assert_finite_tree`` is called by core/simulator.py ``run()`` and
+dist/trainer.py on every *recorded* step.  Outside a trace it raises
+``FloatingPointError`` naming the offending leaves; inside jit/scan it
+checks through ``jax.debug.callback`` (the error surfaces on the host when
+the step's values materialize).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_ENV = "REPRO_ASSERT_FINITE"
+_FALSY = ("", "0", "false", "no", "off")
+
+
+def finite_checks_enabled() -> bool:
+    """True when REPRO_ASSERT_FINITE is set truthy (read per call, so tests
+    and drivers can flip it without reimporting)."""
+    return os.environ.get(_ENV, "0").strip().lower() not in _FALSY
+
+
+def _raise_if_bad(oks, *, names, where):
+    bad = [n for n, o in zip(names, np.asarray(oks)) if not o]
+    if bad:
+        at = f" at {where}" if where else ""
+        raise FloatingPointError(
+            f"nonfinite values{at} in leaves: {', '.join(bad)} "
+            f"(guard enabled via {_ENV})")
+
+
+def assert_finite_tree(tree, where: str = "") -> None:
+    """Assert every float leaf of ``tree`` is finite; no-op unless
+    ``finite_checks_enabled()``.  Integer/bool leaves (iteration counters,
+    masks) are skipped.  Eager values raise ``FloatingPointError``
+    immediately; traced values check via ``jax.debug.callback``."""
+    if not finite_checks_enabled():
+        return
+    names, oks = [], []
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        arr = jnp.asarray(leaf)
+        if not jnp.issubdtype(arr.dtype, jnp.inexact):
+            continue
+        names.append(jax.tree_util.keystr(path) or "<leaf>")
+        oks.append(jnp.all(jnp.isfinite(arr)))
+    if not names:
+        return
+    stacked = jnp.stack(oks)
+    check = functools.partial(_raise_if_bad, names=tuple(names), where=where)
+    if isinstance(stacked, jax.core.Tracer):
+        jax.debug.callback(check, stacked)
+    else:
+        check(stacked)

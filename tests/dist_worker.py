@@ -21,6 +21,11 @@ Cases:
     perf_variants        the beyond-paper knobs (seq_parallel, wire_pack,
                          microbatches, bf16) train correctly and keep the
                          LEAD invariants
+    faulted_checkpoint_resume
+                         LEAD under an active FaultModel (masked gossip
+                         rounds, dropped_links metric) trains finite, and
+                         a kill-at-step-4 checkpoint-resume reproduces the
+                         continuous run bit for bit
 """
 import dataclasses
 import os
@@ -399,6 +404,58 @@ def case_baselines_multihost():
     assert err < 1e-4 * max(scale, 1.0), err
 
 
+def case_faulted_checkpoint_resume():
+    """Fault injection on the multi-host path: LEAD trains with gossip
+    rounds masked by an active FaultModel (dropped_links metric shows real
+    drops, loss stays finite and decreases), and a run killed mid-training
+    resumes from a checkpoint *bit-compatibly* — the fault schedule is a
+    counter hash keyed on state.step, so the resumed half sees exactly the
+    link drops the continuous run saw."""
+    import tempfile
+
+    from repro import checkpoint as ckpt
+    from repro.core.faults import FaultModel
+
+    fm = FaultModel(seed=11, link_drop=0.15)
+    mesh, cfg, prof, dc, state0, batch, key, ds = _setup("lead", faults=fm)
+    step = jax.jit(make_train_step(cfg, mesh, prof, dc))
+    loss_fn_v = jax.jit(jax.vmap(lambda p, b: tfm.loss_fn(p, cfg, b)[0]))
+
+    def batch_at(i):
+        return jax.device_put(lm_batch(ds, i),
+                              NamedSharding(mesh, shr.train_batch_spec(prof)))
+
+    dropped = 0.0
+    with set_mesh(mesh):
+        l0 = float(jnp.mean(loss_fn_v(state0.params, batch)))
+        # continuous 8-step run
+        sa = state0
+        for i in range(8):
+            sa, m = step(sa, batch_at(i), jax.random.fold_in(key, i))
+            dropped += float(m["dropped_links"])
+        l1 = float(jnp.mean(loss_fn_v(sa.params, batch)))
+        # the same run killed after 4 steps + checkpoint-resumed
+        sb = state0
+        for i in range(4):
+            sb, _ = step(sb, batch_at(i), jax.random.fold_in(key, i))
+        with tempfile.TemporaryDirectory() as tmp:
+            ckpt.save(tmp, 4, sb)
+            sb, at = ckpt.restore(tmp, sb)
+            assert at == 4
+        for i in range(4, 8):
+            sb, _ = step(sb, batch_at(i), jax.random.fold_in(key, i))
+
+    same = all(
+        np.array_equal(np.asarray(jax.device_get(a)),
+                       np.asarray(jax.device_get(b)))
+        for a, b in zip(jax.tree_util.tree_leaves(sa.params),
+                        jax.tree_util.tree_leaves(sb.params)))
+    print("FAULT_RESUME", l0, "->", l1, "dropped", dropped, "bitcompat", same)
+    assert dropped > 0, "15% link drops over 8 steps must realize some drop"
+    assert np.isfinite(l1) and l1 < l0, (l0, l1)
+    assert same, "checkpoint-resumed faulted run must be bit-compatible"
+
+
 def case_topology_multihost():
     """The Topology API on the multi-host path: the trainer's ppermute
     schedule comes from Topology.permute_rounds(), so non-ring graphs run
@@ -475,5 +532,6 @@ if __name__ == "__main__":
      "lead_train": case_lead_train,
      "dryrun_multipod": case_dryrun_multipod,
      "perf_variants": case_perf_variants,
+     "faulted_checkpoint_resume": case_faulted_checkpoint_resume,
      "topology_multihost": case_topology_multihost}[case]()
     print("PASS", case)

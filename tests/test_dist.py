@@ -100,6 +100,16 @@ def test_perf_variant_knobs_train_correctly():
 
 
 @pytest.mark.slow
+def test_faulted_trainer_checkpoint_resume():
+    """LEAD under an active FaultModel trains multi-host (masked gossip
+    rounds, dropped_links metric, finite decreasing loss), and a run killed
+    after 4 steps resumes from a checkpoint bit-compatibly — the fault
+    schedule is keyed on state.step, so the resumed half replays the exact
+    link drops of the continuous run."""
+    _run("faulted_checkpoint_resume")
+
+
+@pytest.mark.slow
 def test_topology_api_runs_multihost():
     """Non-ring Topologies through DistConfig.topology: the ppermute
     schedule derives from Topology.permute_rounds(), NIDS matches dense-W

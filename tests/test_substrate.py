@@ -97,6 +97,50 @@ def test_checkpoint_restore_is_path_keyed(tmp_path, key):
                            "params": jnp.zeros((3, 4))})
 
 
+def test_checkpoint_rejects_corrupt_or_truncated_file(tmp_path, key):
+    """A killed-mid-copy or bit-rotted checkpoint must fail loudly with a
+    ValueError naming the file — never a raw zipfile/pickle traceback, and
+    never garbage propagated into a resumed run."""
+    from repro.checkpoint import load_pytree, save_pytree
+    like = {"w": jnp.zeros((3, 4))}
+
+    garbage = str(tmp_path / "garbage.npz")
+    with open(garbage, "wb") as f:
+        f.write(b"\x00\x01not-a-zip\xff" * 16)
+    with pytest.raises(ValueError, match="corrupt or truncated"):
+        load_pytree(garbage, like)
+
+    good = str(tmp_path / "good.npz")
+    save_pytree(good, {"w": jax.random.normal(key, (3, 4))})
+    truncated = str(tmp_path / "truncated.npz")
+    with open(good, "rb") as f:
+        data = f.read()
+    with open(truncated, "wb") as f:
+        f.write(data[: len(data) // 2])
+    with pytest.raises(ValueError, match="corrupt or truncated"):
+        load_pytree(truncated, like)
+
+    # a genuinely absent file still raises FileNotFoundError, not ValueError
+    with pytest.raises(FileNotFoundError):
+        load_pytree(str(tmp_path / "missing.npz"), like)
+
+
+def test_checkpoint_rejects_shape_and_structure_mismatch(tmp_path, key):
+    """Restoring into a differently-shaped or differently-structured target
+    raises a ValueError naming the offending leaf — no silent reshape, no
+    positional guessing."""
+    from repro.checkpoint import load_pytree, save_pytree
+    path = str(tmp_path / "ck.npz")
+    save_pytree(path, {"w": jax.random.normal(key, (3, 4)),
+                       "b": jnp.zeros((4,))})
+
+    with pytest.raises(ValueError, match=r"'w'.*\(3, 4\)"):
+        load_pytree(path, {"w": jnp.zeros((2, 4)), "b": jnp.zeros((4,))})
+
+    with pytest.raises(ValueError, match="different state structure"):
+        load_pytree(path, {"w": jnp.zeros((3, 4))})
+
+
 def test_checkpoint_roundtrip(tmp_path, key):
     tree = {"a": jax.random.normal(key, (4, 5)),
             "b": [jnp.arange(3), {"c": jnp.float32(2.5)}]}
