@@ -13,6 +13,19 @@ Rows (``derived`` carries speedup_vs_dense):
     gossip/mix_{ring|torus}_{dense|neighbor}_n<N>   the bare mixing stage
     gossip/step_choco_ring_{dense|neighbor}_n<N>    full 2-bit CHOCO step
 
+Time-varying section (n ∈ {32, 128}): the one-peer exponential
+TopologyBank's round-indexed neighbor mix (deg=1, the graph slice traced
+at k) against the static ring neighbor mix (deg=2) and the dense matmul —
+per-step gossip work scales with the ROUND degree, not the period — plus
+LEAD run to consensus over deg-1 banks (directed one-peer at n=16,
+symmetric random matchings at n=32), recording the realized consensus
+error and the per-step payload bits of a deg-1 wire, and the measured
+monodromy instability of the dual recursion on exponential_onepeer(32):
+
+    gossip/mix_onepeer_{bank|ring|dense}_n<N>
+    gossip/lead_onepeer_n16, gossip/lead_matching_n32
+    gossip/lead_onepeer_n32_monodromy   (the measured stability boundary)
+
 Writes BENCH_gossip.json to the CWD when run directly; under
 benchmarks/run.py --json it is collected like every other module.
 """
@@ -27,6 +40,7 @@ from repro.core.gossip import EncodedNeighborGossip
 
 D = 2 ** 13                                  # per-agent dim (16 blocks)
 NS = (8, 32, 128)
+NS_TV = (32, 128)                            # time-varying section
 
 
 def _topos(n):
@@ -70,10 +84,101 @@ def bench_step(n: int) -> None:
          f"speedup_vs_dense={us['dense'] / us['neighbor']:.2f}")
 
 
+def bench_timevarying(n: int) -> None:
+    """Round-indexed bank mixing vs the static backends.  The bank mix
+    carries the extra traced slice of the stacked (P, n, deg) tables, but
+    its gather is deg=1 — cheaper per step than the ring's deg=2 even
+    before the wire savings."""
+    key = jax.random.PRNGKey(2)
+    bank = topology.exponential_onepeer(n)
+    ring = topology.ring(n)
+    q = jax.random.normal(key, (n, D // 512, 512))
+    W = jnp.asarray(ring.W, jnp.float32)
+    dense = jax.jit(
+        lambda b: (W @ b.reshape(b.shape[0], -1)).reshape(b.shape))
+    ring_nb = jax.jit(EncodedNeighborGossip.from_topology(ring).mix)
+    bank_nb = jax.jit(
+        lambda b, k: EncodedNeighborGossip.for_round(bank, k).mix(b))
+    us_d = time_us(dense, q, iters=20, warmup=3)
+    us_r = time_us(ring_nb, q, iters=20, warmup=3)
+    us_b = time_us(bank_nb, q, jnp.ones((), jnp.int32), iters=20, warmup=3)
+    emit(f"gossip/mix_onepeer_dense_n{n}", us_d, "static ring W matmul")
+    emit(f"gossip/mix_onepeer_ring_n{n}", us_r,
+         f"static neighbor deg=2 speedup_vs_dense={us_d / us_r:.2f}")
+    emit(f"gossip/mix_onepeer_bank_n{n}", us_b,
+         f"bank deg=1 period={bank.period} "
+         f"speedup_vs_dense={us_d / us_b:.2f}")
+
+
+def _lead_bank_row(name: str, bank, gamma: float, iters: int) -> None:
+    """LEAD end to end on a deg-1 bank: time per scanned step, realized
+    consensus error, per-step payload — a deg-1 wire ships ONE compressed
+    message per agent per step, so bits/step is the quantizer's single
+    per-message cost, independent of the bank's period."""
+    from repro.core.convex import LinearRegression
+    from repro.core.simulator import run
+
+    key = jax.random.PRNGKey(3)
+    prob = LinearRegression.generate(key, n_agents=bank.n, m=64, d=D // 16)
+    eng = engine_for(bank, QuantizePNorm(bits=4, block=512), prob.d,
+                     algorithm="lead", dither="fast",
+                     eta=1.0 / prob.mu_L[1], gamma=gamma)
+    tr = run(eng, prob, prob.x_star, iters=iters, key=key)
+    us = time_us(lambda: run(eng, prob, prob.x_star, iters=iters, key=key),
+                 iters=3, warmup=1) / iters
+    bits_step = float(tr.bits_per_agent[-1]) / iters
+    emit(name, us,
+         f"per scanned step; consensus={float(tr.consensus[-1]):.2e} "
+         f"dist={float(tr.dist[-1]):.2e} bits/step/agent={bits_step:.0f} "
+         f"(deg=1, period={bank.period}, gamma={gamma})")
+
+
+def bench_lead_timevarying() -> None:
+    """LEAD to consensus over deg-1 banks, plus the measured stability
+    boundary of its dual recursion under time-varying mixing.
+
+    The homogeneous LEAD recursion through a bank is x+ = M_k y,
+    u+ = u + y - M_k y with y = x - u and M_k = (1-g/2)I + (g/2)W_k; its
+    period product (monodromy) decides convergence.  Measured: stable on
+    directed one-peer exponential rounds up to n=16 (gamma=1), and on
+    symmetric random matchings at n=32 for gamma <~ 0.3 — but on
+    exponential_onepeer(32) the monodromy radius is > 1 at EVERY gamma
+    (1.22 at gamma=1, ->1+ as gamma->0): each directed round is statically
+    unstable for the dual pair, so no hyper-parameter converges.  The rows
+    record consensus on both stable deg-1 configurations and the measured
+    growth rate of the unstable one (docs/ARCHITECTURE.md, "Time-varying
+    gossip")."""
+    import numpy as np
+
+    _lead_bank_row("gossip/lead_onepeer_n16",
+                   topology.exponential_onepeer(16), gamma=1.0, iters=300)
+    _lead_bank_row("gossip/lead_matching_n32",
+                   topology.random_matching(32, rounds=8), gamma=0.25,
+                   iters=600)
+
+    bank = topology.exponential_onepeer(32)
+    Ws = np.asarray(bank.Ws)
+    I = np.eye(bank.n)
+    Phi = np.eye(2 * bank.n)
+    for W in Ws:                             # monodromy at gamma = 1
+        M = 0.5 * I + 0.5 * W
+        T = np.block([[2 * M - I, -I], [I - M, I]])
+        Phi = T @ Phi
+    rho = float(np.max(np.abs(np.linalg.eigvals(Phi))))
+    emit("gossip/lead_onepeer_n32_monodromy", 0.0,
+         f"UNSTABLE: dual-recursion monodromy radius {rho:.3f}/period "
+         f"({rho ** (1 / bank.period):.3f}/step) at gamma=1; > 1 at every "
+         f"gamma — directed one-peer rounds destabilize the dual pair for "
+         f"n >= 32 (use random_matching banks or n <= 16)")
+
+
 def main() -> None:
     for n in NS:
         bench_mix(n)
         bench_step(n)
+    for n in NS_TV:
+        bench_timevarying(n)
+    bench_lead_timevarying()
 
 
 if __name__ == "__main__":

@@ -13,6 +13,11 @@ Implemented (source in brackets):
   * DeepSqueeze            [Tang et al. 2019a]
   * QDGD                   [Reisizadeh et al. 2019a]
   * DCD-SGD                [Tang et al. 2018a]
+  * CEDAS                  [Huang & Pu 2023, arXiv:2301.05872] — compressed
+                           exact diffusion; the one baseline built for
+                           time-varying graphs, so it holds a Topology /
+                           TopologyBank instead of a DenseGossip and mixes
+                           with the *step's* round graph W_{k mod P}
 
 Each algorithm exposes  init(x0, g0, key) -> state  and
 step(state, g, key) -> state, where g = grad F(state.x; xi).  Every
@@ -78,6 +83,14 @@ class ErrorState(NamedTuple):
 class DualState(NamedTuple):
     x: jnp.ndarray
     d: jnp.ndarray
+    k: jnp.ndarray
+
+
+class DiffusionState(NamedTuple):
+    x: jnp.ndarray
+    psi_prev: jnp.ndarray    # previous adapt half-step psi = x - eta g
+    h: jnp.ndarray           # public (compressed-tracking) copies
+    hw: jnp.ndarray          # mixed public copies (see CEDAS docstring)
     k: jnp.ndarray
 
 
@@ -184,6 +197,95 @@ class CHOCO_SGD:
         return new, _rel_err(q, diff, x_half)
 
     def step(self, s: HatState, g, key):
+        return self.step_with_metrics(s, g, key)[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class CEDAS:
+    """CEDAS [Huang & Pu 2023, arXiv:2301.05872]: compressed exact diffusion.
+
+    psi  = x - eta g                      (adapt)
+    phi  = psi + x - psi_prev             (exact-diffusion correction)
+    q    = Q(phi - h)                     (difference compression; the wire)
+    h+   = h + alpha q
+    hw+  = hw + alpha W q                 (static W — incremental, hw == W h)
+         = W_k h + alpha W_k q            (TopologyBank — the step's graph)
+    x+   = phi + (gamma/2) (hw+ - h+);  psi_prev+ = psi
+
+    With Identity compression and alpha = gamma = 1 the recursion collapses
+    to exact diffusion — D2's eq. (15) with Wtilde = (I+W)/2
+    (tests/test_cedas.py pins the reduction against the rolled-out D2
+    recursion).  Unlike the other baselines this one holds a first-class
+    ``topology`` (Topology | TopologyBank | matrix | scheduled Topology,
+    normalized through core/topology.materialize) rather than a DenseGossip:
+    on a bank every step mixes with the round graph W_{k mod P}, and ``hw``
+    is recomputed from the step's graph instead of tracked incrementally —
+    under time-varying W the incremental sum accumulates alpha W_j q over
+    PAST round graphs and the hw == W h invariant (hence convergence) is
+    lost.  Measured on n=32 least squares, 4-bit quantization,
+    random_matching(32) bank, gamma=0.25, alpha=1: recomputed hw reaches
+    consensus to 3e-14 where the incremental form stalls at O(1).
+
+    Stability over time-varying graphs needs per-round SYMMETRIC mixing
+    (e.g. random_matching): the diffusion momentum phi = 2x - psi_prev
+    composed with *directed* rounds (exponential_onepeer's complex
+    eigenvalues) has joint spectral radius > 1 at every gamma — measured
+    ~1.04/step on exponential_onepeer(32) even uncompressed.  LEAD's
+    engine-side W_k recompute (engines/lead.py) is the combination that
+    converges on directed one-peer banks.
+    """
+    topology: Any
+    compressor: Any
+    eta: Schedule = 0.1
+    gamma: Schedule = 0.5
+    alpha: Schedule = 0.5
+
+    def __post_init__(self):
+        from repro.core import topology as _topo
+        object.__setattr__(self, "topology",
+                           _topo.materialize(self.topology, name="matrix"))
+
+    @property
+    def _bank(self) -> bool:
+        from repro.core import topology as _topo
+        return isinstance(self.topology, _topo.TopologyBank)
+
+    def _mix(self, v, k):
+        """W_{k mod P} @ v on a bank (traced round slice), W @ v otherwise."""
+        if self._bank:
+            r = jnp.asarray(k, jnp.int32) % self.topology.period
+            W = jnp.asarray(self.topology.Ws, v.dtype)[r]
+        else:
+            W = jnp.asarray(self.topology.W, v.dtype)
+        return W @ v
+
+    def init(self, x0, g0, key):
+        return DiffusionState(x=x0, psi_prev=x0, h=x0,
+                              hw=self._mix(x0, jnp.zeros((), jnp.int32)),
+                              k=jnp.zeros((), jnp.int32))
+
+    def step_with_metrics(self, s: DiffusionState, g, key):
+        """(new_state, comp_err): comp_err = ||q - (phi - h)|| / ||phi||,
+        the error of the compressed diffusion message this step."""
+        eta = _at(self.eta, s.k)
+        gamma = _at(self.gamma, s.k)
+        alpha = _at(self.alpha, s.k)
+        psi = s.x - eta * g
+        phi = psi + s.x - s.psi_prev
+        diff = phi - s.h
+        keys = jax.random.split(key, s.x.shape[0])
+        q = jax.vmap(self.compressor.compress)(keys, diff)
+        h = s.h + alpha * q
+        wq = self._mix(q, s.k)
+        if self._bank:
+            hw = self._mix(s.h, s.k) + alpha * wq
+        else:
+            hw = s.hw + alpha * wq
+        x = phi + 0.5 * gamma * (hw - h)
+        new = DiffusionState(x=x, psi_prev=psi, h=h, hw=hw, k=s.k + 1)
+        return new, _rel_err(q, diff, phi)
+
+    def step(self, s: DiffusionState, g, key):
         return self.step_with_metrics(s, g, key)[0]
 
 

@@ -7,6 +7,9 @@ paper algorithm.
     baselines.py  flat twins of every baseline: CHOCO-SGD, DeepSqueeze,
                   QDGD, DCD-SGD (compressed) and DGD, NIDS, EXTRA, D2
                   (exact, no encode stage)
+    cedas.py      FlatCEDASEngine — compressed exact diffusion [Huang & Pu
+                  2023]; the first engine built for the time-varying
+                  TopologyBank path (mixes with the step's round graph)
 
 ``engine_for`` is the registry front door: it dispatches
 ``(algorithm, compressor, topology)`` to the matching engine — the first
@@ -38,12 +41,14 @@ from repro.core.engines.baselines import (
     ExtraState, FlatCHOCOEngine, FlatD2Engine, FlatDCDEngine, FlatDGDEngine,
     FlatDeepSqueezeEngine, FlatEXTRAEngine, FlatNIDSEngine, FlatQDGDEngine,
 )
+from repro.core.engines.cedas import FlatCEDASEngine
 from repro.core.engines.lead import FlatLEADEngine, FlatLEADState
 from repro.kernels.ops import DEFAULT_BLOCK
 
 # registry: algorithm name -> engine class (aliases share one class)
 ENGINES = {
     "lead": FlatLEADEngine,
+    "cedas": FlatCEDASEngine,
     "choco": FlatCHOCOEngine,
     "choco-sgd": FlatCHOCOEngine,
     "deepsqueeze": FlatDeepSqueezeEngine,
@@ -93,6 +98,7 @@ def describe(engine) -> str:
 
 # tree-class name (core/baselines.py) -> registry key, for flat_twin
 _TREE_TWINS = {
+    "CEDAS": "cedas",
     "CHOCO_SGD": "choco",
     "DeepSqueeze": "deepsqueeze",
     "QDGD": "qdgd",
@@ -126,8 +132,9 @@ def engine_for(topology, compressor, dim: int,
     rejected.  `dither` selects the quantizer dither stream for every
     engine's fused p=inf path ("match" = tree-equivalent threefry, "fast" =
     counter-hash); `hyper` forwards algorithm hyper-parameters to the
-    engine's fields (eta/gamma for the baselines; eta/gamma/alpha for LEAD,
-    which LEADSim instead overrides with a LEADHyper per step).  Every hyper
+    engine's fields (eta/gamma for the baselines; eta/gamma/alpha for LEAD
+    — which LEADSim instead overrides with a LEADHyper per step — and for
+    CEDAS).  Every hyper
     is a Schedule — a float or a callable of the iteration counter k
     (Theorem 2 diminishing stepsizes), resolved inside the scan — so the
     Fig. 3 stochastic sweep runs on the flat path for every algorithm.
@@ -174,8 +181,11 @@ def flat_twin(algo, dim: int, *, gossip: str = "dense",
                        f"{sorted(_TREE_TWINS)}")
     cls = ENGINES[_TREE_TWINS[name]]
     fields = {f.name for f in dataclasses.fields(cls)}
-    hyper = {k: getattr(algo, k) for k in ("eta", "gamma")
+    hyper = {k: getattr(algo, k) for k in ("eta", "gamma", "alpha")
              if k in fields and hasattr(algo, k)}
-    return engine_for(algo.gossip.W, getattr(algo, "compressor", None), dim,
+    # most tree baselines hold a DenseGossip; CEDAS holds a first-class
+    # topology (possibly a TopologyBank) — hand either to engine_for
+    topo = (algo.gossip.W if hasattr(algo, "gossip") else algo.topology)
+    return engine_for(topo, getattr(algo, "compressor", None), dim,
                       interpret=interpret, gossip=gossip,
                       algorithm=_TREE_TWINS[name], **hyper)

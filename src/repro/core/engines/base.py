@@ -161,8 +161,12 @@ class FlatEngineBase:
     consensus_init: ClassVar[Dict[str, str]] = {}
 
     def __post_init__(self):
+        # materialize, not as_topology: a TopologyBank passes through, a
+        # periodic schedule becomes a bank (the graph then varies inside
+        # the scan), and a live (periodless) schedule is rejected loudly
+        # instead of silently freezing at topo(0)
         object.__setattr__(self, "topology",
-                           topology_mod.as_topology(self.topology))
+                           topology_mod.materialize(self.topology))
         assert self.gossip in ("dense", "neighbor", "ring"), self.gossip
         assert self.dither in ("match", "fast"), self.dither
         assert self.faults is None or isinstance(self.faults,
@@ -170,11 +174,20 @@ class FlatEngineBase:
             f"faults must be a core/faults.FaultModel, got {self.faults!r}"
         if self.gossip == "ring":
             import numpy as np
+            assert not self._bank, \
+                "gossip='ring' is the static uniform-ring alias and does " \
+                "not support TopologyBank (use gossip='neighbor')"
             W = self.topology.W
             assert np.allclose(W, np.asarray(topology_mod.ring(W.shape[0])),
                                atol=1e-6), \
                 "gossip='ring' requires the uniform ring mixing matrix " \
                 "(use gossip='neighbor' for arbitrary topologies)"
+
+    @property
+    def _bank(self) -> bool:
+        """True when the engine mixes over a round-indexed TopologyBank
+        (time-varying gossip carried through the scan)."""
+        return isinstance(self.topology, topology_mod.TopologyBank)
 
     @property
     def W(self):
@@ -216,12 +229,31 @@ class FlatEngineBase:
         (n, nb, block) layout, which skips the per-step padding copy."""
         return g if g.ndim == 3 else self.blockify(g)
 
-    def _mix(self, buf: jnp.ndarray) -> jnp.ndarray:
+    def _mix(self, buf: jnp.ndarray, k=None) -> jnp.ndarray:
         """W @ buf along the agent axis (pads are zero -> stay zero).
         Flattened to one 2-D matmul so the lowering matches the tree path's
-        (n, d) mix exactly."""
-        W = jnp.asarray(self.W, buf.dtype)
+        (n, d) mix exactly.  With a TopologyBank and a (traced) step index
+        k, the step's round matrix is sliced from the stacked bank; k=None
+        keeps the init-time convention (round 0 — at a consensus start
+        every round fixes the iterate, so the choice is immaterial)."""
+        if self._bank and k is not None:
+            r = jnp.asarray(k, jnp.int32) % self.topology.period
+            W = jnp.asarray(self.topology.Ws, buf.dtype)[r]
+        else:
+            W = jnp.asarray(self.W, buf.dtype)
         return (W @ buf.reshape(buf.shape[0], -1)).reshape(buf.shape)
+
+    def mix_round(self, buf: jnp.ndarray, k) -> jnp.ndarray:
+        """W_k @ buf through the engine's gossip backend: the step's round
+        graph on a bank (traced slice), the fixed W otherwise.  For engine
+        state that is NOT wire traffic (reference buffers like LEAD's H,
+        which receivers track as replicas in a real deployment), so the
+        fault layer's link masks never apply here."""
+        if not self._bank:
+            return self._mix(buf)
+        if self.gossip == "dense":
+            return DenseGossip.for_round(self.topology, k).mix(buf)
+        return EncodedNeighborGossip.for_round(self.topology, k).mix(buf)
 
     def _rows(self, buf: jnp.ndarray) -> jnp.ndarray:
         """(n, nb, block) -> (n*nb, block): one kernel call for all agents.
@@ -320,13 +352,19 @@ class FlatEngineBase:
                            jnp.float32)
         return payload, decode, wire
 
-    def mix_payload(self, payload, decode):
+    def mix_payload(self, payload, decode, k=None):
         """Communication stage: (q, W q) with q = decode(payload), decoded
         exactly ONCE (per-agent decode commutes with the exchange, so the
         single decoded copy serves the receiver-own view and the mix).
         Only `payload` conceptually crosses agents; gossip="dense" mixes
         densely, "neighbor"/"ring" run the sparse neighbor-exchange gather
         over the topology's padded table.
+
+        With a TopologyBank the (traced) step index ``k`` selects the
+        round graph ``k % P`` — the backends' ``for_round`` slices the
+        stacked matrices/tables inside the trace, so the graph varies
+        per iteration of ONE compiled scan.  The static path is untouched
+        (bit-identical to the pre-bank substrate).
 
         The optimization_barrier pins the decode-once property at the XLA
         level: the gather's per-neighbor consumers would otherwise inline
@@ -335,6 +373,13 @@ class FlatEngineBase:
         materialize-once discipline the trainer's shard_map needs for
         knife-edge floor() consistency, ARCHITECTURE.md §3)."""
         q = decode(payload)
+        if self._bank:
+            kk = jnp.zeros((), jnp.int32) if k is None else k
+            if self.gossip == "dense":
+                return q, DenseGossip.for_round(self.topology, kk).mix(q)
+            q = jax.lax.optimization_barrier(q)
+            return q, EncodedNeighborGossip.for_round(self.topology,
+                                                      kk).mix(q)
         if self.gossip == "dense":
             return q, self._mix(q)
         q = jax.lax.optimization_barrier(q)
@@ -367,14 +412,20 @@ class FlatEngineBase:
         cache = fstate.cache if fm.policy == "stale" else None
         if self.gossip == "dense":
             mask = fm.dense_mask(k, self.n)
-            wq = DenseGossip(W=topo).mix_masked(q, mask, x_tx=q_tx,
-                                                cache=cache)
+            gb_dense = (DenseGossip.for_round(topo, k) if self._bank
+                        else DenseGossip(W=topo))
+            wq = gb_dense.mix_masked(q, mask, x_tx=q_tx, cache=cache)
         else:
-            mask = fm.table_mask(k, topo.neighbors)
+            # the link mask composes with the *step's* graph: for a bank
+            # the survival is evaluated over the round-(k % P) neighbor
+            # table (a traced slice), so only links that exist this round
+            # are dropped/renormalized
+            gb_nbr = (EncodedNeighborGossip.for_round(topo, k) if self._bank
+                      else EncodedNeighborGossip.from_topology(topo))
+            mask = fm.table_mask(k, gb_nbr.neighbors)
             # decode-once: same barrier discipline as the clean path
             q, q_tx = jax.lax.optimization_barrier((q, q_tx))
-            wq = EncodedNeighborGossip.from_topology(topo).mix_masked(
-                q, mask, x_tx=q_tx, cache=cache)
+            wq = gb_nbr.mix_masked(q, mask, x_tx=q_tx, cache=cache)
         ok = fm.broadcast_ok(k, self.n)
         age = jnp.where(ok, 0, fstate.age + 1)
         new_cache = fstate.cache
@@ -419,7 +470,7 @@ class FlatEngineBase:
         """The family's one iteration shape: encode -> gossip -> apply."""
         gb = self._blockify_g(g)
         payload, decode, bits, ctx = self.encode_stage(s, gb, key, hy)
-        q, wq = self.mix_payload(payload, decode)
+        q, wq = self.mix_payload(payload, decode, k=s.k)
         new, comp_err = self.apply_stage(s, gb, q, wq, hy, ctx)
         return new, comp_err, bits
 

@@ -36,6 +36,12 @@ Compressed baselines (encode stage = compressor.encode_blocks):
   * FlatDCDEngine          DCD-SGD     — difference compression of the
                            post-gossip iterate against the public copies.
 
+On a TopologyBank the hat-state engines (CHOCO, DCD) recompute their mixed
+public copies ``xhat_w`` from the step's round graph W_{k mod P} exactly
+like FlatLEADEngine / FlatCEDASEngine do for H_w — the incremental
+``xhat_w += W q`` would integrate past rounds' graphs and drift off the
+xhat_w == W xhat invariant (see the class docstrings and base.mix_round).
+
 Exact baselines (no encode stage; the raw buffer is the payload, d * 32
 bits on the wire):
 
@@ -89,8 +95,16 @@ class FlatCHOCOEngine(FlatEngineBase):
 
     x_half = x - eta g
     q      = decode(encode(x_half - xhat))     (payload on the wire)
-    xhat  += q;  xhat_w += W q
+    xhat  += q
+    xhat_w += W q                 (static W — incremental)
+    xhat_w  = W_k xhat + W_k q    (TopologyBank — the step's graph)
     x+     = x_half + gamma * (xhat_w - xhat)
+
+    The bank branch recomputes ``xhat_w`` from the step's round graph for
+    the same reason FlatLEADEngine and FlatCEDASEngine do: the incremental
+    sum accumulates W_j q over PAST round graphs, the xhat_w == W xhat
+    invariant (what CHOCO's contraction argument uses) drifts, and
+    convergence stalls.  The static path is untouched.
     """
     eta: Schedule = 0.1
     gamma: Schedule = 0.8
@@ -110,7 +124,16 @@ class FlatCHOCOEngine(FlatEngineBase):
     def apply_stage(self, s: HatState, gb, q, wq, hy, ctx):
         x_half = ctx
         xhat = s.xhat + q
-        xhat_w = s.xhat_w + wq
+        if self._bank:
+            # wq is already W_k q (mix_payload slices the bank at s.k);
+            # recompute the mixed public copies with the STEP's graph so
+            # xhat_w+ = W_k (xhat + q) — the incremental sum would mix
+            # every past q with a DIFFERENT round graph and lose the
+            # xhat_w == W xhat invariant.  xhat is reference state, not
+            # wire traffic, so mix_round is the clean (fault-exempt) mix.
+            xhat_w = self.mix_round(s.xhat, s.k) + wq
+        else:
+            xhat_w = s.xhat_w + wq
         x = x_half + hy["gamma"] * (xhat_w - xhat)
         new = HatState(x=x, xhat=xhat, xhat_w=xhat_w, k=s.k + 1)
         return new, self.rel_err(q, x_half - s.xhat, x_half)
@@ -177,7 +200,10 @@ class FlatDCDEngine(FlatEngineBase):
     """DCD-SGD [Tang et al. 2018a] on the flat substrate.
 
     x+    = xhat_w - eta g
-    q     = decode(encode(x+ - xhat));  xhat += q;  xhat_w += W q
+    q     = decode(encode(x+ - xhat));  xhat += q
+    xhat_w += W q                 (static W — incremental)
+    xhat_w  = W_k xhat + W_k q    (TopologyBank — the step's graph,
+                                   recomputed like FlatCHOCOEngine)
     (unstable under aggressive compression — reproduced as in the paper.)
     """
     eta: Schedule = 0.1
@@ -196,7 +222,13 @@ class FlatDCDEngine(FlatEngineBase):
 
     def apply_stage(self, s: HatState, gb, q, wq, hy, ctx):
         x = ctx
-        new = HatState(x=x, xhat=s.xhat + q, xhat_w=s.xhat_w + wq, k=s.k + 1)
+        if self._bank:
+            # same recompute as FlatCHOCOEngine: xhat_w+ = W_k (xhat + q),
+            # never an incremental sum over past rounds' graphs
+            xhat_w = self.mix_round(s.xhat, s.k) + wq
+        else:
+            xhat_w = s.xhat_w + wq
+        new = HatState(x=x, xhat=s.xhat + q, xhat_w=xhat_w, k=s.k + 1)
         return new, self.rel_err(q, x - s.xhat, x)
 
 

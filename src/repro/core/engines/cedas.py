@@ -1,0 +1,86 @@
+"""Flat CEDAS engine: compressed exact diffusion on the codes-on-the-wire
+substrate [Huang & Pu 2023, arXiv:2301.05872].
+
+CEDAS is the family's first algorithm *built for* the time-varying gossip
+path: its tree reference (core/baselines.py CEDAS) holds a first-class
+Topology | TopologyBank, and on a bank both implementations mix with the
+step's round graph W_{k mod P} — the traced bank slice that
+engines/base.py's ``mix_payload`` / ``mix_round`` thread through one
+compiled scan.  The update, per agent:
+
+    psi  = x - eta g                      (adapt)
+    phi  = psi + x - psi_prev             (exact-diffusion correction)
+    q    = decode(encode(phi - h))        (difference compression; the wire)
+    h+   = h + alpha q
+    hw+  = hw + alpha W q                 (static W — incremental)
+         = W_k h + alpha W_k q            (TopologyBank — the step's graph)
+    x+   = phi + (gamma/2) (hw+ - h+);  psi_prev+ = psi
+
+With Identity compression and alpha = gamma = 1 this is exact diffusion —
+D2's eq. (15) recursion with Wtilde = (I+W)/2 (tests/test_cedas.py pins the
+reduction).  The bank branch recomputes ``hw`` from the step's graph for
+the same reason FlatLEADEngine does: under time-varying W the incremental
+sum accumulates alpha W_j q over PAST round graphs and the hw == W h
+invariant is lost; H is reference state, not wire traffic, so the W_k h
+mix is clean (mix_round — exempt from fault masks).  The static path is
+bit-identical to the incremental form the tree baselines use.
+
+Stability over time-varying graphs needs per-round SYMMETRIC mixing
+(random_matching banks): composed with *directed* rounds such as
+exponential_onepeer, the diffusion momentum phi = 2x - psi_prev has joint
+spectral radius > 1 at every gamma (measured ~1.04/step on
+exponential_onepeer(32), even uncompressed).  Per-step flat-vs-tree
+equivalence still holds on any bank — only long-run convergence needs the
+symmetric rounds.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.baselines import DiffusionState
+from repro.core.engines.base import FlatEngineBase
+from repro.core.lead import Schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatCEDASEngine(FlatEngineBase):
+    """CEDAS on the flat substrate; mirrors core/baselines.py CEDAS exactly
+    (same draw-for-draw randomness contract as every flat twin).
+
+    compressor=None ships the raw diffusion message phi - h (exact path,
+    d * 32 bits); any encode_blocks operator compresses it.  Hypers are
+    Schedules resolved at state.k inside the scan.
+    """
+    eta: Schedule = 0.1
+    gamma: Schedule = 0.5
+    alpha: Schedule = 0.5
+
+    state_cls = DiffusionState
+    consensus_init = {"psi_prev": "copy", "h": "copy", "hw": "copy"}
+
+    def init(self, x0, g0, key):
+        xb = self.blockify(x0)
+        return DiffusionState(x=xb, psi_prev=xb, h=xb, hw=self._mix(xb),
+                              k=jnp.zeros((), jnp.int32))
+
+    def message(self, s: DiffusionState, gb, hy):
+        psi = s.x - hy["eta"] * gb
+        phi = psi + s.x - s.psi_prev
+        return phi - s.h, (psi, phi)
+
+    def apply_stage(self, s: DiffusionState, gb, q, wq, hy, ctx):
+        psi, phi = ctx
+        h = s.h + hy["alpha"] * q
+        if self._bank:
+            # wq is already W_k q (mix_payload slices the bank at s.k);
+            # recompute the mixed public copies with the STEP's graph so
+            # hw+ = W_k (h + alpha q) — the incremental sum would mix every
+            # past q with a DIFFERENT round graph and lose hw == W h.
+            hw = self.mix_round(s.h, s.k) + hy["alpha"] * wq
+        else:
+            hw = s.hw + hy["alpha"] * wq
+        x = phi + 0.5 * hy["gamma"] * (hw - h)
+        new = DiffusionState(x=x, psi_prev=psi, h=h, hw=hw, k=s.k + 1)
+        return new, self.rel_err(q, phi - s.h, phi)

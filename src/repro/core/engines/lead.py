@@ -47,6 +47,18 @@ so the tile padding past the logical blocks never leaks into the trajectory.
 ``dither="fast"`` (fused quantizer path only) swaps the threefry dither for
 the counter-hash generator in engines/base.py — statistically equivalent,
 much cheaper, but a different random stream.
+
+Time-varying banks
+------------------
+With a TopologyBank the engine mixes with the step's round graph
+W_{k mod P} and RECOMPUTES H_w from it (see apply_stage) — required for
+convergence, since the incremental H_w sum would mix past rounds' graphs.
+Stability is a property of the bank, measured in tests/test_cedas.py and
+docs/ARCHITECTURE.md §4a: LEAD reaches consensus on directed one-peer
+exponential banks up to n = 16 (gamma = 1) and on symmetric
+random_matching banks at n = 32 (gamma <~ 0.3), but on
+exponential_onepeer(32) the dual recursion's period monodromy exceeds
+radius 1 at every gamma — no hyper-parameter converges there.
 """
 from __future__ import annotations
 
@@ -153,6 +165,18 @@ class FlatLEADEngine(FlatEngineBase):
         the exact in-step comp_err ||Qh - (Y-H)|| / ||Y||.  Shape-derived
         rows and tile so the same kernel call serves the engine's own padded
         buffers and the trainer's per-leaf blocks."""
+        if self._bank:
+            # Time-varying graphs break the incremental invariant
+            # hw == W h that static LEAD maintains for free (hw would
+            # accumulate alpha W_j q over PAST round graphs, and the dual
+            # integrates the drift with gamma/(2 eta) gain — divergence).
+            # Recompute the mixed public estimate with the STEP's graph:
+            # the fused kernel computes yh_w = hw + wqh, so feeding it the
+            # effective innovation (W_k h + wqh) - hw yields exactly
+            # yh_w = W_k (h + qh).  H is reference state, not wire traffic
+            # (receivers hold replicas in a real deployment), so this mix
+            # is clean even on the faulted path.
+            wqh = self.mix_round(s.h, s.k) + wqh - s.hw
         rows = self._rows(s.x)
         tile = self._tile_for(rows.shape[0])
         xo, do, ho, hwo = _lu.lead_update(

@@ -339,6 +339,14 @@ def step_metrics(model: FaultModel, topo, k, age):
     simulator recomputes them only on *recorded* iterations, behind its
     ``record_every`` lax.cond gate, and the step itself stays lean.
 
+    ``topo`` is a Topology or a TopologyBank: for a bank, both metrics are
+    computed against the STEP's round graph (stacked W / edge_mask sliced
+    at the traced ``k % P``) — dropped links count only edges that exist
+    this round, and realized_gap is the per-round contraction of the
+    realized round matrix (svd, so directed one-peer rounds are handled;
+    the fault-free per-round gap of a deg-1 round is legitimately 0 — the
+    contraction lives in the period product, topo.spectral_gap).
+
     Returns four f32 scalars:
       dropped_links  directed real edges (W > 0) that did not deliver
       realized_gap   1 - sigma_2 of the renormalized realized mixing matrix
@@ -348,8 +356,13 @@ def step_metrics(model: FaultModel, topo, k, age):
       stale_mean / stale_max   of FaultState.age over agents
     """
     n = topo.n
-    W = jnp.asarray(topo.W, jnp.float32)
-    edges = jnp.asarray(topo.edge_mask)
+    if hasattr(topo, "period"):                  # TopologyBank: step's round
+        r = jnp.asarray(k, jnp.int32) % topo.period
+        W = jnp.asarray(topo.Ws, jnp.float32)[r]
+        edges = jnp.asarray(topo.edge_masks)[r]
+    else:
+        W = jnp.asarray(topo.W, jnp.float32)
+        edges = jnp.asarray(topo.edge_mask)
     m = model.dense_mask(k, n)
     dropped = jnp.sum(edges & ~m).astype(jnp.float32)
     Wr = renormalize_dense(W, m)

@@ -55,9 +55,20 @@ class DenseGossip:
 
     def __post_init__(self):
         # unwrap a Topology to its dense matrix (duck-typed: topology.py
-        # must stay importable without this module)
+        # must stay importable without this module).  A TopologyBank also
+        # matches and unwraps to its round-0 matrix — the init-time mixing
+        # convention; per-step bank mixing goes through ``for_round``.
         if hasattr(self.W, "neighbors") and hasattr(self.W, "W"):
             object.__setattr__(self, "W", self.W.W)
+
+    @staticmethod
+    def for_round(bank, k) -> "DenseGossip":
+        """The step-k dense backend of a topology.TopologyBank: slice the
+        stacked (P, n, n) matrices at the *traced* index ``k % P``.  The
+        slice is a gather inside the jitted step — the graph changes every
+        iteration of one compiled scan, no retracing."""
+        r = jnp.asarray(k, jnp.int32) % bank.period
+        return DenseGossip(W=jnp.asarray(bank.Ws, jnp.float32)[r])
 
     @property
     def n(self) -> int:
@@ -136,6 +147,18 @@ class EncodedNeighborGossip:
     def from_topology(topo) -> "EncodedNeighborGossip":
         return EncodedNeighborGossip(neighbors=topo.neighbors,
                                      weights=topo.weights)
+
+    @staticmethod
+    def for_round(bank, k) -> "EncodedNeighborGossip":
+        """The step-k sparse backend of a topology.TopologyBank: slice the
+        stacked (P, n, max_deg) tables at the *traced* index ``k % P``.
+        The bank's shared layout keeps ``deg_max`` static, so ``mix``'s
+        column-at-a-time loop unrolls exactly as in the static case —
+        still O(n * deg * d), still decode-once."""
+        r = jnp.asarray(k, jnp.int32) % bank.period
+        return EncodedNeighborGossip(
+            neighbors=jnp.asarray(bank.neighbors)[r],
+            weights=jnp.asarray(bank.weights, jnp.float32)[r])
 
     def mix(self, tree: Pytree) -> Pytree:
         """Weighted neighbor gather of decoded per-agent buffers, leaf-wise;

@@ -117,16 +117,24 @@ class LEADSim:
 
     @property
     def _topology(self):
+        """Topology or TopologyBank (periodic schedules materialize into a
+        bank; a live periodless schedule raises — see topology.materialize)."""
         if self.topology is not None:
-            return topology_mod.as_topology(self.topology)
+            return topology_mod.materialize(self.topology)
         return topology_mod.as_topology(self.gossip.W)
 
     @property
     def _gossip(self) -> DenseGossip:
         """Dense mixing backend for the tree path (built off the topology
         when only topology= was given)."""
+        topo = self._topology
+        if isinstance(topo, topology_mod.TopologyBank):
+            raise ValueError(
+                "LEADSim(engine='tree') mixes one static graph; a "
+                "TopologyBank (time-varying gossip) needs engine='flat' "
+                "(the scan-carried bank path)")
         return (self.gossip if self.gossip is not None
-                else DenseGossip(W=self._topology))
+                else DenseGossip(W=topo))
 
     def _flat_engine(self, dim: int):
         # stored hypers forwarded so the faulted driver protocol (which
@@ -200,15 +208,23 @@ class LEADSim:
 
 def with_topology(algo, topology):
     """`algo` rebound to a new communication graph: flat engines and
-    LEADSim get the Topology itself, tree baselines a DenseGossip over its
-    W.  Scheduled Topologies resolve at k=0 (the scan traces one static
-    graph)."""
-    topo = topology_mod.as_topology(topology)(0)
+    LEADSim get the Topology/TopologyBank itself, tree baselines a
+    DenseGossip over its W.  A periodic schedule materializes into a bank
+    (time-varying gossip inside the scan); a live periodless schedule is
+    rejected with an actionable error instead of silently freezing at
+    topo(0) (topology.materialize)."""
+    topo = topology_mod.materialize(topology)
     if isinstance(algo, LEADSim):
         return dataclasses.replace(algo, gossip=None, topology=topo)
     if isinstance(algo, FlatEngineBase) or hasattr(algo, "topology"):
         return dataclasses.replace(algo, topology=topo)
     if hasattr(algo, "gossip"):
+        if isinstance(topo, topology_mod.TopologyBank):
+            raise TypeError(
+                f"{type(algo).__name__} is a tree baseline with a static "
+                "DenseGossip; a TopologyBank (time-varying gossip) needs a "
+                "flat engine (engine_for) or a topology-carrying reference "
+                "like baselines.CEDAS")
         return dataclasses.replace(algo, gossip=DenseGossip(W=topo))
     raise TypeError(f"cannot rebind topology on {type(algo).__name__}")
 
@@ -275,8 +291,10 @@ def run(algo, problem, x_star, *, iters=300, key=None, stochastic=False,
     core/topology.Topology (or raw mixing matrix) replaces the engine's /
     LEADSim's topology or a tree baseline's DenseGossip, so one configured
     algorithm sweeps ring / torus / Erdős–Rényi without reconstruction.
-    A scheduled Topology (topo.schedule set) is resolved at k=0 — the scan
-    compiles one static graph; re-run per phase for time-varying gossip.
+    A TopologyBank (or a schedule with a declared period) runs time-varying
+    gossip INSIDE the scan — the step indexes the bank by k % P; a live
+    periodless schedule is rejected with an actionable error instead of
+    silently freezing at topo(0).
 
     The trace is computed by one jitted ``lax.scan``: metrics for every
     recorded iteration accumulate on device and cross to the host once at
@@ -326,7 +344,7 @@ def run(algo, problem, x_star, *, iters=300, key=None, stochastic=False,
     faulted = fm is not None and fm.is_active
     if faulted:
         topo_m = (algo._topology if isinstance(algo, LEADSim)
-                  else topology_mod.as_topology(algo.topology))
+                  else topology_mod.materialize(algo.topology))
         fstate0 = algo.init_fault_state(state)
     else:
         fstate0 = jnp.zeros((), jnp.float32)   # inert carry placeholder

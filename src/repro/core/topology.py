@@ -31,13 +31,31 @@ Spectral quantities of Theorem 1 / Corollary 1 are cached properties:
     beta    = lambda_max(I - W)
     kappa_g = lambda_max(I - W) / lambda_min^+(I - W)
 
-Time-varying gossip (randomized graphs a la CEDAS): a Topology is a
-*callable of the iteration counter* — ``topo(k)`` returns the graph for
-step k.  A plain Topology returns itself; ``topo.with_schedule(fn)``
-attaches a hook ``fn(k) -> Topology`` so drivers that step eagerly (or
-rebuild their engine per phase) can swap graphs mid-run.  The scan-compiled
-paths trace one static graph per compiled engine, so a scheduled Topology
-is resolved by the *driver*, not inside the scan.
+Time-varying gossip (CEDAS, one-peer exponential graphs, random
+matchings): a Topology is a *callable of the iteration counter* —
+``topo(k)`` returns the graph for step k.  A plain Topology returns
+itself; ``topo.with_schedule(fn, period=P)`` attaches a hook
+``fn(k) -> Topology``.  The scan-compiled paths (flat engines,
+core/simulator.py, dist/trainer.py) do NOT call the hook per step —
+instead a *periodic* schedule is materialized once, at trace time, into a
+:class:`TopologyBank`: the P round graphs stacked into shared-layout
+arrays (dense ``Ws (P, n, n)``, padded tables ``neighbors (P, n,
+max_deg)`` / ``weights (P, n, max_deg + 1)``) that every layer indexes by
+``k % P`` as a *traced* value, so the graph really changes inside
+``lax.scan`` / the jitted train step.  A schedule WITHOUT a period cannot
+be compiled — :func:`materialize` (called by the engines and drivers)
+rejects it with an actionable error instead of silently freezing it at
+``topo(0)``.
+
+Round graphs in a bank need not be symmetric: one-peer exponential
+graphs (``exponential_onepeer``) are directed, deg-1, doubly stochastic
+per round, and mix fully in ceil(log2 n) rounds at n = 2^m — the standard
+trick (Bagua's ``peer_selection_mode="shift_one"``) for scaling
+decentralized training past hundreds of workers.  ``random_matching``
+draws deterministic per-round matchings from the counter hash of
+(seed, round) — replayable across restarts like the fault schedules of
+core/faults.py.  Per-round validation for these is
+:func:`check_doubly_stochastic` (Assumption 1 minus symmetry).
 
 The module-level helpers (``beta``/``kappa_g``/``check_mixing``/...) accept
 either a Topology or a raw matrix.
@@ -70,6 +88,7 @@ class Topology:
     neighbors: np.ndarray                # (n, deg_max) int32, self-padded
     weights: np.ndarray                  # (n, deg_max + 1) float64, 0-padded
     schedule: Optional[Callable[[int], "Topology"]] = None
+    schedule_period: Optional[int] = None   # P: schedule repeats mod P
 
     # -- array-like compatibility ------------------------------------------
     @property
@@ -99,10 +118,18 @@ class Topology:
         schedules in the driver, outside any jit trace."""
         return self if self.schedule is None else self.schedule(int(k))
 
-    def with_schedule(self, fn: Callable[[int], "Topology"]) -> "Topology":
+    def with_schedule(self, fn: Callable[[int], "Topology"],
+                      period: Optional[int] = None) -> "Topology":
         """A copy whose ``topo(k)`` resolves through ``fn`` (time-varying
-        gossip).  ``fn`` must return same-n Topologies."""
-        return dataclasses.replace(self, schedule=fn)
+        gossip).  ``fn`` must return same-n Topologies.  ``period=P``
+        declares the schedule periodic (``fn(k) == fn(k mod P)``), which is
+        what lets the scan-compiled paths :func:`materialize` it into a
+        :class:`TopologyBank` and actually vary the graph inside the scan;
+        a periodless (live) schedule is for drivers that step eagerly or
+        rebuild per phase — the compiled paths reject it loudly."""
+        if period is not None and period < 1:
+            raise ValueError(f"schedule period must be >= 1, got {period}")
+        return dataclasses.replace(self, schedule=fn, schedule_period=period)
 
     # -- spectral quantities (Theorem 1 / Corollary 1) ----------------------
     @functools.cached_property
@@ -160,11 +187,15 @@ class Topology:
 
     @functools.cached_property
     def _rounds(self) -> List[Tuple[Tuple[Tuple[int, int], ...], np.ndarray]]:
+        # pairs are ppermute (src, dst): dst receives from src, so the edge
+        # for pair (i, j) is W[j, i] > tol — for symmetric W this is the
+        # same pair set (bit-identical rounds); for directed graphs
+        # (one-peer exponential) it is the correct orientation
         n = self.n
         by_shift = {}
         for i in range(n):
             for j in range(n):
-                if i != j and self.W[i, j] > _EDGE_TOL:
+                if i != j and self.W[j, i] > _EDGE_TOL:
                     by_shift.setdefault((j - i) % n, []).append((i, j))
         rounds = []
         for s in sorted(by_shift, key=lambda s: (min(s, n - s), s)):
@@ -236,6 +267,273 @@ def as_topology(obj: Any, name: str = "matrix") -> Topology:
     if isinstance(obj, Topology):
         return obj
     return from_matrix(obj, name=name)
+
+
+# -- round-indexed topology banks (time-varying gossip through the scan) -----
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class TopologyBank:
+    """A periodic sequence of P round graphs in stacked, shared-layout host
+    arrays — the compiled form of time-varying gossip.
+
+    Every consumer indexes the stacked arrays by ``k % P`` with a *traced*
+    iteration counter: the flat engines slice ``Ws`` / ``neighbors`` /
+    ``weights`` inside ``mix_payload``, core/faults.py composes its link
+    masks with the step's graph, and dist/trainer.py selects the step's
+    ppermute rounds with ``lax.switch`` — the graph genuinely changes
+    inside one compiled scan, no per-round retracing.
+
+    The shared layout is what makes the traced indexing shape-static: all
+    rounds have the same n, and every round's padded neighbor table is
+    re-padded to the bank-wide ``max_deg`` (pad entries are self indices
+    with weight 0.0, contributing exactly nothing — the same convention as
+    a single Topology's table).  Round graphs must be doubly stochastic
+    but need NOT be symmetric (one-peer exponential rounds are directed).
+
+    Build one with :func:`bank` (a list of Topologies / matrices), a
+    builder (:func:`exponential_onepeer`, :func:`random_matching`), or by
+    materializing a periodic schedule (:func:`materialize`).
+    """
+    name: str
+    rounds: Tuple[Topology, ...]         # the P per-round graphs
+    Ws: np.ndarray                       # (P, n, n) float64
+    neighbors: np.ndarray                # (P, n, max_deg) int32, self-padded
+    weights: np.ndarray                  # (P, n, max_deg + 1) f64, 0-padded
+
+    @property
+    def period(self) -> int:
+        return len(self.rounds)
+
+    @property
+    def n(self) -> int:
+        return self.Ws.shape[1]
+
+    @property
+    def deg_max(self) -> int:
+        """The shared bank-wide table width."""
+        return self.neighbors.shape[2]
+
+    @property
+    def W(self) -> np.ndarray:
+        """The round-0 dense matrix — the init-time mixing convention: at a
+        consensus start every round's W x equals x, so engines that mix once
+        during init (LEAD's H_w, DCD's xhat_w) use round 0 by definition."""
+        return self.Ws[0]
+
+    @functools.cached_property
+    def edge_masks(self) -> np.ndarray:
+        """(P, n, n) bool — per-round directed real edges (the fault
+        layer's dropped-link accounting, per step's graph)."""
+        return np.stack([
+            (W > _EDGE_TOL) & ~np.eye(self.n, dtype=bool) for W in self.Ws])
+
+    @functools.cached_property
+    def period_W(self) -> np.ndarray:
+        """The period-realized mixing matrix W_{P-1} ... W_1 W_0 — the map
+        one full period applies to the agent ensemble.  For one-peer
+        exponential graphs at n = 2^m this is exactly the uniform 1/n
+        averaging matrix (full mixing in ceil(log2 n) deg-1 rounds)."""
+        P = np.eye(self.n)
+        for W in self.Ws:
+            P = W @ P
+        return P
+
+    @property
+    def beta(self) -> float:
+        """lambda_max(I - period_W): the Theorem-1 quantity of the
+        period-realized graph (the per-period consensus contraction)."""
+        return _topo_of(0.5 * (self.period_W + self.period_W.T)).beta
+
+    @property
+    def kappa_g(self) -> float:
+        return _topo_of(0.5 * (self.period_W + self.period_W.T)).kappa_g
+
+    @functools.cached_property
+    def spectral_gap(self) -> float:
+        """1 - sigma_2(period_W): contraction strength of one full period
+        (singular values, so directed round products are handled)."""
+        if self.n <= 1:
+            return 1.0
+        sv = np.linalg.svd(self.period_W, compute_uv=False)
+        return float(1.0 - sv[1])
+
+    def __call__(self, k: int) -> Topology:
+        """The round graph at iteration k (host int: ``rounds[k % P]``).
+        Traced consumers index the stacked arrays directly instead."""
+        return self.rounds[int(k) % self.period]
+
+    def __repr__(self) -> str:
+        degs = [int(np.max((r.weights[:, 1:] > _EDGE_TOL).sum(axis=1)))
+                for r in self.rounds]
+        deg_s = str(degs[0]) if len(set(degs)) == 1 else f"<={max(degs)}"
+        return (f"{self.name}(n={self.n}, period={self.period}, "
+                f"deg={deg_s})")
+
+    def validate(self, atol: float = 1e-8) -> "TopologyBank":
+        """Every round doubly stochastic + stacked tables reconstruct the
+        stacked Ws; returns self."""
+        for r, W in enumerate(self.Ws):
+            check_doubly_stochastic(W, atol=atol)
+            recon = np.zeros_like(W)
+            recon[np.arange(self.n), np.arange(self.n)] = \
+                self.weights[r, :, 0]
+            for j in range(self.deg_max):
+                recon[np.arange(self.n), self.neighbors[r, :, j]] += \
+                    self.weights[r, :, 1 + j]
+            if not np.allclose(recon, W, atol=atol):
+                raise ValueError(
+                    f"bank round {r}: neighbor table does not "
+                    f"reconstruct W")
+        return self
+
+
+def bank(topos, name: str = "bank") -> TopologyBank:
+    """Stack a sequence of round graphs (Topologies or raw matrices) into a
+    :class:`TopologyBank` with the shared (n, max_deg) layout.
+
+    Rounds that disagree with round 0 raise a clear ``ValueError`` naming
+    the offending round — mismatched agent count n, and mixed
+    uniform/non-uniform weight styles (consumers like the trainer's
+    factored-uniform arithmetic assume ONE style per bank; re-weight the
+    odd round out rather than relying on a shape error deep inside the
+    scan).  Tables narrower than the bank-wide max_deg are re-padded (self
+    index, weight 0.0) — that mismatch is layout, not semantics."""
+    topos = [t if isinstance(t, Topology)
+             else _build(f"{name}[{r}]", np.asarray(t, np.float64))
+             for r, t in enumerate(topos)]
+    if not topos:
+        raise ValueError("bank needs at least one round graph")
+    n0 = topos[0].n
+    style0 = topos[0].uniform_weights is not None
+    for r, t in enumerate(topos):
+        if t.n != n0:
+            raise ValueError(
+                f"bank round {r} ({t.name!r}) has n={t.n} agents but "
+                f"round 0 ({topos[0].name!r}) has n={n0}; every round of "
+                f"a TopologyBank must share the same agent count")
+        if (t.uniform_weights is not None) != style0:
+            kind = ("uniform" if t.uniform_weights is not None
+                    else "non-uniform")
+            kind0 = "uniform" if style0 else "non-uniform"
+            raise ValueError(
+                f"bank round {r} ({t.name!r}) has {kind} weights but "
+                f"round 0 ({topos[0].name!r}) is {kind0}; a TopologyBank "
+                f"must not mix uniform and non-uniform weight styles "
+                f"(re-weight the odd round out, e.g. via metropolis)")
+    deg = max(t.deg_max for t in topos)
+    nbr = np.empty((len(topos), n0, deg), np.int32)
+    wts = np.zeros((len(topos), n0, deg + 1))
+    for r, t in enumerate(topos):
+        d = t.deg_max
+        nbr[r, :, :d] = t.neighbors
+        nbr[r, :, d:] = np.arange(n0, dtype=np.int32)[:, None]  # self pad
+        wts[r, :, :d + 1] = t.weights
+    Ws = np.stack([t.W for t in topos])
+    return TopologyBank(name=name, rounds=tuple(topos), Ws=Ws,
+                        neighbors=nbr, weights=wts)
+
+
+def materialize(obj: Any, name: str = "matrix"):
+    """Normalize anything the engines/drivers accept as a communication
+    graph to its compiled form: Topology | TopologyBank | matrix |
+    sequence-of-rounds, with periodic schedules expanded into a bank.
+
+    * a TopologyBank passes through;
+    * a list/tuple of graphs becomes ``bank(...)`` (with its per-round
+      validation);
+    * a scheduled Topology WITH ``schedule_period=P`` becomes the bank of
+      ``fn(0), ..., fn(P-1)``;
+    * a scheduled Topology WITHOUT a period raises — the compiled paths
+      trace the graph, so a live callable would silently freeze at
+      ``topo(0)`` (attach a period via ``with_schedule(fn, period=P)``, or
+      resolve ``topo(k)`` yourself and re-run per phase);
+    * everything else goes through :func:`as_topology` unchanged.
+    """
+    if isinstance(obj, TopologyBank):
+        return obj
+    if isinstance(obj, (list, tuple)):
+        return bank(obj, name=name)
+    topo = as_topology(obj, name=name)
+    if topo.schedule is None:
+        return topo
+    if topo.schedule_period is None:
+        raise ValueError(
+            f"topology {topo.name!r} carries a live (periodless) schedule "
+            "callable, which a compiled path cannot trace — it would "
+            "silently freeze the graph at topo(0).  Either attach a period "
+            "(topo.with_schedule(fn, period=P)) so it materializes into a "
+            "TopologyBank, or resolve topo(k) yourself and re-run per "
+            "phase.")
+    P = topo.schedule_period
+    return bank([topo(k) for k in range(P)], name=f"{topo.name}@P{P}")
+
+
+# -- time-varying graph families ---------------------------------------------
+
+def exponential_onepeer(n: int) -> TopologyBank:
+    """One-peer exponential graphs: a period-ceil(log2 n) bank whose round
+    r sends each agent exactly ONE message — agent i averages itself with
+    agent ``(i - 2^r) mod n``::
+
+        W_r[i, i] = 1/2,   W_r[i, (i - 2^r) mod n] = 1/2
+
+    Each round is doubly stochastic (agent j's column receives off-diagonal
+    mass only from ``i = (j + 2^r) mod n``) but *directed* — i listens to
+    i - 2^r while i + 2^r listens to i.  At n = 2^m the P-round product is
+    exactly the uniform 1/n averaging matrix: full mixing in log2(n)
+    rounds at per-round degree 1, which is why this is the standard
+    scaling trick for decentralized training (Bagua's shift_one mode).
+    For non-powers of two the rounds stay doubly stochastic and the
+    period product still contracts, just not to exact uniformity."""
+    if n < 1:
+        raise ValueError(f"exponential_onepeer needs n >= 1, got {n}")
+    if n == 1:
+        return bank([_build("exp_onepeer[0]", np.ones((1, 1)))],
+                    name="exp_onepeer1")
+    P = int(np.ceil(np.log2(n)))
+    rounds = []
+    idx = np.arange(n)
+    for r in range(P):
+        # 0 < 2^r < n for every r < ceil(log2 n), so the peer is never self
+        W = np.zeros((n, n))
+        W[idx, idx] = 0.5
+        W[idx, (idx - (1 << r)) % n] = 0.5
+        rounds.append(_build(f"exp_onepeer[{r}]", W))
+    return bank(rounds, name=f"exp_onepeer{n}")
+
+
+def random_matching(n: int, seed: int = 0, rounds: int = 8) -> TopologyBank:
+    """A bank of ``rounds`` random perfect matchings drawn deterministically
+    from the counter hash of (seed, round, agent) — the same replayable
+    machinery as core/faults.py, so the stream is bit-identical across
+    restarts and checkpoint resume (``random_matching(n, seed, r1)`` is a
+    prefix of ``random_matching(n, seed, r2)`` for r1 < r2).
+
+    Round r sorts agents by their hashed key and pairs consecutive ones;
+    each matched pair averages (W[i,i] = W[i,j] = 1/2), unmatched agents
+    (odd n) keep self weight 1.  Every round is symmetric doubly
+    stochastic with degree <= 1 — the straggler-avoiding alternative to a
+    fixed graph."""
+    from repro.core.faults import counter_hash    # no cycle: faults is leaf
+    if n < 1:
+        raise ValueError(f"random_matching needs n >= 1, got {n}")
+    if rounds < 1:
+        raise ValueError(f"random_matching needs rounds >= 1, got {rounds}")
+    topos = []
+    idx = np.arange(n)
+    for r in range(rounds):
+        keys = np.asarray(counter_hash(seed, r, idx, 0, _SALT_MATCH))
+        order = np.argsort(keys, kind="stable")
+        W = np.eye(n)
+        for a in range(0, n - 1, 2):
+            i, j = int(order[a]), int(order[a + 1])
+            W[i, i] = W[j, j] = 0.5
+            W[i, j] = W[j, i] = 0.5
+        topos.append(_build(f"matching_s{seed}[{r}]", W))
+    return bank(topos, name=f"matching{n}_s{seed}")
+
+
+_SALT_MATCH = 0x7007        # counter-hash domain for random_matching draws
 
 
 # -- graph families ----------------------------------------------------------
@@ -340,10 +638,14 @@ TOPOLOGIES = {
     "star": star,
     "torus": lambda n: torus_2d(*_near_square(n)),
     "erdos_renyi": erdos_renyi,
+    "exp-onepeer": exponential_onepeer,        # -> TopologyBank, period log2 n
+    "random-matching": random_matching,        # -> TopologyBank, period 8
 }
 
 
-def make_mixing(name: str, n: int) -> Topology:
+def make_mixing(name: str, n: int):
+    """Topology or TopologyBank by family name (the launch CLIs' front
+    door; time-varying families return banks)."""
     if name not in TOPOLOGIES:
         raise KeyError(f"unknown topology {name!r}; options: {sorted(TOPOLOGIES)}")
     return TOPOLOGIES[name](n)
@@ -389,3 +691,16 @@ def check_mixing(W, atol: float = 1e-8) -> None:
         ev = np.sort(np.linalg.eigvalsh(W))
         assert ev[0] > -1.0 + 1e-10, "lambda_n(W) must be > -1"
         assert ev[-2] < 1.0 - 1e-12, "graph must be connected (lambda_2 < 1)"
+
+
+def check_doubly_stochastic(W, atol: float = 1e-8) -> None:
+    """Assumption 1 minus symmetry and connectivity: square, nonnegative,
+    rows AND columns sum to 1.  The per-round validator for TopologyBank
+    rounds — directed one-peer rounds pass here but fail check_mixing, and
+    a single round need not be connected (the period product is)."""
+    W = np.asarray(W)
+    n = W.shape[0]
+    assert W.shape == (n, n), "W must be square"
+    assert np.all(W >= -atol), "W must be nonnegative"
+    assert np.allclose(W.sum(axis=1), 1.0, atol=atol), "rows must sum to 1"
+    assert np.allclose(W.sum(axis=0), 1.0, atol=atol), "columns must sum to 1"

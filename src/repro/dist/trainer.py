@@ -28,7 +28,12 @@ torus_2d / erdos_renyi / any Assumption-1 graph): each
 ``Topology.permute_rounds()`` entry is one partial permutation of the
 flattened agent axes, exchanged and decoded at the receiver — the only
 collectives of an iteration, and the reason the lowering contains
-collective-permute ops.
+collective-permute ops.  A ``TopologyBank`` (time-varying gossip:
+exp-onepeer, random-matching, any periodic schedule) compiles each round
+graph's permute schedule into one step and selects the step's graph with
+``lax.switch(step % P)`` inside the shard_map — deg-1 one-peer rounds ship
+exactly ONE ppermute per step, so per-step wire traffic is proportional
+to the round degree, not the union graph's.
 
 Codes on the wire: compressed algorithms encode each leaf's message with
 the Compressor flat protocol (``encode_blocks`` / ``decode_blocks``,
@@ -98,10 +103,17 @@ class DistConfig:
 
     topology selects the communication graph the agents gossip over: None
     -> the paper's uniform ring; a core/topology builder name ("ring",
-    "torus", "erdos_renyi", "chain", "star", "full"); a Topology instance
-    (n must equal the mesh's agent count); or a callable n_agents ->
-    Topology.  The trainer derives its shard_map collective-permute
-    schedule from Topology.permute_rounds() — no ring assumption.
+    "torus", "erdos_renyi", "chain", "star", "full", or a time-varying
+    family like "exp-onepeer" / "random-matching"); a Topology or
+    TopologyBank instance (n must equal the mesh's agent count); a list of
+    round graphs (validated into a bank); or a callable n_agents ->
+    Topology | TopologyBank.  The trainer derives one shard_map
+    collective-permute schedule per round graph from
+    Topology.permute_rounds() — no ring assumption — and on a bank selects
+    the step's schedule with lax.switch(step % P) inside the shard_map.
+    Periodic schedules (with_schedule(fn, period=P)) materialize into
+    banks; live periodless schedule callables raise (the compiled step
+    cannot trace them and would silently freeze the graph at topo(0)).
 
     hyper sets the algorithm hyper-parameters; every value is a Schedule
     (float or callable of the step counter).  Three forms:
@@ -177,25 +189,32 @@ def _hyper_dict(dc: DistConfig) -> Dict[str, Any]:
     return dict(h)
 
 
-def topology_of(dc: DistConfig, n_agents: int) -> topology.Topology:
+def topology_of(dc: DistConfig, n_agents: int):
     """Resolve DistConfig.topology for an n_agents mesh (see the DistConfig
-    docstring for the accepted forms).  Scheduled Topologies resolve at
-    k=0 — the trainer compiles one static gossip schedule."""
+    docstring for the accepted forms) to a Topology or TopologyBank.
+
+    Everything funnels through core/topology.materialize: a TopologyBank
+    or list of rounds passes through bank validation, a periodic schedule
+    (``with_schedule(fn, period=P)``) expands into the bank of its P
+    rounds, and a live (periodless) schedule raises — the trainer compiles
+    ONE gossip schedule into the step, so a callable it cannot enumerate
+    would silently freeze at topo(0)."""
     t = dc.topology
     if t is None:
         return topology.ring(n_agents)
     if isinstance(t, str):
         topo = topology.make_mixing(t, n_agents)
-    elif isinstance(t, topology.Topology):
+    elif isinstance(t, (topology.Topology, topology.TopologyBank)):
         topo = t
     elif callable(t):
-        topo = topology.as_topology(t(n_agents))
+        topo = t(n_agents)
     else:
-        topo = topology.as_topology(t)
-    topo = topo(0)                       # resolve a schedule hook uniformly
-    assert topo.n == n_agents, (
-        f"DistConfig.topology has n={topo.n} agents but the mesh's agent "
-        f"axes hold {n_agents}")
+        topo = t
+    topo = topology.materialize(topo, name="dist")
+    if topo.n != n_agents:
+        raise ValueError(
+            f"DistConfig.topology has n={topo.n} agents but the mesh's agent "
+            f"axes hold {n_agents}")
     return topo
 
 
@@ -341,36 +360,62 @@ def make_train_step(cfg, mesh, prof: shr.ShardingProfile, dc: DistConfig):
     # topology_of would hand a non-deterministic DistConfig.topology
     # callable a SECOND, different graph than the one engine_of validated
     topo = eng.topology if eng is not None else topology_of(dc, A)
-    # the shard_map gossip schedule, derived from the topology's neighbor
-    # structure: each round is a partial permutation of the flattened agent
-    # axes (jax.lax.ppermute's native form) plus the per-receiver weight
-    rounds = topo.permute_rounds()
+    # a TopologyBank compiles to ONE step whose gossip schedule is selected
+    # per iteration: each bank round graph gets its own static
+    # permute_rounds decomposition, and the step's graph (step % P) is
+    # picked by lax.switch inside the shard_map — the branch index is the
+    # replicated step counter, so every device takes the same branch and
+    # the ppermutes inside it stay collective-legal.  A static Topology is
+    # the P = 1 case and skips the switch entirely (bit-identical to the
+    # pre-bank trainer).
+    is_bank = isinstance(topo, topology.TopologyBank)
+    bank_graphs = tuple(topo.rounds) if is_bank else (topo,)
+    P_bank = len(bank_graphs)
     # fault injection: an active FaultModel masks the gossip rounds with
     # the same deterministic link_ok realization as the single-device
     # engines (keyed on state.step, so a checkpoint-resumed run sees the
     # identical fault schedule).  src_of[r][j] = the agent j receives from
     # in round r (-1: no edge) — the static arrays the per-step masks are
-    # derived from.
+    # derived from; on a bank the masks compose with the STEP's graph, so
+    # only links that exist in round step % P can drop.
     fm = (dc.faults if dc.faults is not None and dc.faults.is_active
           else None)
-    src_of = []
-    for pairs, _ in rounds:
-        s = np.full((A,), -1, np.int32)
-        for i, j in pairs:
-            s[j] = i
-        src_of.append(s)
-    # the factored uniform form is valid only when every round is a FULL
-    # permutation (every agent receives every round — ring, fully
-    # connected): on partial rounds it would add the decoded ppermute
-    # zero-fill at full weight, silently relying on decode(0) == 0.
-    # Graphs with partial rounds (torus with collapsed sides, ER) take the
-    # per-receiver weighted branch, where rw[idx] == 0 masks the fill.
-    # Faulted runs always take the weighted branch — the mask substitution
-    # is per receiver.
-    uniform = (topo.uniform_weights
-               if fm is None and all(len(pairs) == A for pairs, _ in rounds)
-               else None)
-    self_w = topo.weights[:, 0].copy()   # per-agent self weight (non-uniform)
+
+    def _schedule_of(bt: topology.Topology):
+        """One bank round graph -> (permute rounds, per-round receive
+        sources, factored-uniform weights or None, per-agent self weight).
+
+        The factored uniform form is valid only when every round is a FULL
+        permutation (every agent receives every round — ring, fully
+        connected, one-peer exponential): on partial rounds it would add
+        the decoded ppermute zero-fill at full weight, silently relying on
+        decode(0) == 0.  Graphs with partial rounds (torus with collapsed
+        sides, ER) take the per-receiver weighted branch, where rw[idx] ==
+        0 masks the fill.  Faulted runs always take the weighted branch —
+        the mask substitution is per receiver."""
+        rounds = bt.permute_rounds()
+        src_of = []
+        for pairs, _ in rounds:
+            s = np.full((A,), -1, np.int32)
+            for i, j in pairs:
+                s[j] = i
+            src_of.append(s)
+        uniform = (bt.uniform_weights
+                   if fm is None and all(len(p) == A for p, _ in rounds)
+                   else None)
+        self_w = bt.weights[:, 0].copy()  # per-agent self weight
+        return rounds, src_of, uniform, self_w
+
+    schedules = [_schedule_of(bt) for bt in bank_graphs]
+    # per-round receive sources stacked (P, R_max, A) and padded with -1
+    # (no edge), so a faulted step can jnp.take the LIVE round's rows by
+    # step % P and realize only that graph's link masks — per-step fault
+    # work is O(rounds of one graph), not O(sum over the whole bank)
+    _r_max = max((len(s[1]) for s in schedules), default=0)
+    src_stack = np.full((P_bank, max(_r_max, 1), A), -1, np.int32)
+    for _b, (_, _src_of_b, _, _) in enumerate(schedules):
+        for _r, _s in enumerate(_src_of_b):
+            src_stack[_b, _r] = _s
     axis_name = (prof.agent_axes if len(prof.agent_axes) > 1
                  else prof.agent_axes[0])
     spec = P(prof.agent_axes)            # leading agent axis; rest replicated
@@ -423,25 +468,26 @@ def make_train_step(cfg, mesh, prof: shr.ShardingProfile, dc: DistConfig):
             lambda l: jax.lax.pmean(l, axis), t),
             in_specs=(spec,), out_specs=spec)(tree)
 
-    def gossip_payloads(payloads, masks=None):
+    def gossip_payloads(payloads, masks=None, step=None):
         """Per leaf: (q, W q) with q the receiver-decoded own payload and
-        W q its neighbor-exchange mix over `topo` — only the payload crosses
-        agents (quantizer codes packed into uint32 words when wire_pack).
-        Exact algorithms ship {"values": raw_leaf} with identity decode —
-        the uncompressed ppermute exchange.
+        W q its neighbor-exchange mix over the STEP's graph — only the
+        payload crosses agents (quantizer codes packed into uint32 words
+        when wire_pack).  Exact algorithms ship {"values": raw_leaf} with
+        identity decode — the uncompressed ppermute exchange.
 
         The collective schedule is Topology.permute_rounds(): one ppermute
         per partial permutation of directed edges, decoded at the receiver
         and combined with that round's receiver weight.  Uniform-weight
         graphs whose rounds are all FULL permutations (ring, fully
-        connected) take the factored `w_self * own + w_nb * sum(rounds)`
-        form — for the ring (rounds = the classic fwd/bwd pair) this is
-        expression-for-expression the pre-Topology ppermute path, so its
-        trajectories are bit-identical.  Everything else (metropolis
-        weights, or partial rounds like the torus's wrap edges) looks its
-        per-receiver round weight up by jax.lax.axis_index — a receiver
-        with no edge in a round gets ppermute's zero fill, masked by
-        rw[idx] == 0 regardless of what decode makes of the fill.
+        connected, one-peer exponential) take the factored `w_self * own +
+        w_nb * sum(rounds)` form — for the ring (rounds = the classic
+        fwd/bwd pair) this is expression-for-expression the pre-Topology
+        ppermute path, so its trajectories are bit-identical.  Everything
+        else (metropolis weights, or partial rounds like the torus's wrap
+        edges) looks its per-receiver round weight up by
+        jax.lax.axis_index — a receiver with no edge in a round gets
+        ppermute's zero fill, masked by rw[idx] == 0 regardless of what
+        decode makes of the fill.
 
         BOTH q and wq are decoded inside the one shard_map, from the same
         materialized payload operand.  Decoding q from a second copy of the
@@ -450,14 +496,44 @@ def make_train_step(cfg, mesh, prof: shr.ShardingProfile, dc: DistConfig):
         disagree on knife-edge elements — the own-decode and the wire would
         carry different codes.
 
-        ``masks`` (faulted runs only) is one (A,) bool array per round —
-        the deterministic link_ok realization for this step, replicated
-        across the mesh.  A receiver whose round-r link dropped substitutes
-        its OWN decoded payload for the undelivered one at the round's
-        weight — exactly faults.renormalize_*'s mass-to-self degradation,
-        so the realized mixing stays row-stochastic (and doubly stochastic
-        for the symmetric link-drop masks LEAD needs)."""
-        def body(pls, msks=None):
+        ``masks`` (faulted runs only) is the (R_max, A) bool link_ok
+        realization for the STEP's round graph — already selected by
+        step % P at the caller, so the step never realizes masks for the
+        P - 1 graphs it does not exchange; replicated across the mesh,
+        row r read by the branch's gossip round r (padding rows beyond a
+        graph's own round count are never read).  A receiver whose
+        round-r link dropped substitutes its OWN decoded payload for the
+        undelivered one at the round's weight — exactly
+        faults.renormalize_*'s mass-to-self degradation, so the realized
+        mixing stays row-stochastic (and doubly stochastic for the
+        symmetric link-drop masks LEAD needs).
+
+        ``step`` (TopologyBank runs only) is the replicated iteration
+        counter: lax.switch(step % P) selects the graph's branch, whose
+        ppermutes are the static schedule of that round graph.  Static
+        topologies never pass it — their call path (and jaxpr) is the
+        pre-bank one."""
+        def mix_one(sched, own, wire, dec, msks):
+            rounds, _, uniform, self_w = sched
+            if not rounds:                           # single agent: W = [1]
+                return own
+            if uniform is not None:
+                w_self, w_nb = uniform
+                acc = None
+                for pairs, _ in rounds:
+                    recv = dec(_pperm(wire, pairs))
+                    acc = recv if acc is None else acc + recv
+                return w_self * own + w_nb * acc
+            idx = _agent_index()
+            wq = jnp.asarray(self_w, own.dtype)[idx] * own
+            for r, (pairs, rw) in enumerate(rounds):
+                recv = dec(_pperm(wire, pairs))
+                if msks is not None:
+                    recv = jnp.where(msks[r][idx], recv, own)
+                wq = wq + jnp.asarray(rw, own.dtype)[idx] * recv
+            return wq
+
+        def body(pls, msks=None, stp=None):
             outs = []
             for pl in pls:
                 if dc.wire_pack and "code" in pl:
@@ -476,30 +552,37 @@ def make_train_step(cfg, mesh, prof: shr.ShardingProfile, dc: DistConfig):
                     dec = (comp.decode_blocks if comp is not None
                            else (lambda w: w["values"]))
                 own = dec(wire)
-                if not rounds:                       # single agent: W = [1]
-                    wq = own
-                elif uniform is not None:
-                    w_self, w_nb = uniform
-                    acc = None
-                    for pairs, _ in rounds:
-                        recv = dec(_pperm(wire, pairs))
-                        acc = recv if acc is None else acc + recv
-                    wq = w_self * own + w_nb * acc
+                if P_bank == 1:
+                    wq = mix_one(schedules[0], own, wire, dec, msks)
                 else:
-                    idx = _agent_index()
-                    wq = jnp.asarray(self_w, own.dtype)[idx] * own
-                    for r, (pairs, rw) in enumerate(rounds):
-                        recv = dec(_pperm(wire, pairs))
-                        if msks is not None:
-                            recv = jnp.where(msks[r][idx], recv, own)
-                        wq = wq + jnp.asarray(rw, own.dtype)[idx] * recv
+                    # msks (if any) already holds the live round's masks;
+                    # branch b only runs when step % P == b, so every
+                    # branch reads the same selected rows
+                    branches = [
+                        functools.partial(
+                            lambda sched, o, w: mix_one(sched, o, w,
+                                                        dec, msks),
+                            sched)
+                        for sched in schedules]
+                    wq = jax.lax.switch(
+                        jnp.asarray(stp, jnp.int32) % P_bank, branches,
+                        own, wire)
                 outs.append((own, wq))
             return outs
-        if masks is None:
+
+        if masks is None and step is None:
             return smap(lambda pls: body(pls),
                         in_specs=(spec,), out_specs=spec)(payloads)
-        return smap(body, in_specs=(spec, P()),
-                    out_specs=spec)(payloads, tuple(masks))
+        if masks is None:
+            return smap(lambda pls, stp: body(pls, None, stp),
+                        in_specs=(spec, P()),
+                        out_specs=spec)(payloads, step)
+        if step is None:
+            return smap(lambda pls, mk: body(pls, mk),
+                        in_specs=(spec, P()),
+                        out_specs=spec)(payloads, masks)
+        return smap(body, in_specs=(spec, P(), P()),
+                    out_specs=spec)(payloads, masks, step)
 
     # -- the step -----------------------------------------------------------
     def step(state: TrainState, batch: Dict[str, jnp.ndarray], key):
@@ -550,16 +633,24 @@ def make_train_step(cfg, mesh, prof: shr.ShardingProfile, dc: DistConfig):
 
         masks = None
         if fm is not None:
-            # one (A,) survival mask per gossip round, from the same
-            # counter-hash realization the simulator uses (keyed on
-            # state.step — replayable across restarts and checkpoints)
-            ids = jnp.arange(A)
-            masks = [fm.link_ok(state.step, jnp.asarray(s), ids)
-                     & jnp.asarray(s >= 0) for s in src_of]
-            metrics["dropped_links"] = sum(
-                jnp.sum(jnp.asarray(s >= 0) & ~m).astype(jnp.float32)
-                for s, m in zip(src_of, masks))
-        q_wqs = gossip_payloads(payloads, masks)
+            # (R_max, A) survival masks for the LIVE round graph only:
+            # select the step's receive sources first (step % P), then
+            # realize the counter-hash link_ok over them — same
+            # realization the simulator uses (keyed on state.step —
+            # replayable across restarts and checkpoints), but the hash
+            # and reduction work never touches the P-1 graphs that are
+            # not exchanged this step.  Padded rows (src -1) are masked
+            # by `present`, so dropped_links counts real edges of round
+            # step % P alone.
+            src_sel = (jnp.asarray(src_stack[0]) if P_bank == 1
+                       else jnp.take(jnp.asarray(src_stack),
+                                     state.step % P_bank, axis=0))
+            present = src_sel >= 0
+            masks = fm.link_ok(state.step, src_sel, jnp.arange(A)) & present
+            metrics["dropped_links"] = jnp.sum(present
+                                               & ~masks).astype(jnp.float32)
+        q_wqs = gossip_payloads(payloads, masks,
+                                step=state.step if P_bank > 1 else None)
 
         new_x = []
         new_algo = {f: [] for f in leaves_algo}

@@ -524,6 +524,85 @@ def case_topology_multihost():
     assert 0 < bits < 0.25 * raw
 
 
+def case_timevarying_multihost():
+    """TopologyBank through the shard_map: the trainer compiles every bank
+    round's permute schedule into ONE jitted step and lax.switch(step % P)
+    selects the step's graph.  DGD (deterministic, exact payload) is pinned
+    against a host dense reference that mixes with W_{k % P} each step — a
+    frozen graph (the pre-refactor topo(0) behavior) fails the pin from
+    step 1, because the one-peer rounds are different permutations.  LEAD
+    then trains on the bank (its apply_stage recomputes H_w with the step's
+    graph) keeping the 1^T D = 0 invariant, and a faulted bank run drops
+    only links that exist in the step's round."""
+    from repro.core.faults import FaultModel
+
+    bank = topology.exponential_onepeer(4)
+    assert bank.period == 2 and bank.deg_max == 1
+    mesh, cfg, prof, dc, state, batch, key, ds = _setup("dgd", topology=bank)
+    step = jax.jit(make_train_step(cfg, mesh, prof, dc))
+    Ws = [jnp.asarray(W, jnp.float32) for W in np.asarray(bank.Ws)]
+    grad_fn = jax.vmap(jax.grad(lambda p, b: tfm.loss_fn(p, cfg, b)[0]))
+    eta = engine_of(dc, 4).eta
+    x_ref = jax.device_get(state.params)
+    with set_mesh(mesh):
+        for i in range(4):
+            g = jax.device_get(grad_fn(jax.device_put(x_ref), batch))
+            W = Ws[i % bank.period]
+
+            def mix_step(xl, gl, W=W):
+                return jnp.tensordot(W, xl, axes=([1], [0])) - eta * gl
+
+            x_ref = tree_map(mix_step, x_ref, g)
+            state, _ = step(state, batch, jax.random.fold_in(key, i))
+    err = max(float(jnp.max(jnp.abs(a - b)))
+              for a, b in zip(jax.tree_util.tree_leaves(
+                                  jax.device_get(state.params)),
+                              jax.tree_util.tree_leaves(x_ref)))
+    scale = max(float(jnp.max(jnp.abs(a)))
+                for a in jax.tree_util.tree_leaves(x_ref))
+    print("BANK_DGD_ERR", err, "SCALE", scale)
+    assert err < 1e-4 * max(scale, 1.0), err
+
+    # LEAD on the bank: compressed payloads over the round graphs, H_w
+    # recomputed per step — finite, loss down, dual sum zero
+    mesh, cfg, prof, dc, state, batch, key, ds = _setup("lead", topology=bank)
+    step = jax.jit(make_train_step(cfg, mesh, prof, dc))
+    loss_fn_v = jax.jit(jax.vmap(lambda p, b: tfm.loss_fn(p, cfg, b)[0]))
+    with set_mesh(mesh):
+        l0 = float(jnp.mean(loss_fn_v(state.params, batch)))
+        for i in range(8):
+            b = jax.device_put(lm_batch(ds, i),
+                               NamedSharding(mesh, shr.train_batch_spec(prof)))
+            state, metrics = step(state, b, jax.random.fold_in(key, i))
+        l1 = float(jnp.mean(loss_fn_v(state.params, batch)))
+    dsum = max(float(jnp.max(jnp.abs(jnp.sum(l, 0))))
+               for l in jax.tree_util.tree_leaves(state.algo["d"]))
+    bits = float(metrics["bits_per_agent"])
+    print("BANK_LEAD", l0, "->", l1, "dual", dsum, "bits", bits)
+    assert np.isfinite(l1) and l1 < l0, (l0, l1)
+    assert dsum < 1e-3, dsum
+    raw = 32 * sum(l[0].size for l in jax.tree_util.tree_leaves(state.params))
+    assert 0 < bits < 0.25 * raw
+
+    # faulted bank run: the link masks compose with the step's round graph
+    fm = FaultModel(seed=5, link_drop=0.3)
+    mesh, cfg, prof, dc, state, batch, key, ds = _setup(
+        "lead", topology=bank, faults=fm)
+    step = jax.jit(make_train_step(cfg, mesh, prof, dc))
+    dropped = 0.0
+    with set_mesh(mesh):
+        for i in range(6):
+            state, m = step(state, batch, jax.random.fold_in(key, i))
+            d_i = float(m["dropped_links"])
+            # deg-1 rounds: at most ONE directed link per agent per step
+            assert 0 <= d_i <= 4, d_i
+            dropped += d_i
+    finite = all(bool(jnp.all(jnp.isfinite(l)))
+                 for l in jax.tree_util.tree_leaves(state.params))
+    print("BANK_FAULTED dropped", dropped, "finite", finite)
+    assert dropped > 0 and finite
+
+
 if __name__ == "__main__":
     case = sys.argv[1]
     {"nids_equivalence": case_nids_equivalence,
@@ -533,5 +612,6 @@ if __name__ == "__main__":
      "dryrun_multipod": case_dryrun_multipod,
      "perf_variants": case_perf_variants,
      "faulted_checkpoint_resume": case_faulted_checkpoint_resume,
-     "topology_multihost": case_topology_multihost}[case]()
+     "topology_multihost": case_topology_multihost,
+     "timevarying_multihost": case_timevarying_multihost}[case]()
     print("PASS", case)

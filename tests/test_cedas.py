@@ -1,0 +1,372 @@
+"""CEDAS engine + time-varying bank contracts.
+
+Four pins, mirroring the family's equivalence conventions
+(tests/test_flat_baselines.py):
+
+  * flat vs tree — FlatCEDASEngine free-runs the tree CEDAS trajectory
+    draw for draw on dense gossip (static ring AND one-peer exponential
+    bank), and matches per step under sparse neighbor exchange (only the
+    mixing's float summation order separates them);
+  * algebraic reduction — with Identity compression and alpha = gamma = 1,
+    CEDAS *is* exact diffusion: its iterates follow D2's eq. (15) recursion
+    with Wtilde = (I+W)/2 exactly;
+  * static == period-1 bank — wrapping a static graph in a one-round
+    TopologyBank changes nothing (LEAD, CHOCO, DCD, CEDAS), so the bank
+    path is a strict generalization of the static path;
+  * multi-round bank invariant — every engine with a mixed companion
+    buffer (CHOCO/DCD's xhat_w, CEDAS's hw) RECOMPUTES it with the step's
+    round graph: xhat_w == W_{k mod P} xhat holds after every step of a
+    period-3 bank (the incremental form drifts from step P+1 on), and
+    uncompressed CHOCO on the bank matches a hand-rolled W_k reference;
+  * time-varying stability boundary — CEDAS and LEAD converge over
+    symmetric deg-1 matching banks (and LEAD over directed one-peer up to
+    n=16), while on exponential_onepeer(32) the LEAD dual recursion's
+    period monodromy has radius > 1 at gamma = 1 — the measured
+    impossibility documented in docs/ARCHITECTURE.md ("Time-varying
+    gossip") and benchmarks/bench_gossip.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import topology
+from repro.core.baselines import CEDAS
+from repro.core.compression import Identity, QuantizePNorm, RandK
+from repro.core.convex import LinearRegression
+from repro.core.engines import engine_for, flat_twin, is_exact
+from repro.core.simulator import run
+
+N, D = 8, 768
+STEPS = 12
+ATOL = 1e-5
+NB_ATOL = 3e-5           # neighbor exchange: float summation order only
+
+TOPOS = {
+    "ring": lambda: topology.ring(N),
+    "onepeer": lambda: topology.exponential_onepeer(N),   # period-3 bank
+}
+COMPRESSORS = {
+    "quant4": QuantizePNorm(bits=4, block=512),
+    "randk": RandK(ratio=0.5),
+    "identity": Identity(),
+}
+
+
+def _prob():
+    key = jax.random.PRNGKey(0)
+    return key, LinearRegression.generate(key, n_agents=N, m=64, d=D)
+
+
+def _compare(eng, st_f, st_t, k):
+    for f in st_t._fields:
+        if f == "k":
+            continue
+        ref = getattr(st_t, f)
+        dev = float(jnp.max(jnp.abs(eng.unblockify(getattr(st_f, f)) - ref)))
+        tol = ATOL * (1.0 + float(jnp.max(jnp.abs(ref))))
+        assert dev <= tol, f"step {k}, field {f}: deviation {dev}"
+
+
+@pytest.mark.parametrize("comp_name", sorted(COMPRESSORS))
+@pytest.mark.parametrize("topo_name", sorted(TOPOS))
+def test_cedas_flat_free_runs_tree_dense(topo_name, comp_name):
+    """Dense gossip: the flat engine free-runs the tree CEDAS trajectory
+    (same per-agent compressor draws) on the static ring and on the
+    one-peer bank — every state field, every step."""
+    key, prob = _prob()
+    tree = CEDAS(topology=TOPOS[topo_name](), compressor=COMPRESSORS[comp_name],
+                 eta=0.02, gamma=0.5, alpha=0.5)
+    eng = flat_twin(tree, D)
+    tree_step = jax.jit(tree.step_with_metrics)
+    flat_step = jax.jit(eng.step_with_wire)
+
+    x0 = jnp.zeros((N, D))
+    g0 = prob.full_grad(x0)
+    st_t = tree.init(x0, g0, key)
+    st_f = eng.init(x0, g0, key)
+    for k in range(STEPS):
+        kk = jax.random.fold_in(key, k)
+        st_t, cerr_t = tree_step(st_t, prob.full_grad(st_t.x), kk)
+        st_f, cerr_f, _ = flat_step(st_f, prob.full_grad(eng.x_of(st_f)), kk)
+        _compare(eng, st_f, st_t, k)
+        np.testing.assert_allclose(float(cerr_f), float(cerr_t), atol=1e-5)
+
+
+@pytest.mark.parametrize("topo_name", sorted(TOPOS))
+def test_cedas_flat_neighbor_step_equals_tree(topo_name):
+    """Sparse neighbor exchange over the bank's round tables: from each
+    common state along a real tree trajectory, one flat step matches the
+    tree step (which mixes densely with the same W_k) to summation-order
+    tolerance — per-step equivalence holds on ANY bank, independent of
+    long-run stability."""
+    key, prob = _prob()
+    tree = CEDAS(topology=TOPOS[topo_name](), compressor=COMPRESSORS["quant4"],
+                 eta=0.02, gamma=0.5, alpha=0.5)
+    eng = flat_twin(tree, D, gossip="neighbor")
+    tree_step = jax.jit(tree.step_with_metrics)
+    flat_step = jax.jit(eng.step_with_wire)
+
+    x0 = jnp.zeros((N, D))
+    g0 = prob.full_grad(x0)
+    st = tree.init(x0, g0, key)
+    for k in range(STEPS):
+        kk = jax.random.fold_in(key, k)
+        g = prob.full_grad(st.x)
+        st_t, _ = tree_step(st, g, kk)
+        vals = {f: eng.blockify(v) if getattr(v, "ndim", 0) == 2 else v
+                for f, v in st._asdict().items()}
+        st_f, _, _ = flat_step(type(st)(**vals), g, kk)
+        for f in st_t._fields:
+            if f == "k":
+                continue
+            ref = getattr(st_t, f)
+            dev = float(jnp.max(jnp.abs(eng.unblockify(getattr(st_f, f))
+                                        - ref)))
+            tol = NB_ATOL * (1.0 + float(jnp.max(jnp.abs(ref))))
+            assert dev <= tol, f"step {k}, field {f}: deviation {dev}"
+        st = st_t
+
+
+def test_cedas_identity_is_exact_diffusion_d2():
+    """alpha = gamma = 1, no compression: CEDAS's iterates follow D2's
+    eq. (15) recursion x+ = (I+W)/2 (2x - x_prev - eta g + eta g_prev)
+    exactly (seeded from CEDAS's own first iterate x1 = Wtilde (x0 - eta
+    g0)) — the compressed engine IS exact diffusion at its exact limit."""
+    key, prob = _prob()
+    eta = 0.02
+    ring = topology.ring(N)
+    tree = CEDAS(topology=ring, compressor=Identity(), eta=eta, gamma=1.0,
+                 alpha=1.0)
+    Wt = jnp.asarray(0.5 * (np.eye(N) + np.asarray(ring)), jnp.float32)
+
+    x0 = jnp.zeros((N, D))
+    g0 = prob.full_grad(x0)
+    st = tree.init(x0, g0, key)
+    st = tree.step(st, g0, key)                  # k=0: x1 = Wt (x0 - eta g0)
+    np.testing.assert_allclose(np.asarray(st.x),
+                               np.asarray(Wt @ (x0 - eta * g0)),
+                               atol=1e-6)
+    x_prev, x_ref, g_prev = x0, st.x, g0
+    for k in range(1, STEPS):
+        g = prob.full_grad(x_ref)
+        st = tree.step(st, g, jax.random.fold_in(key, k))
+        inner = 2.0 * x_ref - x_prev - eta * g + eta * g_prev
+        x_prev, x_ref, g_prev = x_ref, Wt @ inner, g
+        dev = float(jnp.max(jnp.abs(st.x - x_ref)))
+        assert dev <= 1e-4 * (1.0 + float(jnp.max(jnp.abs(x_ref)))), (k, dev)
+
+
+@pytest.mark.parametrize("algo", ["lead", "choco", "dcd", "cedas"])
+@pytest.mark.parametrize("gossip", ["dense", "neighbor"])
+def test_static_equals_period1_bank(algo, gossip):
+    """A one-round TopologyBank is the static graph: from each common
+    state along a real trajectory, one bank step matches one static step
+    to f32 reassociation tolerance — the bank branch recomputes the
+    reference mix (W_k h) where the static branch accumulates it
+    incrementally, equal in exact arithmetic.  The static path itself is
+    bit-untouched by the refactor (its jaxpr carries no bank machinery;
+    the family equivalence suites pin its trajectories)."""
+    key, prob = _prob()
+    ring = topology.ring(N)
+    comp = QuantizePNorm(bits=4, block=512)
+    mk = lambda topo: engine_for(topo, comp, D, algorithm=algo,
+                                 gossip=gossip, eta=0.02)
+    eng_s, eng_b = mk(ring), mk(topology.bank([ring]))
+    step_s = jax.jit(eng_s.step_with_wire)
+    step_b = jax.jit(eng_b.step_with_wire)
+
+    x0 = jnp.zeros((N, D))
+    g0 = prob.full_grad(x0)
+    st = eng_s.init(x0, g0, key)
+    st_b0 = eng_b.init(x0, g0, key)
+    for f in st._fields:                     # identical init
+        np.testing.assert_array_equal(np.asarray(getattr(st, f)),
+                                      np.asarray(getattr(st_b0, f)), err_msg=f)
+    for k in range(STEPS):
+        kk = jax.random.fold_in(key, k)
+        g = prob.full_grad(eng_s.x_of(st))
+        st_s, cerr_s, bits_s = step_s(st, g, kk)
+        st_b, cerr_b, bits_b = step_b(st, g, kk)
+        for f in st_s._fields:
+            if f == "k":
+                continue
+            ref = getattr(st_s, f)
+            dev = float(jnp.max(jnp.abs(getattr(st_b, f) - ref)))
+            tol = ATOL * (1.0 + float(jnp.max(jnp.abs(ref))))
+            assert dev <= tol, f"step {k}, field {f}: deviation {dev}"
+        assert float(bits_s) == float(bits_b)
+        st = st_s
+
+
+@pytest.mark.parametrize("algo", ["choco", "dcd", "cedas"])
+@pytest.mark.parametrize("gossip", ["dense", "neighbor"])
+def test_hat_invariant_on_multiround_bank(algo, gossip):
+    """On a MULTI-round bank the mixed-companion invariant must hold after
+    every step with the STEP's round graph: xhat_w == W_k xhat (hw == W_k h
+    for CEDAS).  This is exactly what the incremental update loses — it
+    accumulates W_j q over past rounds' graphs, so on a period-3 bank it
+    drifts from step P+1 on.  Period-1 banks cannot see the bug (incremental
+    == recomputed trivially); this pin runs the real time-varying path."""
+    key, prob = _prob()
+    bk = topology.exponential_onepeer(N)                 # period 3
+    assert bk.period > 1
+    eng = engine_for(bk, QuantizePNorm(bits=4, block=512), D, algorithm=algo,
+                     gossip=gossip, eta=0.02)
+    step = jax.jit(eng.step_with_wire)
+    mixed, own = {"choco": ("xhat_w", "xhat"), "dcd": ("xhat_w", "xhat"),
+                  "cedas": ("hw", "h")}[algo]
+    x0 = jnp.zeros((N, D))
+    st = eng.init(x0, prob.full_grad(x0), key)
+    Ws = np.asarray(bk.Ws)
+    for k in range(STEPS):
+        st, _, _ = step(st, prob.full_grad(eng.x_of(st)),
+                        jax.random.fold_in(key, k))
+        W_k = Ws[k % bk.period]                          # the step's graph
+        ref = W_k @ np.asarray(eng.unblockify(getattr(st, own)))
+        dev = float(np.max(np.abs(np.asarray(eng.unblockify(
+            getattr(st, mixed))) - ref)))
+        tol = NB_ATOL * (1.0 + float(np.max(np.abs(ref))))
+        assert dev <= tol, f"step {k}: {mixed} != W_k {own} by {dev}"
+
+
+def test_choco_bank_matches_hand_reference():
+    """Uncompressed CHOCO over the period-3 one-peer bank against a
+    hand-rolled dense reference that mixes with W_{k mod P} and recomputes
+    xhat_w+ = W_k (xhat + q) — pins the whole bank step (x update
+    included), not just the invariant.  Identity wire: deterministic, so
+    the comparison is exact to f32 reassociation."""
+    key, prob = _prob()
+    bk = topology.exponential_onepeer(N)
+    eta, gamma = 0.02, 0.8
+    eng = engine_for(bk, None, D, algorithm="choco", eta=eta, gamma=gamma)
+    step = jax.jit(eng.step_with_wire)
+    Ws = np.asarray(bk.Ws, np.float64)
+
+    x0 = jnp.zeros((N, D))
+    st = eng.init(x0, prob.full_grad(x0), key)
+    x = np.zeros((N, D)); xhat = np.zeros((N, D))
+    for k in range(STEPS):
+        g = np.asarray(prob.full_grad(jnp.asarray(x, jnp.float32)),
+                       np.float64)
+        st, _, _ = step(st, prob.full_grad(eng.x_of(st)),
+                        jax.random.fold_in(key, k))
+        W_k = Ws[k % bk.period]
+        x_half = x - eta * g
+        q = x_half - xhat                                # Identity wire
+        xhat = xhat + q
+        xhat_w = W_k @ xhat                              # recomputed
+        x = x_half + gamma * (xhat_w - xhat)
+        for f, ref in (("x", x), ("xhat", xhat), ("xhat_w", xhat_w)):
+            dev = float(np.max(np.abs(
+                np.asarray(eng.unblockify(getattr(st, f)), np.float64) - ref)))
+            tol = 1e-4 * (1.0 + float(np.max(np.abs(ref))))
+            assert dev <= tol, f"step {k}, field {f}: deviation {dev}"
+
+
+def test_choco_converges_on_matching_bank():
+    """End to end: 4-bit CHOCO over the symmetric random-matching bank at
+    n=32 contracts to its eta-proportional heterogeneity neighborhood
+    (CHOCO has no gradient correction) — measured consensus 1.3e-2 with
+    the recomputed xhat_w, versus 4.6e-1 (35x worse, and eta-independent)
+    with the incremental form whose xhat_w integrates past rounds' graphs.
+    The 5e-2 threshold separates the two regimes by an order of magnitude
+    each way."""
+    key = jax.random.PRNGKey(1)
+    prob = LinearRegression.generate(key, n_agents=32, m=64, d=D)
+    mu, L = prob.mu_L
+    eng = engine_for(topology.random_matching(32, rounds=8),
+                     QuantizePNorm(bits=4, block=512), D,
+                     algorithm="choco", eta=0.1 / L, gamma=0.8)
+    tr = run(eng, prob, prob.x_star, iters=1200, key=key)
+    assert float(tr.consensus[-1]) < 5e-2, float(tr.consensus[-1])
+    assert float(tr.dist[-1]) < 0.01 * float(tr.dist[0]), \
+        (float(tr.dist[0]), float(tr.dist[-1]))
+
+
+def test_cedas_converges_on_matching_bank():
+    """End to end on the time-varying path: 4-bit CEDAS over a symmetric
+    random-matching bank (deg <= 1 per step) at n=32 converges to the
+    consensual optimum — hw recomputed with the step's graph is what makes
+    this work (the incremental sum stalls at O(1); see the engine
+    docstring)."""
+    key = jax.random.PRNGKey(1)
+    prob = LinearRegression.generate(key, n_agents=32, m=64, d=D)
+    mu, L = prob.mu_L
+    eng = engine_for(topology.random_matching(32, rounds=8),
+                     QuantizePNorm(bits=4, block=512), D,
+                     algorithm="cedas", eta=1.0 / L, gamma=0.25, alpha=1.0)
+    tr = run(eng, prob, prob.x_star, iters=1200, key=key)
+    assert float(tr.dist[-1]) < 1e-3, float(tr.dist[-1])
+    assert float(tr.consensus[-1]) < 1e-5, float(tr.consensus[-1])
+
+
+def test_lead_consensus_on_deg1_banks():
+    """LEAD over deg-1 banks at its stable configurations: directed
+    one-peer exponential at n=16 (gamma=1) and symmetric matchings at n=32
+    (gamma=0.25) both reach consensus under 4-bit compression — per-step
+    payload is ONE compressed message per agent."""
+    key = jax.random.PRNGKey(2)
+    q4 = QuantizePNorm(bits=4, block=512)
+    for bank_topo, n, gamma, iters in [
+            (topology.exponential_onepeer(16), 16, 1.0, 600),
+            (topology.random_matching(32, rounds=8), 32, 0.25, 1200)]:
+        prob = LinearRegression.generate(key, n_agents=n, m=64, d=D)
+        eng = engine_for(bank_topo, q4, D, algorithm="lead",
+                         eta=1.0 / prob.mu_L[1], gamma=gamma)
+        tr = run(eng, prob, prob.x_star, iters=iters, key=key)
+        assert float(tr.consensus[-1]) < 1e-5, (bank_topo.name,
+                                                float(tr.consensus[-1]))
+        assert float(tr.dist[-1]) < 1e-2, (bank_topo.name,
+                                           float(tr.dist[-1]))
+
+
+def test_lead_onepeer32_monodromy_unstable():
+    """The documented boundary: on exponential_onepeer(32) the homogeneous
+    LEAD recursion x+ = M_k y, u+ = u + y - M_k y (y = x - u,
+    M_k = (1-g/2)I + (g/2)W_k) has period-monodromy radius > 1 at gamma=1
+    — directed one-peer rounds destabilize the dual pair for n >= 32, so
+    no hyper-parameter converges (stable alternatives: n <= 16, or
+    symmetric random_matching banks)."""
+    bk = topology.exponential_onepeer(32)
+    I = np.eye(bk.n)
+    Phi = np.eye(2 * bk.n)
+    for W in np.asarray(bk.Ws):
+        M = 0.5 * I + 0.5 * W
+        Phi = np.block([[2 * M - I, -I], [I - M, I]]) @ Phi
+    rho = np.max(np.abs(np.linalg.eigvals(Phi)))
+    assert rho > 1.1, rho                    # measured: ~1.218 per period
+    # while at n=16 the same product is stable (modulo the two marginal
+    # consensus/dual-sum modes at exactly 1)
+    bk = topology.exponential_onepeer(16)
+    I = np.eye(bk.n)
+    Phi = np.eye(2 * bk.n)
+    for W in np.asarray(bk.Ws):
+        M = 0.5 * I + 0.5 * W
+        Phi = np.block([[2 * M - I, -I], [I - M, I]]) @ Phi
+    mods = np.sort(np.abs(np.linalg.eigvals(Phi)))[::-1]
+    assert mods[0] <= 1.0 + 1e-9 and mods[2] < 1.0, mods[:3]
+
+
+def test_cedas_registry_dispatch():
+    """engine_for/flat_twin wiring: 'cedas' dispatches, is compressed (not
+    exact), mirrors the tree instance's hypers and bank topology, and a
+    bank reaches the engine as a TopologyBank."""
+    assert not is_exact("cedas")
+    bk = topology.exponential_onepeer(8)
+    tree = CEDAS(topology=bk, compressor=RandK(ratio=0.5),
+                 eta=0.03, gamma=0.7, alpha=0.9)
+    eng = flat_twin(tree, D)
+    assert type(eng).__name__ == "FlatCEDASEngine"
+    assert eng.eta == 0.03 and eng.gamma == 0.7 and eng.alpha == 0.9
+    assert isinstance(eng.topology, topology.TopologyBank)
+    assert eng.topology.period == bk.period
+    # the bank/schedule validation runs at engine construction too, not
+    # deep inside the scan
+    ring = topology.ring(8)
+    with pytest.raises(ValueError, match="periodless"):
+        engine_for(ring.with_schedule(lambda k: ring), None, D,
+                   algorithm="dgd")
+    with pytest.raises(ValueError, match="round 1"):
+        engine_for([topology.ring(4), topology.ring(6)], None, D,
+                   algorithm="dgd")

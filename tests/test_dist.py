@@ -116,3 +116,43 @@ def test_topology_api_runs_multihost():
     host references on torus_2d and an irregular Erdős–Rényi graph, and
     CHOCO trains compressed on the torus."""
     _run("topology_multihost")
+
+
+def test_distconfig_topology_bank_contract():
+    """The trainer's topology resolution accepts the time-varying forms —
+    a TopologyBank, a list of round graphs, a periodic scheduled Topology —
+    and rejects a live (periodless) schedule callable with an error that
+    says why (it would silently freeze the graph at topo(0))."""
+    from repro.core import topology
+    from repro.dist.trainer import topology_of, DistConfig
+
+    bank = topology_of(DistConfig(topology=topology.exponential_onepeer(4)), 4)
+    assert isinstance(bank, topology.TopologyBank)
+    assert bank.period == 2 and bank.n == 4
+
+    bank = topology_of(DistConfig(
+        topology=[topology.ring(4), topology.ring(4)]), 4)
+    assert isinstance(bank, topology.TopologyBank) and bank.period == 2
+
+    ring = topology.ring(4)
+    sched = ring.with_schedule(lambda k: ring, period=3)
+    bank = topology_of(DistConfig(topology=sched), 4)
+    assert isinstance(bank, topology.TopologyBank) and bank.period == 3
+
+    live = ring.with_schedule(lambda k: ring)           # no period
+    with pytest.raises(ValueError, match="periodless"):
+        topology_of(DistConfig(topology=live), 4)
+
+    # n mismatch between the bank and the mesh's agent count still raises
+    with pytest.raises(ValueError):
+        topology_of(DistConfig(topology=topology.exponential_onepeer(8)), 4)
+
+
+@pytest.mark.slow
+def test_timevarying_bank_runs_multihost():
+    """TopologyBank through the shard_map trainer: lax.switch(step % P)
+    selects the step's permute schedule — DGD on exponential_onepeer(4)
+    matches a host reference that mixes with W_{k % P} each step (a frozen
+    graph fails from step 1), LEAD trains compressed on the bank keeping
+    1^T D = 0, and faulted bank runs drop only the step's round links."""
+    _run("timevarying_multihost")

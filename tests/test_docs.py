@@ -59,13 +59,18 @@ def test_readme_topology_axis_matches_module():
     assert rows, "README must contain the topology builders table"
     sample_args = {"ring": (8,), "chain": (6,), "star": (5,),
                    "fully_connected": (4,), "torus_2d": (2, 4),
-                   "erdos_renyi": (8,), "from_matrix": (tp.ring(5).W,)}
+                   "erdos_renyi": (8,), "from_matrix": (tp.ring(5).W,),
+                   "exponential_onepeer": (8,), "random_matching": (8,)}
+    bank_builders = {"exponential_onepeer", "random_matching"}
     assert set(rows) == set(sample_args), (
         f"documented {sorted(set(rows))} != expected builder set")
     for name in rows:
         fn = getattr(tp, name)
         topo = fn(*sample_args[name])
-        assert isinstance(topo, tp.Topology), name
+        if name in bank_builders:            # time-varying rows build banks
+            assert isinstance(topo, tp.TopologyBank), name
+        else:
+            assert isinstance(topo, tp.Topology), name
         topo.validate()
     # the documented gossip modes are exactly the substrate's
     from repro.core.engines import engine_for

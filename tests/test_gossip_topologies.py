@@ -169,9 +169,12 @@ def test_leadsim_accepts_topology_for_both_engines():
 
 
 def test_distconfig_topology_forms_resolve_consistently():
-    """topology_of accepts None | name | Topology | callable, resolves a
-    schedule hook at k=0 in EVERY branch, and rejects an agent-count
-    mismatch."""
+    """topology_of accepts None | name | Topology | callable and rejects an
+    agent-count mismatch.  Scheduled topologies follow the TopologyBank
+    contract: a PERIODIC schedule materializes into the bank of its rounds
+    (instance and callable forms alike), while a live periodless schedule
+    raises — the compiled step cannot trace it and would silently freeze
+    the graph at topo(0)."""
     from repro.dist.trainer import DistConfig, topology_of
 
     ring4 = topology.ring(4)
@@ -182,13 +185,20 @@ def test_distconfig_topology_forms_resolve_consistently():
         topology_of(DistConfig(topology="torus"), 4).W, torus4.W)
     np.testing.assert_array_equal(
         topology_of(DistConfig(topology=ring4), 4).W, ring4.W)
-    sched = ring4.with_schedule(lambda k: torus4 if k == 0 else ring4)
-    # instance AND callable forms must both resolve the hook at k=0
-    got = topology_of(DistConfig(topology=sched), 4)
-    np.testing.assert_array_equal(got.W, torus4.W)
-    got = topology_of(DistConfig(topology=lambda n: sched), 4)
-    np.testing.assert_array_equal(got.W, torus4.W)
-    with pytest.raises(AssertionError):
+    rounds = [torus4, ring4]
+    sched = ring4.with_schedule(lambda k: rounds[k % 2], period=2)
+    # instance AND callable forms must both materialize into the bank
+    for form in (sched, lambda n: sched):
+        got = topology_of(DistConfig(topology=form), 4)
+        assert isinstance(got, topology.TopologyBank)
+        assert got.period == 2
+        np.testing.assert_array_equal(np.asarray(got.Ws[0]), torus4.W)
+        np.testing.assert_array_equal(np.asarray(got.Ws[1]), ring4.W)
+    # a periodless schedule cannot reach the compiled step
+    live = ring4.with_schedule(lambda k: rounds[k % 2])
+    with pytest.raises(ValueError, match="periodless"):
+        topology_of(DistConfig(topology=live), 4)
+    with pytest.raises(ValueError, match="agent"):
         topology_of(DistConfig(topology=topology.ring(6)), 4)
 
 

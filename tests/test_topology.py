@@ -205,3 +205,113 @@ def test_schedule_hook():
     assert sched(1).name == "torus_2x4"
     assert sched(2).name == "ring"
     assert sched.schedule is not None and ring8.schedule is None
+
+
+# -- TopologyBank: time-varying round graphs ---------------------------------
+
+@pytest.mark.parametrize("n", [2, 3, 8, 16, 32, 48])
+def test_onepeer_rounds_doubly_stochastic_deg1(n):
+    """Every one-peer exponential round is doubly stochastic with degree 1
+    (one directed peer per agent per step) and period ceil(log2 n)."""
+    bk = tp.exponential_onepeer(n)
+    assert bk.period == max(1, int(np.ceil(np.log2(n))))
+    for r, topo in enumerate(bk.rounds):
+        W = np.asarray(topo)
+        assert np.allclose(W.sum(0), 1.0) and np.allclose(W.sum(1), 1.0), r
+        assert np.all(W >= 0), r
+        off = (W > 1e-12) & ~np.eye(n, dtype=bool)
+        assert off.sum(1).max() <= 1, f"round {r} has degree > 1"
+
+
+@pytest.mark.parametrize("m", [1, 2, 3, 4, 5])
+def test_onepeer_period_product_is_uniform_at_pow2(m):
+    """At n = 2^m the P-round product is EXACTLY uniform averaging: full
+    mixing in log2(n) deg-1 rounds (the one-peer exponential headline)."""
+    n = 2 ** m
+    bk = tp.exponential_onepeer(n)
+    assert bk.period == m
+    assert np.allclose(bk.period_W, np.full((n, n), 1.0 / n), atol=1e-12)
+    assert bk.spectral_gap > 1.0 - 1e-9      # sigma_2(period_W) == 0
+
+
+def test_onepeer_nonpow2_period_product_contracts():
+    """Off powers of two the product is not uniform but still contracts."""
+    bk = tp.exponential_onepeer(12)
+    assert not np.allclose(bk.period_W, np.full((12, 12), 1 / 12))
+    assert 0.0 < bk.spectral_gap <= 1.0
+
+
+def test_random_matching_rounds_are_symmetric_matchings():
+    """Each round is a symmetric doubly stochastic matching (deg <= 1);
+    odd n leaves one agent unmatched with self weight 1."""
+    for n in (7, 16):
+        bk = tp.random_matching(n, seed=3)
+        for topo in bk.rounds:
+            W = np.asarray(topo)
+            assert np.allclose(W, W.T)
+            assert np.allclose(W.sum(1), 1.0)
+            off = (W > 1e-12) & ~np.eye(n, dtype=bool)
+            assert off.sum(1).max() <= 1
+        if n % 2:
+            # every round has exactly one unmatched agent
+            for topo in bk.rounds:
+                W = np.asarray(topo)
+                assert int((np.diag(W) == 1.0).sum()) == 1
+
+
+def test_random_matching_deterministic_replay_and_prefix():
+    """The counter-hashed stream is replayable bit for bit, seed-sensitive,
+    and rounds r1 < r2 draws are a prefix (checkpoint-resume identity)."""
+    a = tp.random_matching(16, seed=7, rounds=8)
+    b = tp.random_matching(16, seed=7, rounds=8)
+    assert np.array_equal(a.Ws, b.Ws)
+    assert not np.array_equal(a.Ws, tp.random_matching(16, seed=8).Ws)
+    prefix = tp.random_matching(16, seed=7, rounds=3)
+    assert np.array_equal(prefix.Ws, a.Ws[:3])
+
+
+def test_bank_validation_names_offending_round():
+    """Mismatched n and mixed weight styles raise naming the round, not a
+    shape error deep inside the scan."""
+    with pytest.raises(ValueError, match="round 1.*n=6.*n=4"):
+        tp.bank([tp.ring(4), tp.ring(6)])
+    # ring is uniform-weight, metropolis-on-torus is non-uniform
+    with pytest.raises(ValueError, match="round 1"):
+        tp.bank([tp.ring(8), tp.torus_2d(2, 4)])
+    with pytest.raises(ValueError, match="at least one round"):
+        tp.bank([])
+
+
+def test_bank_shared_layout_and_round_access():
+    """Rounds with different degrees re-pad to the bank-wide max_deg (pad =
+    self index, weight 0), Ws stacks densely, and bank(k) wraps mod P."""
+    bk = tp.bank([tp.ring(8), tp.make_mixing("full", 8)])
+    assert bk.period == 2 and bk.n == 8
+    assert bk.neighbors.shape == (2, 8, bk.deg_max)
+    assert bk.weights.shape == (2, 8, bk.deg_max + 1)
+    assert bk(0).name == "ring" and bk(3).name == "full"
+    # round 0's table was re-padded but still reconstructs W exactly
+    for r in range(2):
+        W = np.zeros((8, 8))
+        W[np.arange(8), np.arange(8)] = bk.weights[r, :, 0]
+        for j in range(bk.deg_max):
+            W[np.arange(8), bk.neighbors[r, :, j]] += bk.weights[r, :, j + 1]
+        assert np.allclose(W, bk.Ws[r], atol=1e-12), r
+
+
+def test_materialize_forms():
+    """materialize: bank passes through, list stacks, periodic schedule
+    expands to its P rounds, live (periodless) schedule raises."""
+    bk = tp.exponential_onepeer(8)
+    assert tp.materialize(bk) is bk
+    assert tp.materialize([tp.ring(4), tp.ring(4)]).period == 2
+    ring4 = tp.ring(4)
+    sched = ring4.with_schedule(
+        lambda k: ring4 if k % 2 == 0 else tp.make_mixing("full", 4),
+        period=2)
+    m = tp.materialize(sched)
+    assert isinstance(m, tp.TopologyBank) and m.period == 2
+    assert m(0).name == "ring" and m(1).name == "full"
+    with pytest.raises(ValueError, match="periodless"):
+        tp.materialize(ring4.with_schedule(lambda k: ring4))
+    assert tp.materialize(ring4) is ring4
