@@ -4,11 +4,18 @@ Every benchmark prints ``name,us_per_call,derived`` rows (derived carries the
 figure-specific quantity, e.g. final distance-to-optimum or error ratio).
 Rows also accumulate in an in-process registry so ``run.py --json OUT`` can
 write a machine-readable ``BENCH_<module>.json`` per module — the perf
-trajectory across PRs.
+trajectory across PRs.  Every BENCH file carries an ``env`` stamp (backend,
+jax version, cpu count, hostname) so numbers from different machines are
+never compared blind, and is written atomically: temp file + JSON round-trip
+validation + rename, so a crashed or concurrent bench can never leave a
+truncated BENCH_*.json behind.
 """
 from __future__ import annotations
 
 import json
+import os
+import platform
+import socket
 import time
 from typing import Callable, List
 
@@ -50,8 +57,30 @@ def peek_rows() -> List[dict]:
     return list(_ROWS)
 
 
+def env_meta() -> dict:
+    """The machine/runtime stamp embedded in every BENCH_*.json: perf rows
+    are only comparable within one (backend, device count, host) tuple."""
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "cpu_count": os.cpu_count(),
+        "hostname": socket.gethostname(),
+        "platform": platform.platform(),
+    }
+
+
 def write_json(path: str, bench_name: str, rows: List[dict]) -> None:
-    """Write one benchmark module's rows as BENCH_<name>.json content."""
-    with open(path, "w") as f:
-        json.dump({"bench": bench_name, "rows": rows}, f, indent=2)
+    """Write one benchmark module's rows as BENCH_<name>.json content.
+
+    Atomic: the payload goes to ``<path>.tmp`` first, is read back and
+    json.loads-validated, and only then renamed over the target — readers
+    (and the PR perf-trajectory diff) never observe a half-written file."""
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as f:
+        json.dump({"bench": bench_name, "env": env_meta(), "rows": rows},
+                  f, indent=2)
         f.write("\n")
+    with open(tmp) as f:
+        json.loads(f.read())           # round-trip check before publishing
+    os.replace(tmp, path)

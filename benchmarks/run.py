@@ -15,7 +15,11 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
 
 ``--json OUT``: additionally write one machine-readable ``BENCH_<name>.json``
 per executed module into directory OUT (rows: name, us_per_call, derived) so
-the perf trajectory is comparable across PRs.
+the perf trajectory is comparable across PRs.  Writes go through
+``common.write_json`` — temp file + JSON round-trip validation + atomic
+rename, stamped with the machine/runtime ``env`` block — so a crashed or
+concurrent bench never leaves a truncated BENCH file, and numbers from
+different hosts are never diffed blind.
 """
 import os
 import sys

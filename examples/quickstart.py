@@ -16,6 +16,16 @@ TopologyBank (each agent talks to exactly ONE peer per step; the graph
 cycles through ceil(log2 n) directed rounds inside the compiled scan):
 
     PYTHONPATH=src python examples/quickstart.py --topology exp-onepeer
+
+Two-level gossip — group the 8 agents into nodes of ``--node-size``
+(exact in-node averaging, zero wire bits; ONE compressed message per node
+on the inter-node ring, so LEAD's wire bits drop by node_size) — and
+``--interval tau`` — gossip only every tau-th step (local steps in
+between, zero wire bits; LEAD's dual absorbs them, DGD just stalls
+sooner).  Both print the intra/inter bit split and realized consensus:
+
+    PYTHONPATH=src python examples/quickstart.py --node-size 4
+    PYTHONPATH=src python examples/quickstart.py --interval 4
 """
 import argparse
 
@@ -30,10 +40,15 @@ from repro.core.faults import FaultModel
 from repro.core.simulator import LEADSim, run
 
 
-def main(fault_rate: float = 0.0, topo_name: str = "ring"):
+def main(fault_rate: float = 0.0, topo_name: str = "ring",
+         node_size: int = 1, interval: int = 1):
     key = jax.random.PRNGKey(0)
     prob = LinearRegression.generate(key, n_agents=8, m=100, d=100)
     if topo_name == "exp-onepeer":
+        if node_size > 1 or interval > 1:
+            raise SystemExit("--node-size/--interval demo the static ring "
+                             "(the TopologyBank already cuts the wire to "
+                             "one deg-1 message per step)")
         # time-varying one-peer exponential bank: every agent sends to
         # exactly one peer per step, the round graph cycles mod the period
         topo = topology.exponential_onepeer(8)
@@ -41,9 +56,24 @@ def main(fault_rate: float = 0.0, topo_name: str = "ring"):
         print(f"time-varying gossip: {topo!r} — period {topo.period}, "
               f"per-round degree {degs} (one directed peer per agent per "
               f"step; the {topo.period}-round product is full mixing)")
+    elif node_size > 1:
+        if 8 % node_size:
+            raise SystemExit(f"--node-size must divide 8, got {node_size}")
+        # two-level graph: exact uniform averaging inside each node block,
+        # the compressed ring between nodes — one encode per node
+        topo = topology.hierarchical(topology.ring(8 // node_size),
+                                     node_size)
+        print(f"two-level gossip: {topo!r} — {8 // node_size} nodes of "
+              f"{node_size} agents (intra-node averaging exact, inter-node "
+              f"ring compressed)")
     else:
         topo = topology.ring(8)     # the paper's graph; torus_2d/erdos_renyi
         #                             swap in without touching anything else
+    if interval > 1:
+        topo = topo.with_interval(interval)
+        print(f"communication interval: gossip fires every {interval}-th "
+              f"step; the steps between are pure local steps (zero wire "
+              f"bits, no neighbor exchange)")
     mu, L = prob.mu_L
     eta = 1.0 / L        # safe for every algorithm (DGD diverges at 2/(mu+L))
     print(f"problem: 8 agents, d=100, mu={mu:.3f}, L={L:.3f}, eta={eta:.3f}, "
@@ -59,9 +89,15 @@ def main(fault_rate: float = 0.0, topo_name: str = "ring"):
     fm = (FaultModel(seed=0, link_drop=fault_rate)
           if fault_rate > 0 else None)
     lead_label = f"LEAD ({bits}-bit)"
+    gossip_mode = "hier" if node_size > 1 else "dense"
+    # the dual gain gamma/(2 eta) integrates `interval` local-drift steps
+    # per fired gossip round, so gamma must shrink with tau (gamma=1
+    # diverges at tau=4; see bench_gossip's hier/interval section)
+    gamma = 1.0 / interval
     algos = {
         lead_label: LEADSim(topology=topo, compressor=q2, eta=eta,
-                            engine="flat", faults=fm),
+                            gamma=gamma, engine="flat",
+                            engine_gossip=gossip_mode, faults=fm),
         "NIDS (32-bit)": engine_for(topo, None, prob.d, algorithm="nids",
                                     eta=eta),
         "DGD  (32-bit)": engine_for(topo, None, prob.d, algorithm="dgd",
@@ -82,11 +118,25 @@ def main(fault_rate: float = 0.0, topo_name: str = "ring"):
     full_bits = traces["DGD  (32-bit)"].bits_per_agent[-1]
     print(f"\nbits/agent for 200 iters: LEAD {lead_bits:.3g} vs "
           f"uncompressed {full_bits:.3g}  ({full_bits / lead_bits:.1f}x saving)")
+    if node_size > 1 or interval > 1:
+        # the two wire-cutting knobs: report where the bits went and what
+        # consensus the cheap wire actually bought
+        tr = traces[lead_label]
+        flat_bits = float(lead_bits) * node_size * interval
+        print(f"wire split: intra-node exact mixing = 0 bits "
+              f"({node_size} agent(s)/node), inter-node compressed = "
+              f"{float(lead_bits):.3g} bits/agent "
+              f"(flat every-step ring would pay {flat_bits:.3g}: "
+              f"{node_size}x from node_size, {interval}x from interval)")
+        print(f"realized consensus error: {float(tr.consensus[-1]):.3e} "
+              f"(dist to optimum {float(tr.dist[-1]):.3e}) — LEAD's dual "
+              f"absorbs both knobs; DGD above shows what plain local "
+              f"steps do")
     if topo_name == "exp-onepeer":
         print("on the one-peer bank every agent ships ONE compressed message "
               "per step (deg=1), so the per-step wire traffic is the lowest "
               "any connected gossip can pay.")
-    else:
+    elif node_size == 1 and interval == 1:
         print("LEAD reaches machine-precision-level error with ~10x fewer "
               "bits;")
         print("DGD stalls at its heterogeneity bias (the paper's "
@@ -109,6 +159,16 @@ def main(fault_rate: float = 0.0, topo_name: str = "ring"):
                         f"per-round {round_free:.3f}; the consensus "
                         f"contraction is the period-product gap "
                         f"{topo.spectral_gap:.3f})")
+        elif node_size > 1:
+            # only inter-node links exist on the wire — intra-node mixing
+            # is an exact local mean and cannot drop (simulator masks and
+            # meters the inter graph alone)
+            inter = topo.inter
+            edge_note = (f"{int(inter.edge_mask.sum())} directed inter-node "
+                         f"links (intra-node mixing is exact, cannot drop)")
+            gap_note = (f"realized inter-graph spectral gap "
+                        f"{tr.realized_gap.mean():.3f} "
+                        f"(fault-free {inter.spectral_gap:.3f})")
         else:
             edge_note = f"{int(topo.edge_mask.sum())} directed edges"
             gap_note = (f"realized spectral gap "
@@ -132,5 +192,15 @@ if __name__ == "__main__":
                     choices=("ring", "exp-onepeer"),
                     help="static ring (the paper's graph) or the "
                          "time-varying one-peer exponential TopologyBank")
+    ap.add_argument("--node-size", type=int, default=1,
+                    help="agents per node for two-level gossip (must "
+                         "divide 8; 1 = flat): exact averaging inside a "
+                         "node, ONE compressed message per node on the "
+                         "inter-node ring")
+    ap.add_argument("--interval", type=int, default=1,
+                    help="communication interval tau: gossip every tau-th "
+                         "step, pure local steps in between (1 = every "
+                         "step)")
     args = ap.parse_args()
-    main(fault_rate=args.fault_rate, topo_name=args.topology)
+    main(fault_rate=args.fault_rate, topo_name=args.topology,
+         node_size=args.node_size, interval=args.interval)

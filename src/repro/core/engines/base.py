@@ -27,7 +27,14 @@ the family shares:
                    Assumption-1 graph, ring/torus/Erdős–Rényi alike.
                    ``gossip="ring"`` is the historical alias for neighbor
                    exchange that additionally asserts the topology IS the
-                   uniform ring.
+                   uniform ring.  ``gossip="hier"`` (topology.hierarchical
+                   graphs) runs the two-level wire: exact intra-node
+                   averaging (free), ONE encode per node, neighbor
+                   exchange over the inter graph only — wire bits are
+                   inter-node bytes amortized per agent.  Independently,
+                   ``topo.with_interval(tau)`` gates the whole wire at
+                   ``k % tau == 0``; the other steps run the engine's
+                   ``local_stage`` (zero bits, no gossip).
   * dither       — the quantizer dither plane.  ``dither="match"`` draws
                    per-agent threefry over the logical blocks, matching the
                    tree path's split-then-vmap draw bit for bit;
@@ -82,7 +89,8 @@ import jax.numpy as jnp
 
 from repro.core import faults as faults_mod
 from repro.core import topology as topology_mod
-from repro.core.gossip import DenseGossip, EncodedNeighborGossip
+from repro.core.gossip import (DenseGossip, EncodedNeighborGossip,
+                               HierarchicalGossip)
 from repro.core.lead import _at
 from repro.kernels import quantize as _q
 from repro.kernels.ops import DEFAULT_BLOCK, _pick_tile
@@ -167,11 +175,27 @@ class FlatEngineBase:
         # instead of silently freezing at topo(0)
         object.__setattr__(self, "topology",
                            topology_mod.materialize(self.topology))
-        assert self.gossip in ("dense", "neighbor", "ring"), self.gossip
+        assert self.gossip in ("dense", "neighbor", "ring", "hier"), \
+            self.gossip
         assert self.dither in ("match", "fast"), self.dither
         assert self.faults is None or isinstance(self.faults,
                                                  faults_mod.FaultModel), \
             f"faults must be a core/faults.FaultModel, got {self.faults!r}"
+        assert not (self._bank and self.comm_interval > 1), \
+            "comm_interval > 1 is not supported on a TopologyBank: " \
+            "skipping rounds changes which round graph fires at which " \
+            "step, and the round-indexed state recomputations (CHOCO/" \
+            "LEAD bank branches) assume every round fires"
+        if self.gossip == "hier":
+            assert isinstance(self.topology,
+                              topology_mod.HierarchicalTopology), \
+                "gossip='hier' needs a topology.hierarchical(...) graph " \
+                "(use gossip='neighbor' for flat topologies)"
+            assert not self._hier or self.faults is None \
+                or self.faults.policy == "renormalize", \
+                "hier gossip supports only the 'renormalize' fault " \
+                "policy: the stale cache is agent-granular but the hier " \
+                "wire is node-granular"
         if self.gossip == "ring":
             import numpy as np
             assert not self._bank, \
@@ -188,6 +212,27 @@ class FlatEngineBase:
         """True when the engine mixes over a round-indexed TopologyBank
         (time-varying gossip carried through the scan)."""
         return isinstance(self.topology, topology_mod.TopologyBank)
+
+    @property
+    def comm_interval(self) -> int:
+        """tau: the topology's communication interval (1 = every step)."""
+        return int(getattr(self.topology, "comm_interval", 1))
+
+    @property
+    def node_size(self) -> int:
+        """Agents per node of a hierarchical topology (1 otherwise)."""
+        return int(getattr(self.topology, "node_size", 1))
+
+    @property
+    def _hier(self) -> bool:
+        """True when the engine runs the two-level wire: exact intra-node
+        averaging (free) + encoded inter-node exchange.  node_size == 1
+        deliberately stays False — the composite graph then IS the inter
+        graph and the existing neighbor-gather path runs bit-identically."""
+        return self.gossip == "hier" and self.node_size > 1
+
+    def _hg(self) -> HierarchicalGossip:
+        return HierarchicalGossip.from_topology(self.topology)
 
     @property
     def W(self):
@@ -283,19 +328,23 @@ class FlatEngineBase:
         return {f: _at(getattr(self, f), k) for f in self.hyper_fields}
 
     # -- dither ------------------------------------------------------------
-    def _dither_plane(self, key: jax.Array, k: jnp.ndarray) -> jnp.ndarray:
-        """U[0,1) dither (n, nb, block) for the fused quantizer path.
-        "match": per-agent threefry over the logical blocks, matching the
-        tree path's split-then-vmap draw bit for bit (tile padding rows get
-        zeros — codes there are zero regardless of dither).  "fast": one
-        counter-hash pass seeded from (key, iteration counter k)."""
+    def _dither_plane(self, key: jax.Array, k: jnp.ndarray,
+                      n_rows: Optional[int] = None) -> jnp.ndarray:
+        """U[0,1) dither (n_rows, nb, block) for the fused quantizer path
+        (n_rows defaults to the agent count; the hier wire draws node-level
+        planes instead).  "match": per-row threefry over the logical
+        blocks, matching the tree path's split-then-vmap draw bit for bit
+        (tile padding rows get zeros — codes there are zero regardless of
+        dither).  "fast": one counter-hash pass seeded from (key, iteration
+        counter k)."""
+        rows = self.n if n_rows is None else n_rows
         if self.dither == "fast":
             raw = (key if jnp.issubdtype(key.dtype, jnp.integer)
                    else jax.random.key_data(key))
             seed = jnp.bitwise_xor(jnp.ravel(raw)[-1].astype(jnp.uint32),
                                    k.astype(jnp.uint32))
-            return fast_uniform((self.n, self.nb, self.block), seed)
-        keys = jax.random.split(key, self.n)
+            return fast_uniform((rows, self.nb, self.block), seed)
+        keys = jax.random.split(key, rows)
         shape = (self.nb_logical, self.block)
         u = jax.vmap(lambda kk: jax.random.uniform(kk, shape, jnp.float32))(keys)
         return jnp.pad(u, ((0, 0), (0, self.nb - self.nb_logical), (0, 0)))
@@ -322,7 +371,7 @@ class FlatEngineBase:
                 "encode_blocks/decode_blocks wire protocol")
         if _is_fused_quantizer(comp):
             kk = jnp.zeros((), jnp.int32) if k is None else k
-            u = self._dither_plane(key, kk)
+            u = self._dither_plane(key, kk, n_rows=buf.shape[0])
             code, scale = _q.encode(self._rows(buf), self._rows(u),
                                     bits=comp.bits, tile_b=self.tile_b,
                                     interpret=self.interpret)
@@ -337,10 +386,12 @@ class FlatEngineBase:
         int8 / scale f32 in row layout (n*nb, ...).  Single source of truth
         for the quantizer's payload shape, receiver decode, and wire-bit
         accounting across the family (LEAD's lead_diff_encode and the
-        base's quantize.encode both land here)."""
-        shape3 = (self.n, self.nb, self.block)
+        base's quantize.encode both land here).  The row count is derived
+        from the code (-1), not read off the engine — the hier wire runs
+        this on node-level (m * nb, block) buffers."""
+        shape3 = (-1, self.nb, self.block)
         payload = {"code": code.reshape(shape3),
-                   "scale": scale.reshape(self.n, self.nb, 1)}
+                   "scale": scale.reshape(-1, self.nb, 1)}
 
         def decode(pl):
             rows = _q.decode(pl["code"].reshape(-1, self.block),
@@ -373,6 +424,14 @@ class FlatEngineBase:
         materialize-once discipline the trainer's shard_map needs for
         knife-edge floor() consistency, ARCHITECTURE.md §3)."""
         q = decode(payload)
+        if self._hier:
+            # two-level wire: q is block-constant (the hier decode
+            # broadcasts each node's single payload), so its node view is
+            # exact; only node-level buffers travel the inter graph —
+            # O(m * deg * d) mixing, inter-node bytes only
+            hg = self._hg()
+            q = jax.lax.optimization_barrier(q)
+            return q, hg.broadcast(hg.inter.mix(hg.node_view(q)))
         if self._bank:
             kk = jnp.zeros((), jnp.int32) if k is None else k
             if self.gossip == "dense":
@@ -408,6 +467,23 @@ class FlatEngineBase:
         fm = self.faults
         topo = self.topology
         q = decode(payload)
+        if self._hier:
+            # faults are realized at the wire's granularity: node -> node
+            # inter links and node broadcasts (the intra level is exact
+            # local arithmetic — nothing to drop).  An inter-link loss
+            # stalls every agent of the receiving node equally, so the
+            # staleness age repeats node-wise over agents.
+            hg = self._hg()
+            s = self.node_size
+            # decode-once: same barrier discipline as the clean path
+            q = jax.lax.optimization_barrier(q)
+            qn = hg.node_view(q)
+            qn_tx = fm.corrupt_values(qn, k)
+            mask = fm.table_mask(k, hg.inter.neighbors)
+            wq = hg.broadcast(hg.inter.mix_masked(qn, mask, x_tx=qn_tx))
+            ok = jnp.repeat(fm.broadcast_ok(k, hg.m), s)
+            age = jnp.where(ok, 0, fstate.age + 1)
+            return q, wq, faults_mod.FaultState(cache=fstate.cache, age=age)
         q_tx = fm.corrupt_values(q, k)
         cache = fstate.cache if fm.policy == "stale" else None
         if self.gossip == "dense":
@@ -461,18 +537,81 @@ class FlatEngineBase:
     def encode_stage(self, s, gb, key, hy):
         """message + wire encode: (payload, decode, wire_bits, ctx).
         Engines with a fused message+encode kernel (LEAD's lead_diff_encode)
-        override this; everyone else composes the two stages."""
+        override this; everyone else composes the two stages.
+
+        On the hier wire the message is intra-node averaged FIRST (exact,
+        free) and each node encodes its mean ONCE — the payload has m =
+        n / node_size rows, the decode broadcasts the node estimate back to
+        its agents (block-constant q), and the per-agent wire bits are the
+        node payload amortized over its agents (inter-node bytes only)."""
         msg, ctx = self.message(s, gb, hy)
+        if self._hier:
+            hg = self._hg()
+            payload, node_decode, bits = self.encode_payload(
+                key, hg.intra_mean(msg), k=s.k)
+            return (payload, lambda pl: hg.broadcast(node_decode(pl)),
+                    bits / self.node_size, ctx)
         payload, decode, bits = self.encode_payload(key, msg, k=s.k)
         return payload, decode, bits, ctx
 
+    def local_stage(self, s, gb, hy):
+        """The non-communication step of the tau-interval path
+        (``k % comm_interval != 0``): (new_state, comp_err) with ZERO wire
+        traffic.  Default: self-delivery — the message is its own q and wq
+        (the W = I step), which is exactly right for engines that transmit
+        (a surrogate of) their iterate and mix it in (DGD, NIDS, EXTRA,
+        D2, QDGD, DeepSqueeze): the gossip term cancels and the gradient
+        part of the update runs.  Engines whose apply_stage advances a
+        *communication tracking state* (LEAD's h/hw/d, CHOCO's xhat, DCD's
+        hats) override this to freeze that state instead — self-delivery
+        would silently corrupt their tracking invariants."""
+        msg, ctx = self.message(s, gb, hy)
+        return self.apply_stage(s, gb, msg, msg, hy, ctx)
+
+    def _intra_project(self, state):
+        """Block-average every agent-leading state buffer of a hier engine
+        (exact intra-node averaging — local arithmetic, zero wire).  Run
+        after apply_stage on communication steps: it makes each node one
+        logical agent of the inter-graph algorithm seeing its block-mean
+        gradient, which is the invariant the hier convergence argument
+        (and LEAD's hw = W h tracking) rests on.  Scalar fields (k) pass
+        through."""
+        hg = self._hg()
+
+        def avg(v):
+            if getattr(v, "ndim", 0) >= 1 and v.shape[0] == self.n:
+                return hg.broadcast(hg.intra_mean(v))
+            return v
+
+        return jax.tree_util.tree_map(avg, state)
+
     def _step_core(self, s, g, key, hy):
-        """The family's one iteration shape: encode -> gossip -> apply."""
+        """The family's one iteration shape: encode -> gossip -> apply.
+        With ``comm_interval`` tau > 1 the whole wire (encode + gossip +
+        apply) fires only at ``k % tau == 0`` behind a lax.cond; the other
+        steps run ``local_stage`` (zero bits, comp_err 0).  tau == 1 takes
+        the branch-free path — its jaxpr is exactly the pre-interval
+        substrate's."""
         gb = self._blockify_g(g)
-        payload, decode, bits, ctx = self.encode_stage(s, gb, key, hy)
-        q, wq = self.mix_payload(payload, decode, k=s.k)
-        new, comp_err = self.apply_stage(s, gb, q, wq, hy, ctx)
-        return new, comp_err, bits
+
+        def comm(_):
+            payload, decode, bits, ctx = self.encode_stage(s, gb, key, hy)
+            q, wq = self.mix_payload(payload, decode, k=s.k)
+            new, comp_err = self.apply_stage(s, gb, q, wq, hy, ctx)
+            if self._hier:
+                new = self._intra_project(new)
+            return new, comp_err, bits
+
+        tau = self.comm_interval
+        if tau == 1:
+            return comm(None)
+
+        def local(_):
+            new, _ = self.local_stage(s, gb, hy)
+            zero = jnp.zeros((), jnp.float32)
+            return new, zero, zero
+
+        return jax.lax.cond(s.k % tau == 0, comm, local, None)
 
     # -- baseline driver protocol (engines driven directly by run()) --------
     def step_with_wire(self, state, g, key):
@@ -485,14 +624,33 @@ class FlatEngineBase:
         communication stage goes through mix_payload_faulted and a
         FaultState rides along.  Returns (new_state, new_fstate, comp_err,
         wire_bits).  Engines that override encode_stage/apply_stage (LEAD's
-        fused kernel included) inherit this unchanged."""
+        fused kernel included) inherit this unchanged.  Non-communication
+        steps of a tau-interval run leave the FaultState untouched — no
+        wire fired, so nothing could drop and staleness ages do not
+        advance."""
         hy = self.hypers_at(state.k)
         gb = self._blockify_g(g)
-        payload, decode, bits, ctx = self.encode_stage(state, gb, key, hy)
-        q, wq, fstate = self.mix_payload_faulted(payload, decode, state.k,
+
+        def comm(_):
+            payload, decode, bits, ctx = self.encode_stage(state, gb, key,
+                                                           hy)
+            q, wq, fs = self.mix_payload_faulted(payload, decode, state.k,
                                                  fstate)
-        new, comp_err = self.apply_stage(state, gb, q, wq, hy, ctx)
-        return new, fstate, comp_err, bits
+            new, comp_err = self.apply_stage(state, gb, q, wq, hy, ctx)
+            if self._hier:
+                new = self._intra_project(new)
+            return new, fs, comp_err, bits
+
+        tau = self.comm_interval
+        if tau == 1:
+            return comm(None)
+
+        def local(_):
+            new, _ = self.local_stage(state, gb, hy)
+            zero = jnp.zeros((), jnp.float32)
+            return new, fstate, zero, zero
+
+        return jax.lax.cond(state.k % tau == 0, comm, local, None)
 
     def x_of(self, state):
         """Current iterates as (n, d) regardless of the blocked layout."""

@@ -138,6 +138,16 @@ class FlatCHOCOEngine(FlatEngineBase):
         new = HatState(x=x, xhat=xhat, xhat_w=xhat_w, k=s.k + 1)
         return new, self.rel_err(q, x_half - s.xhat, x_half)
 
+    def local_stage(self, s: HatState, gb, hy):
+        """Interval step: plain local SGD (x+ = x - eta g) with the public
+        copies xhat / xhat_w frozen — nothing was transmitted, so the
+        receivers' replicas cannot have moved.  The base's self-delivery
+        default would feed q = x_half - xhat into xhat and corrupt the
+        xhat_w == W xhat invariant the contraction argument needs."""
+        x = s.x - hy["eta"] * gb
+        return (HatState(x=x, xhat=s.xhat, xhat_w=s.xhat_w, k=s.k + 1),
+                _zero_err())
+
 
 @dataclasses.dataclass(frozen=True)
 class FlatDeepSqueezeEngine(FlatEngineBase):
@@ -230,6 +240,14 @@ class FlatDCDEngine(FlatEngineBase):
             xhat_w = s.xhat_w + wq
         new = HatState(x=x, xhat=s.xhat + q, xhat_w=xhat_w, k=s.k + 1)
         return new, self.rel_err(q, x - s.xhat, x)
+
+    def local_stage(self, s: HatState, gb, hy):
+        """Interval step: plain local SGD with the hats frozen (same
+        reasoning as FlatCHOCOEngine.local_stage — re-descending from the
+        frozen xhat_w would discard the accumulated local progress)."""
+        x = s.x - hy["eta"] * gb
+        return (HatState(x=x, xhat=s.xhat, xhat_w=s.xhat_w, k=s.k + 1),
+                _zero_err())
 
 
 # -- exact baselines: no encode stage, the raw buffer is the payload --------

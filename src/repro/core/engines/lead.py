@@ -147,9 +147,12 @@ class FlatLEADEngine(FlatEngineBase):
     def encode_stage(self, s: FlatLEADState, gb, key, hy):
         """For the fused p=inf quantizer the Y-difference and the encode
         happen in one kernel pass; other compressors compute the difference
-        in XLA and go through the base's message + encode_payload path."""
+        in XLA and go through the base's message + encode_payload path.
+        The hier wire also takes the base path: the node's intra-mean must
+        happen between the difference and the encode, so the fused
+        per-agent diff+encode kernel does not apply."""
         comp = self.compressor
-        if comp is not None and _is_fused_quantizer(comp):
+        if comp is not None and _is_fused_quantizer(comp) and not self._hier:
             code, scale = _lu.lead_diff_encode(
                 self._rows(s.x), self._rows(gb), self._rows(s.d),
                 self._rows(s.h),
@@ -190,6 +193,18 @@ class FlatLEADEngine(FlatEngineBase):
                             k=s.k + 1)
         y = s.x - hy["eta"] * gb - hy["eta"] * s.d
         return new, self.rel_err(qh, y - s.h, y)
+
+    def local_stage(self, s: FlatLEADState, gb, hy):
+        """Interval (no-communication) step: X advances by its full primal
+        direction -eta (g + D) while the communication trackers H / H_w / D
+        freeze — no payload was produced, so the public estimate and the
+        dual see nothing.  At the consensual optimum D = -g(x*), so this
+        local step fixes x* exactly: tau > 1 preserves LEAD's exact fixed
+        point (unlike local-SGD baselines, which pick up an O(eta tau)
+        heterogeneity bias)."""
+        x = s.x - hy["eta"] * gb - hy["eta"] * s.d
+        return (FlatLEADState(x=x, h=s.h, hw=s.hw, d=s.d, k=s.k + 1),
+                jnp.zeros((), jnp.float32))
 
     # -- per-call-hyper entry points (LEADSim) -------------------------------
     def step_wire(self, state: FlatLEADState, g: jnp.ndarray, key: jax.Array,

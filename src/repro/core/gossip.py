@@ -23,6 +23,9 @@ Interchangeable implementations of `mix` over the Topology API
   pod-boundary edges — the compressed payload is the only traffic that
   crosses pods.  Arbitrary graphs reach the multi-host path through
   ``Topology.permute_rounds()`` (dist/trainer.py), not through this class.
+* HierarchicalGossip — two-level mixing for ``topology.hierarchical``
+  graphs: exact (free) intra-node block averaging + EncodedNeighborGossip
+  over the inter-node graph, so only node-mean payloads pay wire bits.
 * EncodedRingGossip — the uniform-ring special case of
   EncodedNeighborGossip, kept for its (w_self, w_neighbor) reading API.
 
@@ -216,6 +219,66 @@ class EncodedNeighborGossip:
             val = jnp.where(mask[:, j].reshape(shape), x_tx[src], cache[src])
             out = out + w[:, 1 + j].reshape(shape) * val
         return out
+
+
+@dataclasses.dataclass(frozen=True)
+class HierarchicalGossip:
+    """Two-level mixing for topology.hierarchical graphs (simulator path).
+
+    Blocks of ``node_size`` consecutive agents form one node.  The intra
+    level is exact dense averaging (``intra_mean`` — free, zero wire
+    bits); only node-level buffers travel the compressed ``inter`` graph
+    (an EncodedNeighborGossip over ``topo.inter``'s table).  For any
+    buffer x,
+
+        mix(x) = broadcast(W_inter @ intra_mean(x)) = kron(W_inter, J/s) @ x
+
+    exactly — the composite dense mix, computed at node granularity
+    (O(m * deg * d) instead of O(n^2 * d), m = n / s).  The engines'
+    ``gossip="hier"`` path encodes each node's intra-mean ONCE and ships
+    that single payload over the inter table, so wire accounting counts
+    inter-node bytes only (payload / node_size per agent).
+
+    ``node_view`` reads row 0 of each block — exact (not an estimate) for
+    the block-constant buffers the hier engine path produces."""
+    node_size: int
+    inter: EncodedNeighborGossip
+
+    @staticmethod
+    def from_topology(topo) -> "HierarchicalGossip":
+        """Backend for a topology.HierarchicalTopology."""
+        return HierarchicalGossip(
+            node_size=int(topo.node_size),
+            inter=EncodedNeighborGossip.from_topology(topo.inter))
+
+    @property
+    def m(self):
+        """Node count of the inter graph."""
+        import numpy as np
+        return int(np.asarray(self.inter.neighbors).shape[0])
+
+    def intra_mean(self, x: jnp.ndarray) -> jnp.ndarray:
+        """(n, ...) -> (m, ...) block means — the exact intra-node mix."""
+        s = self.node_size
+        return x.reshape((x.shape[0] // s, s) + x.shape[1:]).mean(axis=1)
+
+    def node_view(self, x: jnp.ndarray) -> jnp.ndarray:
+        """(n, ...) -> (m, ...) strided row-0-of-each-block view; equals
+        ``intra_mean`` on block-constant buffers, with no flops."""
+        return x[::self.node_size]
+
+    def broadcast(self, xb: jnp.ndarray) -> jnp.ndarray:
+        """(m, ...) node-level buffer -> (n, ...) block-constant buffer."""
+        s = self.node_size
+        m = xb.shape[0]
+        rep = jnp.broadcast_to(xb[:, None], (m, s) + xb.shape[1:])
+        return rep.reshape((m * s,) + xb.shape[1:])
+
+    def mix(self, tree: Pytree) -> Pytree:
+        """kron(W_inter, J/s) @ x leaf-wise (see class docstring)."""
+        def one(x):
+            return self.broadcast(self.inter.mix(self.intra_mean(x)))
+        return tree_map(one, tree)
 
 
 @dataclasses.dataclass(frozen=True)

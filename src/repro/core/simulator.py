@@ -267,6 +267,14 @@ class Trace(NamedTuple):
     fresh-information graph that step), staleness_mean/max summarize
     FaultState.age.  On a fault-free run all four are identically zero
     except realized_gap, which is 0 as well (the fault pass never ran).
+
+    Hierarchical / interval wires: with ``gossip="hier"`` the link metrics
+    are computed over the inter-node graph — the only level with wire
+    links (intra-node averaging is local arithmetic and cannot drop).
+    With ``comm_interval`` tau > 1, bits_per_agent grows only on
+    communication steps (skipped steps ship zero bits), dropped_links /
+    realized_gap are 0 on skipped steps, and staleness ages freeze there
+    (no wire fired, so nothing aged).
     """
     dist: np.ndarray
     consensus: np.ndarray
@@ -345,6 +353,18 @@ def run(algo, problem, x_star, *, iters=300, key=None, stochastic=False,
     if faulted:
         topo_m = (algo._topology if isinstance(algo, LEADSim)
                   else topology_mod.materialize(algo.topology))
+        # the fault metrics live at the wire's granularity: on a hier wire
+        # only node -> node inter links exist (the intra level is local
+        # arithmetic), so dropped/realized-gap are computed on the inter
+        # graph; a tau-interval run fires no wire on skipped steps, so the
+        # link metrics are gated to zero there (ages freeze in the engine)
+        gmode = (algo.engine_gossip if isinstance(algo, LEADSim)
+                 else getattr(algo, "gossip", "dense"))
+        metric_topo = (topo_m.inter
+                       if gmode == "hier"
+                       and int(getattr(topo_m, "node_size", 1)) > 1
+                       else topo_m)
+        tau_m = int(getattr(topo_m, "comm_interval", 1))
         fstate0 = algo.init_fault_state(state)
     else:
         fstate0 = jnp.zeros((), jnp.float32)   # inert carry placeholder
@@ -381,8 +401,13 @@ def run(algo, problem, x_star, *, iters=300, key=None, stochastic=False,
                 # recomputed from the deterministic realization at the
                 # pre-step counter (the mask this step actually used) —
                 # the step itself threads nothing extra
-                m = m + faults_mod.step_metrics(fm, topo_m, state.k,
-                                                new_fstate.age)
+                fme = faults_mod.step_metrics(fm, metric_topo, state.k,
+                                              new_fstate.age)
+                if tau_m > 1:
+                    comm = (state.k % tau_m == 0)
+                    fme = (jnp.where(comm, fme[0], 0.0),
+                           jnp.where(comm, fme[1], 0.0), fme[2], fme[3])
+                m = m + fme
             return m
 
         if record_every > 1:

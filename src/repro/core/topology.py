@@ -57,6 +57,15 @@ draws deterministic per-round matchings from the counter hash of
 core/faults.py.  Per-round validation for these is
 :func:`check_doubly_stochastic` (Assumption 1 minus symmetry).
 
+Two-level gossip: :func:`hierarchical` builds a composite Topology whose
+blocks of ``node_size`` consecutive agents average exactly (free intra-node
+wire) while only the node means travel the compressed ``inter`` graph —
+``W = kron(W_inter, J_s / s)``, spectral quantities cached on the
+composite.  ``topo.with_interval(tau)`` sets the communication interval:
+compiled paths gossip only at ``k % tau == 0`` and take a pure local step
+(zero wire bits) otherwise.  Both knobs thread through :func:`materialize`
+unchanged.
+
 The module-level helpers (``beta``/``kappa_g``/``check_mixing``/...) accept
 either a Topology or a raw matrix.
 """
@@ -69,6 +78,13 @@ from typing import Any, Callable, List, Optional, Tuple
 import numpy as np
 
 _EDGE_TOL = 1e-12           # |W_ij| above this is a graph edge
+
+
+def _check_interval(tau) -> int:
+    tau = int(tau)
+    if tau < 1:
+        raise ValueError(f"comm_interval must be >= 1, got {tau}")
+    return tau
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -89,6 +105,7 @@ class Topology:
     weights: np.ndarray                  # (n, deg_max + 1) float64, 0-padded
     schedule: Optional[Callable[[int], "Topology"]] = None
     schedule_period: Optional[int] = None   # P: schedule repeats mod P
+    comm_interval: int = 1               # tau: gossip fires at k % tau == 0
 
     # -- array-like compatibility ------------------------------------------
     @property
@@ -130,6 +147,14 @@ class Topology:
         if period is not None and period < 1:
             raise ValueError(f"schedule period must be >= 1, got {period}")
         return dataclasses.replace(self, schedule=fn, schedule_period=period)
+
+    def with_interval(self, tau: int) -> "Topology":
+        """A copy with communication interval ``tau``: the scan-compiled
+        paths fire the encode+gossip stage only at ``k % tau == 0`` and run
+        a pure local step everywhere else (zero wire bits, no collective).
+        ``tau`` is static — the skip pattern compiles into the scan, and
+        ``tau=1`` is exactly today's every-step gossip."""
+        return dataclasses.replace(self, comm_interval=_check_interval(tau))
 
     # -- spectral quantities (Theorem 1 / Corollary 1) ----------------------
     @functools.cached_property
@@ -299,6 +324,7 @@ class TopologyBank:
     Ws: np.ndarray                       # (P, n, n) float64
     neighbors: np.ndarray                # (P, n, max_deg) int32, self-padded
     weights: np.ndarray                  # (P, n, max_deg + 1) f64, 0-padded
+    comm_interval: int = 1               # tau: gossip fires at k % tau == 0
 
     @property
     def period(self) -> int:
@@ -361,6 +387,15 @@ class TopologyBank:
         """The round graph at iteration k (host int: ``rounds[k % P]``).
         Traced consumers index the stacked arrays directly instead."""
         return self.rounds[int(k) % self.period]
+
+    def with_interval(self, tau: int) -> "TopologyBank":
+        """A copy with communication interval ``tau`` (see
+        :meth:`Topology.with_interval`).  Note the scan-compiled engines
+        reject tau > 1 on a bank: skipping rounds of a periodic schedule
+        changes which round graph fires at which step, and the engines'
+        round-indexed state recomputations (CHOCO's per-round xhat_w,
+        LEAD's bank hw) assume every round fires."""
+        return dataclasses.replace(self, comm_interval=_check_interval(tau))
 
     def __repr__(self) -> str:
         degs = [int(np.max((r.weights[:, 1:] > _EDGE_TOL).sum(axis=1)))
@@ -465,7 +500,10 @@ def materialize(obj: Any, name: str = "matrix"):
             "TopologyBank, or resolve topo(k) yourself and re-run per "
             "phase.")
     P = topo.schedule_period
-    return bank([topo(k) for k in range(P)], name=f"{topo.name}@P{P}")
+    b = bank([topo(k) for k in range(P)], name=f"{topo.name}@P{P}")
+    if topo.comm_interval != 1:              # thread tau through the funnel
+        b = b.with_interval(topo.comm_interval)
+    return b
 
 
 # -- time-varying graph families ---------------------------------------------
@@ -621,6 +659,58 @@ def metropolis_matrix(adj: np.ndarray) -> np.ndarray:
 def metropolis(adj: np.ndarray) -> Topology:
     """Topology with Metropolis–Hastings weights for an adjacency matrix."""
     return _build("metropolis", metropolis_matrix(adj))
+
+
+# -- two-level (hierarchical) graphs ------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False, repr=False)
+class HierarchicalTopology(Topology):
+    """Two-level graph from :func:`hierarchical`: ``node_size`` consecutive
+    agents form one node (exact dense averaging inside the block — free,
+    no wire), and the nodes talk over the compressed ``inter`` graph.  The
+    inherited fields (``W``/``neighbors``/``weights`` and every cached
+    spectral quantity) describe the COMPOSITE matrix
+    ``kron(inter.W, J_s / s)``, so a HierarchicalTopology drops into any
+    consumer as a plain n-agent Topology; the hierarchical-aware paths
+    (``gossip="hier"`` engines, the mesh-mapped trainer) read ``node_size``
+    and ``inter`` to realize the two levels separately."""
+    node_size: int = 1
+    inter: Optional[Topology] = None
+
+
+def hierarchical(inter_topo, node_size: int) -> HierarchicalTopology:
+    """Two-level topology: dense uniform averaging inside each block of
+    ``node_size`` consecutive agents, ``inter_topo`` between the blocks.
+
+    The composite mixing matrix is ``W = kron(W_inter, J_s / s)`` — one
+    application block-averages every node exactly and then mixes the node
+    means over the inter graph, so its eigenvalues are those of
+    ``W_inter`` plus 0 (multiplicity ``n - n_inter``) and Assumption 1
+    holds whenever it holds for ``W_inter``.  ``node_size=1`` reproduces
+    ``inter_topo`` exactly (same W, same neighbor table) — the
+    bit-identity anchor the tests pin.
+
+    The inter graph must be static (a Topology or raw matrix, not a
+    TopologyBank/schedule): the two-level structure is itself the
+    time-invariant part of the design."""
+    if isinstance(inter_topo, TopologyBank):
+        raise ValueError(
+            "hierarchical() needs a static inter graph, not a TopologyBank "
+            "— time-varying inter-node gossip is not supported")
+    inter = as_topology(inter_topo, name="inter")
+    if inter.schedule is not None:
+        raise ValueError(
+            "hierarchical() needs a static inter graph, not a scheduled "
+            "Topology — drop the schedule (topo(k)) before nesting")
+    s = int(node_size)
+    if s < 1:
+        raise ValueError(f"node_size must be >= 1, got {s}")
+    W = np.kron(inter.W, np.full((s, s), 1.0 / s))
+    neighbors, weights = _table_from_w(W)
+    return HierarchicalTopology(
+        name=f"hier({inter.name}x{s})", W=W, neighbors=neighbors,
+        weights=weights, comm_interval=inter.comm_interval,
+        node_size=s, inter=inter)
 
 
 def _near_square(n: int) -> Tuple[int, int]:

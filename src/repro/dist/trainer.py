@@ -35,6 +35,20 @@ graph's permute schedule into one step and selects the step's graph with
 exactly ONE ppermute per step, so per-step wire traffic is proportional
 to the round degree, not the union graph's.
 
+Two-level and interval gossip ride on the Topology object.  A
+``topology.hierarchical(inter, node_size)`` graph maps its node blocks
+onto the TRAILING agent mesh axes: messages take an exact ``lax.pmean``
+over the intra-node axes (jnp.mean-class intra-node traffic, zero wire
+bits), and only the lane-wise inter graph ``kron(W_inter, I_s)`` is
+decomposed into ppermute rounds — on the block-constant payloads the
+intra mean produces, lane-wise mixing equals the composite
+``kron(W_inter, J_s/s)`` exactly, and after apply the full engine state
+is projected back to block-constant (each node is one logical agent).
+``Topology.with_interval(tau)`` gates the entire comm stage on
+``step % tau``: skipped steps run the engine's ``local_stage`` — no
+encode, no collective, zero reported wire bits — and faulted runs
+realize link drops only on the rounds that actually fire.
+
 Codes on the wire: compressed algorithms encode each leaf's message with
 the Compressor flat protocol (``encode_blocks`` / ``decode_blocks``,
 core/compression.py) *before* the shard_map; inside it only the payload
@@ -114,6 +128,10 @@ class DistConfig:
     Periodic schedules (with_schedule(fn, period=P)) materialize into
     banks; live periodless schedule callables raise (the compiled step
     cannot trace them and would silently freeze the graph at topo(0)).
+    A topology.hierarchical(inter, node_size) graph runs two-level
+    gossip (node_size must be the product of trailing agent mesh axes),
+    and Topology.with_interval(tau) makes the step gossip only every
+    tau-th iteration — see the module docstring.
 
     hyper sets the algorithm hyper-parameters; every value is a Schedule
     (float or callable of the step counter).  Three forms:
@@ -347,7 +365,9 @@ def make_train_step(cfg, mesh, prof: shr.ShardingProfile, dc: DistConfig):
     actual payload bits this step put on the wire, summed over leaves;
     faulted runs (DistConfig.faults active) additionally report
     dropped_links, the directed gossip edges that did not deliver this
-    step.
+    step.  Hierarchical topologies report leader-lane bits (payload /
+    node_size — intra-node traffic is free); interval topologies report
+    0.0 bits and 0.0 dropped_links on skipped steps.
     """
     cfg_fwd = cfg
     if dc.seq_parallel and prof.tp_axis and cfg.seq_shard_axis is None:
@@ -360,6 +380,47 @@ def make_train_step(cfg, mesh, prof: shr.ShardingProfile, dc: DistConfig):
     # topology_of would hand a non-deterministic DistConfig.topology
     # callable a SECOND, different graph than the one engine_of validated
     topo = eng.topology if eng is not None else topology_of(dc, A)
+    # two-level / interval knobs ride on the Topology (core/topology.py):
+    # a HierarchicalTopology maps its node blocks onto the TRAILING agent
+    # mesh axes (exact pmean inside a node, ppermute only across nodes),
+    # and comm_interval = tau gates the whole comm stage on step % tau —
+    # skipped steps run the engine's local_stage and ship no collective.
+    tau = int(getattr(topo, "comm_interval", 1))
+    node_size = int(getattr(topo, "node_size", 1))
+    hier = isinstance(topo, topology.HierarchicalTopology) and node_size > 1
+    if tau > 1 and eng is None:
+        raise ValueError(
+            "comm_interval > 1 (Topology.with_interval) gates the "
+            "decentralized gossip stage; the centralized allreduce "
+            "reference has no gossip stage to skip")
+    intra_axes: tuple = ()
+    if hier:
+        # node blocks are CONSECUTIVE flat agent ids (row-major over the
+        # agent axes), so a block is exactly the slice spanned by trailing
+        # agent mesh axes whose sizes multiply to node_size — each axis
+        # fully inside the block, so lax.pmean over those axes IS the
+        # intra-node mean
+        rem, taken = node_size, []
+        for a in reversed(prof.agent_axes):
+            if rem == 1:
+                break
+            sz = int(mesh.shape[a])
+            if rem % sz != 0:
+                raise ValueError(
+                    f"hierarchical node_size={node_size} must be the "
+                    f"product of trailing agent mesh axes (node blocks are "
+                    f"consecutive flat agent ids); agent axes "
+                    f"{prof.agent_axes} have shapes "
+                    f"{[int(mesh.shape[x]) for x in prof.agent_axes]} and "
+                    f"axis {a!r} (size {sz}) does not divide the remaining "
+                    f"factor {rem}")
+            taken.append(a)
+            rem //= sz
+        if rem != 1:
+            raise ValueError(
+                f"hierarchical node_size={node_size} exceeds the mesh's "
+                f"{A} agents (axes {prof.agent_axes})")
+        intra_axes = tuple(reversed(taken))
     # a TopologyBank compiles to ONE step whose gossip schedule is selected
     # per iteration: each bank round graph gets its own static
     # permute_rounds decomposition, and the step's graph (step % P) is
@@ -369,7 +430,20 @@ def make_train_step(cfg, mesh, prof: shr.ShardingProfile, dc: DistConfig):
     # the P = 1 case and skips the switch entirely (bit-identical to the
     # pre-bank trainer).
     is_bank = isinstance(topo, topology.TopologyBank)
-    bank_graphs = tuple(topo.rounds) if is_bank else (topo,)
+    if hier:
+        # the wire schedule comes from the LANE-WISE inter graph
+        # kron(W_inter, I_s): every inter edge (b -> c) ships s parallel
+        # ppermutes (b s + i -> c s + i).  On block-constant payloads (the
+        # intra pmean runs upstream of encode) lane-wise mixing equals the
+        # composite kron(W_inter, J_s / s) mix exactly.  The lane graph is
+        # s disjoint copies of the inter graph — validation would reject it
+        # as disconnected, but connectivity lives in the intra pmean, so
+        # build it unvalidated.
+        lane_W = np.kron(topo.inter.W, np.eye(node_size))
+        bank_graphs = (topology.from_matrix(
+            lane_W, name=f"{topo.name}|lanes", validate=False),)
+    else:
+        bank_graphs = tuple(topo.rounds) if is_bank else (topo,)
     P_bank = len(bank_graphs)
     # fault injection: an active FaultModel masks the gossip rounds with
     # the same deterministic link_ok realization as the single-device
@@ -466,6 +540,16 @@ def make_train_step(cfg, mesh, prof: shr.ShardingProfile, dc: DistConfig):
             else prof.agent_axes[0]
         return smap(lambda t: tree_map(
             lambda l: jax.lax.pmean(l, axis), t),
+            in_specs=(spec,), out_specs=spec)(tree)
+
+    def pmean_intra(tree):
+        """Exact mean over the intra-node mesh axes only (hierarchical
+        runs): jnp.mean-class traffic inside a node, which the two-level
+        wire accounting counts at zero bits — the inter-node ppermutes in
+        gossip_payloads are the only wire traffic."""
+        ax = intra_axes if len(intra_axes) > 1 else intra_axes[0]
+        return smap(lambda t: tree_map(
+            lambda l: jax.lax.pmean(l, ax), t),
             in_specs=(spec,), out_specs=spec)(tree)
 
     def gossip_payloads(payloads, masks=None, step=None):
@@ -602,7 +686,11 @@ def make_train_step(cfg, mesh, prof: shr.ShardingProfile, dc: DistConfig):
                               step=state.step + 1), metrics
 
         # engine substrate over stacked leaves: blockify -> message ->
-        # encode -> ring gossip (shard_map) -> apply_stage -> unblockify
+        # [intra-node pmean] -> encode -> gossip (shard_map) -> apply_stage
+        # -> [intra-node state projection] -> unblockify.  comm_interval >
+        # 1 gates the whole middle on step % tau: skipped steps run the
+        # engine's local_stage instead — no encode, no collective, zero
+        # wire bits.
         hy = eng.hypers_at(state.step)
         leaves_x, treedef = jax.tree_util.tree_flatten(state.params)
         leaves_g = treedef.flatten_up_to(direction)
@@ -610,58 +698,102 @@ def make_train_step(cfg, mesh, prof: shr.ShardingProfile, dc: DistConfig):
                        for f in eng.consensus_init}
         keys = jax.random.split(key, max(len(leaves_x), 1))
 
-        states, gbs, ctxs, payloads = [], [], [], []
-        bits_total = jnp.zeros((), jnp.float32)
-        for i, (kk, lx, lg) in enumerate(zip(keys, leaves_x, leaves_g)):
+        states, gbs, d_leafs = [], [], []
+        for i, (lx, lg) in enumerate(zip(leaves_x, leaves_g)):
             xb, d_leaf = _leaf_blocks(lx, dc.block)
             gb, _ = _leaf_blocks(lg, dc.block)
             fields = {f: _leaf_blocks(leaves_algo[f][i], dc.block)[0]
                       for f in leaves_algo}
-            s_leaf = eng.state_cls(x=xb, k=state.step, **fields)
-            msg, ctx = eng.message(s_leaf, gb, hy)
-            if comp is not None:
-                payload, bits = comp.encode_blocks(kk, msg, d_leaf,
-                                                   interpret=dc.interpret)
-            else:
-                payload = {"values": msg}
-                bits = jnp.asarray(d_leaf * 32, jnp.float32)
-            states.append(s_leaf)
+            states.append(eng.state_cls(x=xb, k=state.step, **fields))
             gbs.append(gb)
-            ctxs.append(ctx)
-            payloads.append(payload)
-            bits_total = bits_total + bits
+            d_leafs.append(d_leaf)
 
-        masks = None
-        if fm is not None:
-            # (R_max, A) survival masks for the LIVE round graph only:
-            # select the step's receive sources first (step % P), then
-            # realize the counter-hash link_ok over them — same
-            # realization the simulator uses (keyed on state.step —
-            # replayable across restarts and checkpoints), but the hash
-            # and reduction work never touches the P-1 graphs that are
-            # not exchanged this step.  Padded rows (src -1) are masked
-            # by `present`, so dropped_links counts real edges of round
-            # step % P alone.
-            src_sel = (jnp.asarray(src_stack[0]) if P_bank == 1
-                       else jnp.take(jnp.asarray(src_stack),
-                                     state.step % P_bank, axis=0))
-            present = src_sel >= 0
-            masks = fm.link_ok(state.step, src_sel, jnp.arange(A)) & present
-            metrics["dropped_links"] = jnp.sum(present
-                                               & ~masks).astype(jnp.float32)
-        q_wqs = gossip_payloads(payloads, masks,
-                                step=state.step if P_bank > 1 else None)
+        def _unblock(new_states):
+            new_x = [_leaf_unblocks(ns.x, lx)
+                     for ns, lx in zip(new_states, leaves_x)]
+            new_algo = {f: [_leaf_unblocks(getattr(ns, f), lx)
+                            for ns, lx in zip(new_states, leaves_x)]
+                        for f in leaves_algo}
+            return new_x, new_algo
 
-        new_x = []
-        new_algo = {f: [] for f in leaves_algo}
-        for s_leaf, gb, (q, wq), ctx, lx in zip(states, gbs, q_wqs, ctxs,
-                                                leaves_x):
-            new_s, _ = eng.apply_stage(s_leaf, gb, q, wq, hy, ctx)
-            new_x.append(_leaf_unblocks(new_s.x, lx))
-            for f in new_algo:
-                new_algo[f].append(_leaf_unblocks(getattr(new_s, f), lx))
+        def comm(_):
+            msgs, ctxs = [], []
+            for s_leaf, gb in zip(states, gbs):
+                msg, ctx = eng.message(s_leaf, gb, hy)
+                msgs.append(msg)
+                ctxs.append(ctx)
+            if hier:
+                # exact block mean BEFORE encode: each node quantizes one
+                # shared message (per-lane dither — see gossip_payloads)
+                msgs = pmean_intra(msgs)
+            payloads = []
+            bits_total = jnp.zeros((), jnp.float32)
+            for kk, msg, d_leaf in zip(keys, msgs, d_leafs):
+                if comp is not None:
+                    payload, bits = comp.encode_blocks(
+                        kk, msg, d_leaf, interpret=dc.interpret)
+                else:
+                    payload = {"values": msg}
+                    bits = jnp.asarray(d_leaf * 32, jnp.float32)
+                payloads.append(payload)
+                bits_total = bits_total + bits
+
+            masks = None
+            dropped = jnp.zeros((), jnp.float32)
+            if fm is not None:
+                # (R_max, A) survival masks for the LIVE round graph only:
+                # select the step's receive sources first (step % P), then
+                # realize the counter-hash link_ok over them — same
+                # realization the simulator uses (keyed on state.step —
+                # replayable across restarts and checkpoints), but the hash
+                # and reduction work never touches the P-1 graphs that are
+                # not exchanged this step.  Padded rows (src -1) are masked
+                # by `present`, so dropped_links counts real edges of round
+                # step % P alone; on interval runs the whole block sits
+                # inside the comm branch, so skipped steps realize (and
+                # report) no faults at all.
+                src_sel = (jnp.asarray(src_stack[0]) if P_bank == 1
+                           else jnp.take(jnp.asarray(src_stack),
+                                         state.step % P_bank, axis=0))
+                present = src_sel >= 0
+                masks = fm.link_ok(state.step, src_sel,
+                                   jnp.arange(A)) & present
+                dropped = jnp.sum(present & ~masks).astype(jnp.float32)
+            q_wqs = gossip_payloads(payloads, masks,
+                                    step=state.step if P_bank > 1 else None)
+
+            new_states = [eng.apply_stage(s_leaf, gb, q, wq, hy, ctx)[0]
+                          for s_leaf, gb, (q, wq), ctx
+                          in zip(states, gbs, q_wqs, ctxs)]
+            new_x, new_algo = _unblock(new_states)
+            if hier:
+                # project the FULL state back to block-constant — each node
+                # is one logical agent (P W = W P keeps LEAD's hw = W h
+                # invariant) — and count leader-lane bits only: the s lanes
+                # of a node carry one logical payload each round
+                new_x = pmean_intra(new_x)
+                new_algo = {f: pmean_intra(ls)
+                            for f, ls in new_algo.items()}
+                bits_total = bits_total / node_size
+            return new_x, new_algo, bits_total, dropped
+
+        def local(_):
+            new_states = [eng.local_stage(s_leaf, gb, hy)[0]
+                          for s_leaf, gb in zip(states, gbs)]
+            new_x, new_algo = _unblock(new_states)
+            zero = jnp.zeros((), jnp.float32)
+            return new_x, new_algo, zero, zero
+
+        if tau == 1:
+            # branch-free: jaxpr identical to the pre-interval trainer
+            new_x, new_algo, bits_total, dropped = comm(None)
+        else:
+            new_x, new_algo, bits_total, dropped = jax.lax.cond(
+                state.step % tau == 0, comm, local, None)
 
         metrics["bits_per_agent"] = bits_total
+        if fm is not None:
+            metrics["dropped_links"] = dropped
         new = TrainState(
             params=jax.tree_util.tree_unflatten(treedef, new_x),
             algo={f: jax.tree_util.tree_unflatten(treedef, ls)

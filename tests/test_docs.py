@@ -26,6 +26,20 @@ def test_docs_exist():
     assert ARCH.is_file(), "docs/ARCHITECTURE.md is a shipped artifact"
 
 
+def test_architecture_documents_hier_interval_gossip():
+    """The two wire-cutting knobs (README topology-table rows) must have
+    their contract written down: ARCHITECTURE §8 carries the kron
+    structure, the τ gating, and the bit-accounting model."""
+    text = ARCH.read_text()
+    assert "## 8. Hierarchical & interval gossip" in text
+    for needle in ("kron(W_inter, J_s / s)", "with_interval", "local_stage",
+                   "bit-identical", "kron(W_inter, I_s)"):
+        assert needle in text, f"ARCHITECTURE §8 must mention {needle!r}"
+    readme = README.read_text()
+    assert "with_interval(tau)" in readme, (
+        "README topology table must document the interval knob")
+
+
 def _matrix_rows(text):
     """Rows of the `engine_for` matrix: (algorithm, wire) pairs parsed from
     lines like `| `lead` | compressed | ...`."""
@@ -60,7 +74,8 @@ def test_readme_topology_axis_matches_module():
     sample_args = {"ring": (8,), "chain": (6,), "star": (5,),
                    "fully_connected": (4,), "torus_2d": (2, 4),
                    "erdos_renyi": (8,), "from_matrix": (tp.ring(5).W,),
-                   "exponential_onepeer": (8,), "random_matching": (8,)}
+                   "exponential_onepeer": (8,), "random_matching": (8,),
+                   "hierarchical": (tp.ring(4), 2)}
     bank_builders = {"exponential_onepeer", "random_matching"}
     assert set(rows) == set(sample_args), (
         f"documented {sorted(set(rows))} != expected builder set")
@@ -72,10 +87,17 @@ def test_readme_topology_axis_matches_module():
         else:
             assert isinstance(topo, tp.Topology), name
         topo.validate()
+    # the documented interval knob exists on every static topology
+    assert tp.ring(8).with_interval(4).comm_interval == 4
     # the documented gossip modes are exactly the substrate's
     from repro.core.engines import engine_for
     for mode in ("dense", "neighbor", "ring"):
         engine_for(tp.ring(4), None, 16, algorithm="dgd", gossip=mode)
+    # gossip="hier" needs (and only accepts) a hierarchical topology
+    engine_for(tp.hierarchical(tp.ring(4), 2), None, 16, algorithm="dgd",
+               gossip="hier")
+    with pytest.raises(AssertionError):
+        engine_for(tp.ring(4), None, 16, algorithm="dgd", gossip="hier")
     with pytest.raises(AssertionError):
         engine_for(tp.ring(4), None, 16, algorithm="dgd", gossip="mesh")
 

@@ -1,0 +1,266 @@
+"""Hierarchical two-level gossip + communication-interval local steps.
+
+The acceptance contract of the hier/interval substrate (core/topology.py
+``hierarchical`` / ``with_interval``, core/gossip.HierarchicalGossip, the
+engine family's ``gossip="hier"`` mode and tau-gated ``_step_core``):
+
+  * the composite mixing matrix is exactly ``kron(W_inter, J_s/s)`` and its
+    spectrum is the inter spectrum plus zeros — two-level mixing can only
+    help the gap, never hurt it;
+  * wire accounting: hier payload bits are EXACTLY the flat bits divided by
+    node_size (one encode per node), interval bits are EXACTLY the flat
+    bits divided by tau (whole rounds skipped), and skipped steps put zero
+    on the wire and realize zero faults;
+  * the knobs' neutral settings are free: node_size=1 and tau=1 reproduce
+    the flat every-step trajectories BIT-identically (np.array_equal, not
+    allclose) for LEAD and CHOCO alike;
+  * local (skip) steps freeze every communication-tracking state field —
+    only the iterate x moves;
+  * LEAD converges under both knobs (its dual absorbs them: at the optimum
+    D = -grad, so local steps fix x* exactly);
+  * invalid combinations fail loudly: gossip="hier" on a flat graph,
+    comm_interval on a TopologyBank, hier with the stale fault policy.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import topology
+from repro.core.compression import QuantizePNorm
+from repro.core.convex import LinearRegression
+from repro.core.engines import engine_for
+from repro.core.faults import FaultModel
+from repro.core.gossip import HierarchicalGossip
+from repro.core.simulator import run
+
+N, D = 8, 768          # two logical blocks per agent, second one ragged
+COMP = QuantizePNorm(bits=4, block=512)
+
+
+def _prob(key=None):
+    return LinearRegression.generate(key or jax.random.PRNGKey(0),
+                                     n_agents=N, m=32, d=D)
+
+
+# ---------------------------------------------------------------------------
+# builder + topology plumbing
+# ---------------------------------------------------------------------------
+
+def test_hierarchical_builder_composite_w():
+    inter = topology.ring(2)
+    hier = topology.hierarchical(inter, 4)
+    assert hier.n == 8 and hier.node_size == 4 and hier.inter is inter
+    W_expect = np.kron(inter.W, np.full((4, 4), 0.25))
+    np.testing.assert_allclose(hier.W, W_expect, atol=1e-12)
+    hier.validate()                      # Assumption-1 + table reconstruction
+    # spectrum: eigs(inter) plus zeros — the node-level graph's gap carries
+    eigs = np.sort(np.linalg.eigvalsh(hier.W))
+    expect = np.sort(np.concatenate(
+        [np.linalg.eigvalsh(inter.W), np.zeros(6)]))
+    np.testing.assert_allclose(eigs, expect, atol=1e-10)
+    assert hier.spectral_gap >= inter.spectral_gap - 1e-12
+
+
+def test_hierarchical_node_size_one_is_the_inter_graph():
+    inter = topology.ring(N)
+    hier = topology.hierarchical(inter, 1)
+    np.testing.assert_array_equal(hier.W, inter.W)
+    np.testing.assert_array_equal(hier.neighbors, inter.neighbors)
+    np.testing.assert_array_equal(hier.weights, inter.weights)
+
+
+def test_hierarchical_rejects_banks_schedules_and_bad_sizes():
+    with pytest.raises(ValueError):
+        topology.hierarchical(topology.exponential_onepeer(4), 2)
+    with pytest.raises(ValueError):
+        topology.hierarchical(
+            topology.ring(4).with_schedule(lambda k: topology.ring(4),
+                                           period=2), 2)
+    with pytest.raises(ValueError):
+        topology.hierarchical(topology.ring(4), 0)
+
+
+def test_with_interval_validates_and_threads_through_materialize():
+    with pytest.raises(ValueError):
+        topology.ring(N).with_interval(0)
+    assert topology.ring(N).with_interval(3).comm_interval == 3
+    # a periodic schedule materializes into a bank that KEEPS tau
+    sched = topology.ring(N).with_schedule(
+        lambda k: topology.ring(N), period=2).with_interval(3)
+    bank = topology.materialize(sched)
+    assert isinstance(bank, topology.TopologyBank)
+    assert bank.comm_interval == 3
+
+
+def test_hier_gossip_mix_equals_dense_composite():
+    hier = topology.hierarchical(topology.ring(2), 4)
+    hg = HierarchicalGossip.from_topology(hier)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 2, 384))
+    got = hg.mix(x)
+    want = jnp.einsum("ij,jkl->ikl", jnp.asarray(hier.W, jnp.float32), x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# wire accounting
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ["lead", "choco"])
+def test_hier_bits_are_flat_bits_over_node_size(algo):
+    prob = _prob()
+    key = jax.random.PRNGKey(2)
+    flat = engine_for(topology.ring(N), COMP, D, algorithm=algo,
+                      gossip="neighbor", eta=0.02)
+    hier = engine_for(topology.hierarchical(topology.ring(2), 4), COMP, D,
+                      algorithm=algo, gossip="hier", eta=0.02)
+    b_flat = float(run(flat, prob, prob.x_star, iters=6,
+                       key=key).bits_per_agent[-1])
+    b_hier = float(run(hier, prob, prob.x_star, iters=6,
+                       key=key).bits_per_agent[-1])
+    assert b_hier == b_flat / 4, (b_hier, b_flat)
+
+
+@pytest.mark.parametrize("algo", ["lead", "choco"])
+def test_interval_bits_are_flat_bits_over_tau(algo):
+    prob = _prob()
+    key = jax.random.PRNGKey(2)
+    flat = engine_for(topology.ring(N), COMP, D, algorithm=algo,
+                      gossip="neighbor", eta=0.02)
+    tau4 = engine_for(topology.ring(N).with_interval(4), COMP, D,
+                      algorithm=algo, gossip="neighbor", eta=0.02)
+    b_flat = float(run(flat, prob, prob.x_star, iters=8,
+                       key=key).bits_per_agent[-1])
+    b_tau = float(run(tau4, prob, prob.x_star, iters=8,
+                      key=key).bits_per_agent[-1])
+    assert b_tau == b_flat / 4, (b_tau, b_flat)
+
+
+# ---------------------------------------------------------------------------
+# neutral settings are bit-identical to the flat every-step paths
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ["lead", "choco"])
+def test_tau1_pinned_bit_identical(algo):
+    prob = _prob()
+    key = jax.random.PRNGKey(3)
+    a = engine_for(topology.ring(N), COMP, D, algorithm=algo,
+                   gossip="neighbor", eta=0.02)
+    b = engine_for(topology.ring(N).with_interval(1), COMP, D,
+                   algorithm=algo, gossip="neighbor", eta=0.02)
+    ta = run(a, prob, prob.x_star, iters=10, key=key)
+    tb = run(b, prob, prob.x_star, iters=10, key=key)
+    np.testing.assert_array_equal(np.asarray(ta.dist), np.asarray(tb.dist))
+    np.testing.assert_array_equal(np.asarray(ta.bits_per_agent),
+                                  np.asarray(tb.bits_per_agent))
+
+
+@pytest.mark.parametrize("algo", ["lead", "choco"])
+def test_node_size_one_pinned_bit_identical(algo):
+    prob = _prob()
+    key = jax.random.PRNGKey(3)
+    a = engine_for(topology.ring(N), COMP, D, algorithm=algo,
+                   gossip="neighbor", eta=0.02)
+    b = engine_for(topology.hierarchical(topology.ring(N), 1), COMP, D,
+                   algorithm=algo, gossip="hier", eta=0.02)
+    ta = run(a, prob, prob.x_star, iters=10, key=key)
+    tb = run(b, prob, prob.x_star, iters=10, key=key)
+    np.testing.assert_array_equal(np.asarray(ta.dist), np.asarray(tb.dist))
+    np.testing.assert_array_equal(np.asarray(ta.bits_per_agent),
+                                  np.asarray(tb.bits_per_agent))
+
+
+# ---------------------------------------------------------------------------
+# local steps: trackers freeze, only x moves, nothing on the wire
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ["lead", "choco", "dcd", "dgd"])
+def test_local_step_freezes_communication_state(algo):
+    comp = None if algo == "dgd" else COMP     # DGD is an exact baseline
+    eng = engine_for(topology.ring(N).with_interval(2), comp, D,
+                     algorithm=algo, gossip="neighbor", eta=0.02)
+    key = jax.random.PRNGKey(4)
+    x0 = jax.random.normal(key, (N, D))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (N, D))
+    s1 = eng.init(x0, jax.random.normal(jax.random.fold_in(key, 2), (N, D)),
+                  key)
+    s1, _, bits1 = eng.step_with_wire(s1, eng.blockify(g), key)   # k=0 comm
+    s2, _, bits2 = eng.step_with_wire(s1, eng.blockify(g), key)   # k=1 local
+    assert float(bits1) > 0.0
+    assert float(bits2) == 0.0
+    assert not np.array_equal(np.asarray(s2.x), np.asarray(s1.x))
+    for f in eng.consensus_init:
+        if f == "x":
+            continue
+        np.testing.assert_array_equal(np.asarray(getattr(s2, f)),
+                                      np.asarray(getattr(s1, f)),
+                                      err_msg=f"{algo}.{f} moved on a "
+                                              f"local (skip) step")
+
+
+# ---------------------------------------------------------------------------
+# convergence under the knobs
+# ---------------------------------------------------------------------------
+
+def test_lead_converges_hier_and_interval():
+    # well-posed problem (n*m > d so mu > 0): on the N=8, D=768 default the
+    # global Hessian is rank-deficient and quantization noise random-walks
+    # in its nullspace — dist would drift after converging, by design
+    d = 256
+    prob = LinearRegression.generate(jax.random.PRNGKey(0), n_agents=N,
+                                     m=64, d=d)
+    key = jax.random.PRNGKey(5)
+    eta = 1.0 / prob.mu_L[1]
+    hier = engine_for(topology.hierarchical(topology.ring(2), 4), COMP, d,
+                      algorithm="lead", gossip="hier", eta=eta, gamma=1.0)
+    tr = run(hier, prob, prob.x_star, iters=400, key=key)
+    assert float(tr.dist[-1]) < 1e-3, float(tr.dist[-1])
+    assert float(tr.consensus[-1]) < 1e-6, float(tr.consensus[-1])
+    # tau>1 shrinks the stable dual gain: gamma ~ 1/tau
+    tau4 = engine_for(topology.ring(N).with_interval(4), COMP, d,
+                      algorithm="lead", gossip="neighbor", eta=eta,
+                      gamma=0.25)
+    tr = run(tau4, prob, prob.x_star, iters=400, key=key)
+    assert float(tr.dist[-1]) < 1e-2, float(tr.dist[-1])
+
+
+# ---------------------------------------------------------------------------
+# faults + rejections
+# ---------------------------------------------------------------------------
+
+def test_fault_metrics_gate_on_skip_steps():
+    prob = _prob()
+    fm = FaultModel(seed=1, link_drop=0.5)
+    eng = engine_for(topology.ring(N).with_interval(2), COMP, D,
+                     algorithm="lead", gossip="neighbor", eta=0.02,
+                     faults=fm)
+    tr = run(eng, prob, prob.x_star, iters=10, key=jax.random.PRNGKey(6))
+    dropped = np.asarray(tr.dropped_links)
+    assert np.all(dropped[1::2] == 0.0), dropped     # skip steps: no rounds
+    assert np.any(dropped[0::2] > 0.0), dropped      # comm steps: p=0.5 fires
+
+
+def test_hier_runs_faulted_renormalize_and_rejects_stale():
+    hier = topology.hierarchical(topology.ring(2), 4)
+    fm = FaultModel(seed=1, link_drop=0.3, policy="renormalize")
+    eng = engine_for(hier, COMP, D, algorithm="lead", gossip="hier",
+                     eta=0.02, faults=fm)
+    prob = _prob()
+    tr = run(eng, prob, prob.x_star, iters=10, key=jax.random.PRNGKey(7))
+    assert np.all(np.isfinite(np.asarray(tr.dist)))
+    with pytest.raises(AssertionError):
+        engine_for(hier, COMP, D, algorithm="lead", gossip="hier",
+                   eta=0.02, faults=FaultModel(seed=1, link_drop=0.3,
+                                               policy="stale"))
+
+
+def test_invalid_combinations_fail_loudly():
+    # gossip="hier" needs a HierarchicalTopology
+    with pytest.raises(AssertionError):
+        engine_for(topology.ring(N), COMP, D, algorithm="lead",
+                   gossip="hier", eta=0.02)
+    # comm_interval on a TopologyBank: round-indexed recomputes assume
+    # every round fires
+    with pytest.raises(AssertionError):
+        engine_for(topology.exponential_onepeer(N).with_interval(2), COMP,
+                   D, algorithm="lead", gossip="neighbor", eta=0.02)
