@@ -31,10 +31,10 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, peek_rows, write_json
 from repro.core import topology
-from repro.core.baselines import (CHOCO_SGD, D2, DCD_SGD, DGD, EXTRA, NIDS,
-                                  DeepSqueeze, QDGD)
+from repro.core.baselines import (CGT, CHOCO_SGD, D2, DCD_SGD, DGD, EXTRA,
+                                  NIDS, DeepSqueeze, QDGD)
 from repro.core.compression import QuantizePNorm
-from repro.core.engines import flat_twin
+from repro.core.engines import engine_for, flat_twin
 from repro.core.gossip import DenseGossip
 
 D, N, K = 2 ** 16, 8, 8
@@ -53,6 +53,10 @@ def _algos(gossip):
         "nids": NIDS(gossip=gossip, eta=0.05),
         "extra": EXTRA(gossip=gossip, eta=0.05),
         "d2": D2(gossip=gossip, eta=0.05),
+        # two wires per exchange (iterate + tracker): payload_bits_per_elem
+        # lands at ~2x the single-wire engines above, by design
+        "cgt": CGT(topology=topology.ring(N),
+                   compressor=q2, eta=0.01, gamma=0.5, alpha=0.5),
     }
 
 
@@ -64,6 +68,43 @@ def _scan_stepper(step, state, g, key):
     f = jax.jit(lambda s: jax.lax.scan(body, s, jnp.arange(K))[0])
     jax.block_until_ready(f(state))          # compile + warm
     return f
+
+
+def bench_cgt_stability_verdict():
+    """C-GT on the directed one-peer bank that breaks LEAD (the measured
+    stability boundary in BENCH_gossip.json: dual-recursion monodromy
+    1.218/period at n=32).  C-GT's consensus pair is block-triangular in
+    the round matrices themselves, so its period monodromy radius equals
+    that of ``prod_k W_k`` <= 1 — and the one-peer period product at
+    n = 2^m is exactly J/n (uniform averaging).  The row records the
+    measured product spectrum plus the end-to-end 4-bit convergence that
+    tests/test_cgt.py pins (ARCHITECTURE.md §9)."""
+    import numpy as np
+
+    from repro.core.convex import LinearRegression
+    from repro.core.simulator import run
+
+    n, d, iters = 32, 256, 1200
+    bank = topology.exponential_onepeer(n)
+    Phi = np.eye(n)
+    for W in np.asarray(bank.Ws, np.float64):
+        Phi = W @ Phi
+    mods = np.sort(np.abs(np.linalg.eigvals(Phi)))[::-1]
+
+    key = jax.random.PRNGKey(3)
+    prob = LinearRegression.generate(key, n_agents=n, m=64, d=d)
+    eng = engine_for(bank, QuantizePNorm(bits=4, block=256), d,
+                     algorithm="cgt", dither="fast",
+                     eta=0.2 / float(prob.mu_L[1]), gamma=0.5, alpha=0.5)
+    tr = run(eng, prob, prob.x_star, iters=iters, key=key)
+    emit("baselines/cgt_onepeer_n32_verdict", 0.0,
+         f"STABLE: round-product monodromy radius {mods[0]:.6f}/period, "
+         f"second modulus {mods[1]:.2e} (prod W_k == J/n exactly) vs "
+         f"LEAD's dual-pair 1.218 on the same bank (BENCH_gossip.json); "
+         f"end to end 4-bit C-GT at eta=0.2/L: dist "
+         f"{float(tr.dist[0]):.3g} -> {float(tr.dist[-1]):.2e}, consensus "
+         f"{float(tr.consensus[-1]):.2e} at {iters} iters "
+         f"(tests/test_cgt.py pins the verdict)")
 
 
 def main():
@@ -98,6 +139,8 @@ def main():
             emit(f"baselines/step_flat_{name}_{mode}_d{D}_n{N}", us[mode],
                  f"speedup_vs_tree={us['tree'] / us[mode]:.2f};"
                  f"payload_bits_per_elem={bits[mode] / D:.3f}")
+
+    bench_cgt_stability_verdict()
 
 
 if __name__ == "__main__":

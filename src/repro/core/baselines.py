@@ -94,6 +94,24 @@ class DiffusionState(NamedTuple):
     k: jnp.ndarray
 
 
+class TrackingState(NamedTuple):
+    """C-GT state: the iterate wire AND the gradient-tracker wire, each with
+    its own error-feedback reference pair (see CGT docstring).  The tracker
+    is stored in SHIFTED form: ``s`` holds the post-mix tracker of the last
+    step and ``g_prev`` the gradient it already incorporates, so the live
+    tracker of step k is ``s + g_k - g_prev`` and the stored invariant is
+    ``sum_i s_i == sum_i g_prev_i`` (exactly preserved by doubly stochastic
+    realized mixing)."""
+    x: jnp.ndarray
+    s: jnp.ndarray           # gradient tracker (shifted: pre-refresh)
+    g_prev: jnp.ndarray      # gradient already folded into s
+    h_x: jnp.ndarray         # iterate wire: public copies
+    hw_x: jnp.ndarray        # iterate wire: mixed public copies
+    h_s: jnp.ndarray         # tracker wire: public copies
+    hw_s: jnp.ndarray        # tracker wire: mixed public copies
+    k: jnp.ndarray
+
+
 @dataclasses.dataclass(frozen=True)
 class DGD:
     """Decentralized gradient descent: X+ = W X - eta g (no compression)."""
@@ -286,6 +304,125 @@ class CEDAS:
         return new, _rel_err(q, diff, phi)
 
     def step(self, s: DiffusionState, g, key):
+        return self.step_with_metrics(s, g, key)[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class CGT:
+    """C-GT [Liao et al., arXiv:2205.12623]: compressed gradient tracking.
+
+    Two tracked sequences cross the wire every step — the iterate x and the
+    gradient tracker y — each through its own CHOCO-style difference
+    compression with an error-feedback reference pair (h, hw).  Per agent,
+    with y_k = s + g_k - g_prev the live tracker (see TrackingState):
+
+        q_x  = Q(x - h_x);   q_s = Q(y - h_s)          (the two wires)
+        x̂   = h_x + q_x;    x̂_w = hw_x + W q_x        (static W)
+                             x̂_w = W_k (h_x + q_x)     (TopologyBank)
+        ŝ   = h_s + q_s;    ŝ_w analogous
+        x+   = x - gamma (x̂ - x̂_w) - eta y
+        s+   = y - gamma (ŝ - ŝ_w);   g_prev+ = g
+        h+   = h + alpha q;  hw+ = hw + alpha W q       (each wire;
+                             hw+ = W_k (h + alpha q) on a bank)
+
+    The tracking invariant ``sum_i s_i == sum_i g_prev_i`` (equivalently
+    sum of live trackers == sum of gradients) holds at every step for any
+    compression whenever the realized mixing is column-stochastic — doubly
+    stochastic W, or symmetric link-drop masks under the renormalize fault
+    policy.  With Identity compression the recursion collapses to exact
+    lazy gradient tracking, x+ = M_gamma x - eta y and y+ = M_gamma y +
+    g+ - g with M_gamma = (1-gamma) I + gamma W — DIGing / Aug-DGM at
+    gamma = 1 (tests/test_cgt.py pins the reduction for every gamma).
+
+    Like CEDAS this reference holds a first-class ``topology`` (Topology |
+    TopologyBank | matrix), mixing with the step's round graph W_{k mod P}
+    on a bank and recomputing both hw pairs from the step's graph.  Unlike
+    LEAD/CEDAS, whose dual/momentum pairs go unstable through directed
+    one-peer rounds past n~16 (ARCHITECTURE §4a), C-GT's consensus pair is
+    block-triangular in (x, y) with per-round factors M_k that are convex
+    combinations of row-stochastic matrices — the period monodromy radius
+    never exceeds 1, and on exponential_onepeer(2^m) the period product at
+    gamma = 1 is exact uniform averaging (measured + pinned in
+    tests/test_cgt.py and BENCH_baselines.json).
+
+    Randomness contract: wire j draws with jax.random.fold_in(key, j) then
+    the per-agent split — exactly the flat engine's multi-wire dither
+    stream, so flat-vs-tree stays draw-for-draw.
+    """
+    topology: Any
+    compressor: Any
+    eta: Schedule = 0.05
+    gamma: Schedule = 0.5
+    alpha: Schedule = 0.5
+
+    def __post_init__(self):
+        from repro.core import topology as _topo
+        object.__setattr__(self, "topology",
+                           _topo.materialize(self.topology, name="matrix"))
+
+    @property
+    def _bank(self) -> bool:
+        from repro.core import topology as _topo
+        return isinstance(self.topology, _topo.TopologyBank)
+
+    def _mix(self, v, k):
+        """W_{k mod P} @ v on a bank (traced round slice), W @ v otherwise."""
+        if self._bank:
+            r = jnp.asarray(k, jnp.int32) % self.topology.period
+            W = jnp.asarray(self.topology.Ws, v.dtype)[r]
+        else:
+            W = jnp.asarray(self.topology.W, v.dtype)
+        return W @ v
+
+    def init(self, x0, g0, key):
+        z = jnp.zeros_like(x0)
+        return TrackingState(x=x0, s=z, g_prev=z, h_x=x0,
+                             hw_x=self._mix(x0, jnp.zeros((), jnp.int32)),
+                             h_s=z, hw_s=z, k=jnp.zeros((), jnp.int32))
+
+    def _compress(self, key, j, diff):
+        """Wire j's compression draw (fold_in(key, j) then per-agent split
+        — the flat engine's multi-wire stream)."""
+        keys = jax.random.split(jax.random.fold_in(key, j), diff.shape[0])
+        return jax.vmap(self.compressor.compress)(keys, diff)
+
+    def step_with_metrics(self, s: TrackingState, g, key):
+        """(new_state, comp_err): comp_err reports the ITERATE wire,
+        ||q_x - (x - h_x)|| / ||x|| (the Trace convention's transmitted
+        iterate; the tracker wire's error enters the trajectory but not the
+        scalar metric)."""
+        eta = _at(self.eta, s.k)
+        gamma = _at(self.gamma, s.k)
+        alpha = _at(self.alpha, s.k)
+        y = s.s + g - s.g_prev                  # live tracker at step k
+        diff_x = s.x - s.h_x
+        diff_s = y - s.h_s
+        q_x = self._compress(key, 0, diff_x)
+        q_s = self._compress(key, 1, diff_s)
+        wq_x = self._mix(q_x, s.k)
+        wq_s = self._mix(q_s, s.k)
+        xhat = s.h_x + q_x
+        shat = s.h_s + q_s
+        if self._bank:
+            wh_x = self._mix(s.h_x, s.k)
+            wh_s = self._mix(s.h_s, s.k)
+            xhat_w = wh_x + wq_x
+            shat_w = wh_s + wq_s
+            hw_x = wh_x + alpha * wq_x
+            hw_s = wh_s + alpha * wq_s
+        else:
+            xhat_w = s.hw_x + wq_x
+            shat_w = s.hw_s + wq_s
+            hw_x = s.hw_x + alpha * wq_x
+            hw_s = s.hw_s + alpha * wq_s
+        x = s.x - gamma * (xhat - xhat_w) - eta * y
+        s_new = y - gamma * (shat - shat_w)
+        new = TrackingState(x=x, s=s_new, g_prev=g,
+                            h_x=s.h_x + alpha * q_x, hw_x=hw_x,
+                            h_s=s.h_s + alpha * q_s, hw_s=hw_s, k=s.k + 1)
+        return new, _rel_err(q_x, diff_x, s.x)
+
+    def step(self, s: TrackingState, g, key):
         return self.step_with_metrics(s, g, key)[0]
 
 

@@ -10,6 +10,10 @@ paper algorithm.
     cedas.py      FlatCEDASEngine — compressed exact diffusion [Huang & Pu
                   2023]; the first engine built for the time-varying
                   TopologyBank path (mixes with the step's round graph)
+    cgt.py        FlatCGTEngine — compressed gradient tracking [Liao et
+                  al. 2022]; the first MULTI-WIRE engine (iterate +
+                  tracker payloads per exchange), stable on the directed
+                  one-peer banks that break LEAD/CEDAS
 
 ``engine_for`` is the registry front door: it dispatches
 ``(algorithm, compressor, topology)`` to the matching engine — the first
@@ -42,6 +46,7 @@ from repro.core.engines.baselines import (
     FlatDeepSqueezeEngine, FlatEXTRAEngine, FlatNIDSEngine, FlatQDGDEngine,
 )
 from repro.core.engines.cedas import FlatCEDASEngine
+from repro.core.engines.cgt import FlatCGTEngine
 from repro.core.engines.lead import FlatLEADEngine, FlatLEADState
 from repro.kernels.ops import DEFAULT_BLOCK
 
@@ -49,6 +54,8 @@ from repro.kernels.ops import DEFAULT_BLOCK
 ENGINES = {
     "lead": FlatLEADEngine,
     "cedas": FlatCEDASEngine,
+    "cgt": FlatCGTEngine,
+    "c-gt": FlatCGTEngine,
     "choco": FlatCHOCOEngine,
     "choco-sgd": FlatCHOCOEngine,
     "deepsqueeze": FlatDeepSqueezeEngine,
@@ -99,6 +106,7 @@ def describe(engine) -> str:
 # tree-class name (core/baselines.py) -> registry key, for flat_twin
 _TREE_TWINS = {
     "CEDAS": "cedas",
+    "CGT": "cgt",
     "CHOCO_SGD": "choco",
     "DeepSqueeze": "deepsqueeze",
     "QDGD": "qdgd",

@@ -167,6 +167,15 @@ class FlatEngineBase:
     # (field -> "copy" of x0 | "zeros"); x and k are implicit
     state_cls: ClassVar[type] = None
     consensus_init: ClassVar[Dict[str, str]] = {}
+    # declared wire fields: one name per buffer the algorithm transmits
+    # each communication step.  Single-wire engines (everything before
+    # C-GT) keep the default; a multi-wire engine (FlatCGTEngine ships an
+    # iterate wire AND a tracker wire) overrides with one name per wire,
+    # its ``message`` returns a same-length tuple of message buffers, and
+    # ``apply_stage`` receives same-length tuples (q, wq).  The base's
+    # encode/mix stages and dist/trainer.py loop over this declaration
+    # instead of assuming one buffer.
+    wire_fields: ClassVar[tuple] = ("msg",)
 
     def __post_init__(self):
         # materialize, not as_topology: a TopologyBank passes through, a
@@ -181,6 +190,12 @@ class FlatEngineBase:
         assert self.faults is None or isinstance(self.faults,
                                                  faults_mod.FaultModel), \
             f"faults must be a core/faults.FaultModel, got {self.faults!r}"
+        if self.faults is not None and self.n_wires > 1:
+            assert self.faults.policy == "renormalize", \
+                "multi-wire engines support only the 'renormalize' fault " \
+                "policy: the stale cache holds ONE payload per agent but " \
+                f"{type(self).__name__} ships {self.n_wires} wires per " \
+                "exchange"
         assert not (self._bank and self.comm_interval > 1), \
             "comm_interval > 1 is not supported on a TopologyBank: " \
             "skipping rounds changes which round graph fires at which " \
@@ -212,6 +227,11 @@ class FlatEngineBase:
         """True when the engine mixes over a round-indexed TopologyBank
         (time-varying gossip carried through the scan)."""
         return isinstance(self.topology, topology_mod.TopologyBank)
+
+    @property
+    def n_wires(self) -> int:
+        """Number of buffers this engine ships per communication step."""
+        return len(self.wire_fields)
 
     @property
     def comm_interval(self) -> int:
@@ -422,7 +442,16 @@ class FlatEngineBase:
         the decode as a fusion producer and recompute it per neighbor —
         the 3x-decode cost this path exists to avoid (and the same
         materialize-once discipline the trainer's shard_map needs for
-        knife-edge floor() consistency, ARCHITECTURE.md §3)."""
+        knife-edge floor() consistency, ARCHITECTURE.md §3).
+
+        Multi-wire engines hand a tuple of payloads with a same-length
+        tuple of decodes (one per declared wire field); the stage loops
+        the wires through one exchange each and returns tuple-valued
+        (q, wq)."""
+        if isinstance(decode, tuple):
+            outs = [self.mix_payload(pl, dec, k=k)
+                    for pl, dec in zip(payload, decode)]
+            return tuple(o[0] for o in outs), tuple(o[1] for o in outs)
         q = decode(payload)
         if self._hier:
             # two-level wire: q is block-constant (the hier decode
@@ -463,9 +492,24 @@ class FlatEngineBase:
         last successful broadcast (policy="stale").  Undetected bit-flip
         corruption is applied to the wire copy only, never to q or the
         self column.  The fault realization is the counter hash of
-        (seed, k, edge) — deterministic and replayable (core/faults.py)."""
+        (seed, k, edge) — deterministic and replayable (core/faults.py).
+
+        Multi-wire engines (tuple payload/decode) exchange every wire over
+        the SAME physical round: the link realization is the counter hash
+        of (seed, k, edge), so each per-wire pass derives the identical
+        mask — a dropped link loses every wire of the exchange at once, as
+        one lost packet would.  The FaultState advances once (the per-wire
+        age updates are identical; policy='renormalize' is asserted at
+        construction, so there is no per-wire cache to disambiguate)."""
         fm = self.faults
         topo = self.topology
+        if isinstance(decode, tuple):
+            qs, wqs, fs = [], [], fstate
+            for pl, dec in zip(payload, decode):
+                q_j, wq_j, fs = self.mix_payload_faulted(pl, dec, k, fstate)
+                qs.append(q_j)
+                wqs.append(wq_j)
+            return tuple(qs), tuple(wqs), fs
         q = decode(payload)
         if self._hier:
             # faults are realized at the wire's granularity: node -> node
@@ -543,16 +587,39 @@ class FlatEngineBase:
         free) and each node encodes its mean ONCE — the payload has m =
         n / node_size rows, the decode broadcasts the node estimate back to
         its agents (block-constant q), and the per-agent wire bits are the
-        node payload amortized over its agents (inter-node bytes only)."""
+        node payload amortized over its agents (inter-node bytes only).
+
+        Multi-wire engines return a tuple of messages; each wire j encodes
+        under the sub-key fold_in(key, j) (its tree twin draws the same
+        stream), and the stage returns tuple payloads/decodes with the
+        per-agent bits SUMMED over wires — both buffers really cross the
+        wire every exchange."""
         msg, ctx = self.message(s, gb, hy)
+        if self.n_wires > 1:
+            assert isinstance(msg, tuple) and len(msg) == self.n_wires, \
+                (type(self).__name__, self.wire_fields)
+            payloads, decodes = [], []
+            bits_total = jnp.zeros((), jnp.float32)
+            for j, m in enumerate(msg):
+                pl, dec, bits, _ = self._encode_one(
+                    jax.random.fold_in(key, j), m, s.k)
+                payloads.append(pl)
+                decodes.append(dec)
+                bits_total = bits_total + bits
+            return tuple(payloads), tuple(decodes), bits_total, ctx
+        payload, decode, bits, _ = self._encode_one(key, msg, s.k)
+        return payload, decode, bits, ctx
+
+    def _encode_one(self, key, msg, k):
+        """One wire's encode (hier-aware): (payload, decode, bits, None)."""
         if self._hier:
             hg = self._hg()
             payload, node_decode, bits = self.encode_payload(
-                key, hg.intra_mean(msg), k=s.k)
+                key, hg.intra_mean(msg), k=k)
             return (payload, lambda pl: hg.broadcast(node_decode(pl)),
-                    bits / self.node_size, ctx)
-        payload, decode, bits = self.encode_payload(key, msg, k=s.k)
-        return payload, decode, bits, ctx
+                    bits / self.node_size, None)
+        payload, decode, bits = self.encode_payload(key, msg, k=k)
+        return payload, decode, bits, None
 
     def local_stage(self, s, gb, hy):
         """The non-communication step of the tau-interval path

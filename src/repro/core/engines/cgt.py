@@ -1,0 +1,123 @@
+"""Flat C-GT engine: compressed gradient tracking on the codes-on-the-wire
+substrate [Liao et al., arXiv:2205.12623].
+
+C-GT is the family's first MULTI-WIRE engine: every communication step
+ships TWO encoded payloads — the iterate difference x - h_x and the
+tracker difference y - h_s — each through its own CHOCO-style
+error-feedback reference pair (h, hw).  The base substrate loops the
+declared ``wire_fields`` through encode/mix (per-wire dither sub-keys via
+fold_in, fault masks shared across wires — one physical exchange), and
+dist/trainer.py flattens (leaf x wire) payloads through the same shard_map
+gossip; wire bits are the SUM of both payloads.
+
+The gradient tracker is carried in shifted form (core/baselines.py
+TrackingState): state.s is last step's post-mix tracker and state.g_prev
+the gradient it already incorporates, so the live tracker at step k is
+y = s + g_k - g_prev and the stored invariant reads
+
+    sum_i s_i == sum_i g_prev_i        (== sum of live trackers - fresh
+                                        gradient refresh, at every step)
+
+— preserved exactly by any column-stochastic realized mixing: doubly
+stochastic static graphs, symmetric matching banks, and symmetric link
+drops under the renormalize fault policy (tests/test_invariant_tripwires
+asserts it per-step at 10% drops).  Directed banks (exponential_onepeer)
+keep it clean-path because every round matrix is doubly stochastic; only
+asymmetric fault masks on directed rounds break column sums.
+
+Identity compression collapses the recursion to exact lazy gradient
+tracking — x+ = M_gamma x - eta y, y+ = M_gamma y + g+ - g with M_gamma =
+(1-gamma) I + gamma W; gamma = 1 is DIGing / Aug-DGM (the identity pin in
+tests/test_cgt.py).  That form is also why C-GT survives the directed
+one-peer banks that break LEAD/CEDAS (ARCHITECTURE §4a vs §9): the
+homogeneous consensus pair is block-triangular with per-round factors
+M_k, so the period monodromy radius equals that of prod M_k <= 1 —
+products of row-stochastic matrices — instead of LEAD's dual pair whose
+radius exceeds 1 at every gamma past n ~ 16.
+
+With ``comm_interval`` tau > 1, skipped steps run ``local_stage``: the
+tracker refreshes (y = s + g - g_prev) and drives the descent x - eta y,
+but BOTH reference pairs freeze — they mirror what neighbors hold, and no
+wire fired.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.baselines import TrackingState
+from repro.core.engines.base import FlatEngineBase
+from repro.core.lead import Schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatCGTEngine(FlatEngineBase):
+    """C-GT on the flat substrate; mirrors core/baselines.py CGT exactly
+    (wire j draws under fold_in(key, j) — the multi-wire randomness
+    contract both sides share).
+
+    compressor=None ships both raw differences (exact path, 2 d * 32
+    bits); any encode_blocks operator compresses both wires.  Hypers are
+    Schedules resolved at state.k inside the scan.
+    """
+    eta: Schedule = 0.05
+    gamma: Schedule = 0.5
+    alpha: Schedule = 0.5
+
+    state_cls = TrackingState
+    consensus_init = {"s": "zeros", "g_prev": "zeros",
+                      "h_x": "copy", "hw_x": "copy",
+                      "h_s": "zeros", "hw_s": "zeros"}
+    wire_fields = ("x", "s")
+
+    def init(self, x0, g0, key):
+        xb = self.blockify(x0)
+        z = jnp.zeros_like(xb)
+        return TrackingState(x=xb, s=z, g_prev=z, h_x=xb, hw_x=self._mix(xb),
+                             h_s=z, hw_s=z, k=jnp.zeros((), jnp.int32))
+
+    def message(self, s: TrackingState, gb, hy):
+        y = s.s + gb - s.g_prev                 # live tracker at step k
+        return (s.x - s.h_x, y - s.h_s), y
+
+    def apply_stage(self, s: TrackingState, gb, q, wq, hy, ctx):
+        y = ctx
+        q_x, q_s = q
+        wq_x, wq_s = wq
+        alpha = hy["alpha"]
+        xhat = s.h_x + q_x
+        shat = s.h_s + q_s
+        if self._bank:
+            # wq is already W_k q (mix_payload slices the bank at s.k);
+            # recompute the mixed public copies with the STEP's graph —
+            # the incremental sum would mix past q's with different round
+            # graphs and lose hw == W h (same branch as LEAD/CEDAS).
+            wh_x = self.mix_round(s.h_x, s.k)
+            wh_s = self.mix_round(s.h_s, s.k)
+            xhat_w = wh_x + wq_x
+            shat_w = wh_s + wq_s
+            hw_x = wh_x + alpha * wq_x
+            hw_s = wh_s + alpha * wq_s
+        else:
+            xhat_w = s.hw_x + wq_x
+            shat_w = s.hw_s + wq_s
+            hw_x = s.hw_x + alpha * wq_x
+            hw_s = s.hw_s + alpha * wq_s
+        x = s.x - hy["gamma"] * (xhat - xhat_w) - hy["eta"] * y
+        s_new = y - hy["gamma"] * (shat - shat_w)
+        new = TrackingState(x=x, s=s_new, g_prev=gb,
+                            h_x=s.h_x + alpha * q_x, hw_x=hw_x,
+                            h_s=s.h_s + alpha * q_s, hw_s=hw_s, k=s.k + 1)
+        # Trace convention: comp_err reports the ITERATE wire
+        return new, self.rel_err(q_x, s.x - s.h_x, s.x)
+
+    def local_stage(self, s: TrackingState, gb, hy):
+        """tau-interval non-communication step: the tracker refresh and the
+        descent run locally; both wires' reference pairs FREEZE (they
+        mirror neighbor-held replicas, and no wire fired)."""
+        y = s.s + gb - s.g_prev
+        new = TrackingState(x=s.x - hy["eta"] * y, s=y, g_prev=gb,
+                            h_x=s.h_x, hw_x=s.hw_x,
+                            h_s=s.h_s, hw_s=s.hw_s, k=s.k + 1)
+        return new, jnp.zeros((), jnp.float32)

@@ -717,10 +717,26 @@ def make_train_step(cfg, mesh, prof: shr.ShardingProfile, dc: DistConfig):
             return new_x, new_algo
 
         def comm(_):
-            msgs, ctxs = [], []
-            for s_leaf, gb in zip(states, gbs):
+            # multi-wire engines (eng.wire_fields beyond one entry — C-GT
+            # ships an iterate payload AND a tracker payload) flatten into
+            # the same per-leaf pipeline: the message list holds n_wires
+            # consecutive entries per leaf (leaf-major order), each wire j
+            # encoding under fold_in(leaf_key, j) — the engine's own
+            # multi-wire stream, so simulator and trainer draws agree —
+            # and gossip_payloads exchanges every flat entry unchanged.
+            # bits_total sums over (leaf x wire): both buffers really
+            # cross the wire each exchange.
+            n_wires = eng.n_wires
+            msgs, ctxs, wire_keys, wire_dims = [], [], [], []
+            for kk, s_leaf, gb, d_leaf in zip(keys, states, gbs, d_leafs):
                 msg, ctx = eng.message(s_leaf, gb, hy)
-                msgs.append(msg)
+                wires = msg if n_wires > 1 else (msg,)
+                assert len(wires) == n_wires, (eng.wire_fields, len(wires))
+                msgs.extend(wires)
+                wire_keys.extend([kk] if n_wires == 1 else
+                                 [jax.random.fold_in(kk, j)
+                                  for j in range(n_wires)])
+                wire_dims.extend([d_leaf] * n_wires)
                 ctxs.append(ctx)
             if hier:
                 # exact block mean BEFORE encode: each node quantizes one
@@ -728,7 +744,7 @@ def make_train_step(cfg, mesh, prof: shr.ShardingProfile, dc: DistConfig):
                 msgs = pmean_intra(msgs)
             payloads = []
             bits_total = jnp.zeros((), jnp.float32)
-            for kk, msg, d_leaf in zip(keys, msgs, d_leafs):
+            for kk, msg, d_leaf in zip(wire_keys, msgs, wire_dims):
                 if comp is not None:
                     payload, bits = comp.encode_blocks(
                         kk, msg, d_leaf, interpret=dc.interpret)
@@ -761,6 +777,13 @@ def make_train_step(cfg, mesh, prof: shr.ShardingProfile, dc: DistConfig):
                 dropped = jnp.sum(present & ~masks).astype(jnp.float32)
             q_wqs = gossip_payloads(payloads, masks,
                                     step=state.step if P_bank > 1 else None)
+            if n_wires > 1:
+                # regroup the flat (leaf x wire) results back to one
+                # (q-tuple, wq-tuple) pair per leaf — the shape apply_stage
+                # expects from a multi-wire engine
+                q_wqs = [(tuple(q for q, _ in q_wqs[i:i + n_wires]),
+                          tuple(wq for _, wq in q_wqs[i:i + n_wires]))
+                         for i in range(0, len(q_wqs), n_wires)]
 
             new_states = [eng.apply_stage(s_leaf, gb, q, wq, hy, ctx)[0]
                           for s_leaf, gb, (q, wq), ctx

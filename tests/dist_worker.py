@@ -404,6 +404,53 @@ def case_baselines_multihost():
     assert err < 1e-4 * max(scale, 1.0), err
 
 
+def case_cgt_train():
+    """C-GT through the multi-wire trainer path: every exchange ships TWO
+    encoded payloads per leaf (iterate + tracker wires), so bits_per_agent
+    must equal exactly 2x the quantizer's static single-wire accounting;
+    the stored tracker invariant sum_i s_i == sum_i g_prev_i holds per
+    leaf after every step (doubly stochastic ring mixing preserves column
+    sums); and the loss decreases."""
+    from repro.core.compression import QuantizePNorm
+
+    mesh, cfg, prof, dc, state, batch, key, ds = _setup("cgt")
+    # gradient tracking wants a smaller stepsize than the LEAD-family
+    # default at this curvature (the tracker doubles the effective signal)
+    dc = dataclasses.replace(dc, hyper={"eta": 0.01, "gamma": 0.3,
+                                        "alpha": 0.5})
+    state = init_train_state(cfg, mesh, prof, dc, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, mesh, prof, dc))
+    loss_fn_v = jax.jit(jax.vmap(lambda p, b: tfm.loss_fn(p, cfg, b)[0]))
+    with set_mesh(mesh):
+        l0 = float(jnp.mean(loss_fn_v(state.params, batch)))
+        metrics = None
+        for i in range(12):
+            b = jax.device_put(lm_batch(ds, i),
+                               NamedSharding(mesh, shr.train_batch_spec(prof)))
+            state, metrics = step(state, b, jax.random.fold_in(key, i))
+        l1 = float(jnp.mean(loss_fn_v(state.params, batch)))
+
+    # tracker invariant: per leaf, sum over agents of s == sum of g_prev
+    inv = scale = 0.0
+    for ls, lg in zip(jax.tree_util.tree_leaves(state.algo["s"]),
+                      jax.tree_util.tree_leaves(state.algo["g_prev"])):
+        ssum = np.asarray(jax.device_get(jnp.sum(ls, 0)), np.float64)
+        gsum = np.asarray(jax.device_get(jnp.sum(lg, 0)), np.float64)
+        inv = max(inv, float(np.max(np.abs(ssum - gsum))))
+        scale = max(scale, float(np.max(np.abs(gsum))), 1e-6)
+
+    # both wires metered: exactly 2x the static single-wire accounting
+    quantizer = QuantizePNorm(bits=dc.bits, block=dc.block)
+    expect = 2 * sum(quantizer.wire_bits(l[0].size)
+                     for l in jax.tree_util.tree_leaves(state.params))
+    bits = float(metrics["bits_per_agent"])
+    print("CGT_MULTIHOST", l0, "->", l1, "invariant", inv, "/", scale,
+          "bits", bits, "expect", expect)
+    assert np.isfinite(l1) and l1 < l0, (l0, l1)
+    assert inv < 1e-3 * scale, (inv, scale)
+    assert abs(bits - expect) < 1e-3 * expect, (bits, expect)
+
+
 def case_faulted_checkpoint_resume():
     """Fault injection on the multi-host path: LEAD trains with gossip
     rounds masked by an active FaultModel (dropped_links metric shows real
@@ -611,6 +658,7 @@ if __name__ == "__main__":
      "lead_train": case_lead_train,
      "dryrun_multipod": case_dryrun_multipod,
      "perf_variants": case_perf_variants,
+     "cgt_train": case_cgt_train,
      "faulted_checkpoint_resume": case_faulted_checkpoint_resume,
      "topology_multihost": case_topology_multihost,
      "timevarying_multihost": case_timevarying_multihost}[case]()

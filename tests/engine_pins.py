@@ -1,0 +1,237 @@
+"""Consolidated invariant-pinning harness for the engine family.
+
+Not a test module: the per-algorithm suites (tests/test_flat_baselines.py,
+tests/test_cedas.py, tests/test_hierarchical.py, tests/test_cgt.py)
+parametrize these pins over registry keys instead of each carrying its own
+copy of the compare loop.  Every pin keeps the family's original
+tolerances — callers pass them explicitly where suites historically
+differed (ATOL for dense draw-for-draw equivalence, NB_ATOL where only the
+sparse mixing's float summation order separates the two sides).
+
+The pins:
+
+  * ``pin_free_run_vs_tree``     — dense gossip: the flat engine free-runs
+    the tree baseline's trajectory draw for draw, every state field;
+  * ``pin_per_step_vs_tree``     — sparse gossip: from each common state
+    along a real tree trajectory, one flat step matches one tree step
+    (isolates the mixing from trajectory chaos);
+  * ``pin_static_equals_period1_bank`` — wrapping a static graph in a
+    one-round TopologyBank changes nothing (the bank branch recomputes
+    ``W_k h`` where the static branch accumulates incrementally);
+  * ``pin_tau1_bit_identical`` / ``pin_node_size1_bit_identical`` — the
+    interval and hierarchy knobs' neutral settings reproduce the flat
+    every-step trace BIT-identically (np.array_equal, not allclose);
+  * ``pin_local_step_freezes``   — tau-interval skip steps move only the
+    iterate (plus gradient-refresh fields the engine declares), ship zero
+    bits, and freeze every communication-tracking field;
+  * ``pin_quantizer_bits_accounting`` — Trace.bits_per_agent under a
+    quantizer is exactly ``iters * n_wires * wire_bits(dim)`` (multi-wire
+    engines pay for every declared wire).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import topology
+from repro.core.convex import LinearRegression
+from repro.core.engines import engine_for, flat_twin
+from repro.core.simulator import run
+
+ATOL = 1e-5              # dense gossip: draw-for-draw equivalence
+NB_ATOL = 3e-5           # neighbor exchange: float summation order only
+
+
+def well_posed_problem(key=None, n_agents=8, m=64, d=256, **kw):
+    """LinearRegression with n_agents * m > d, so the global Hessian has
+    full rank and mu > 0: quantization noise contracts instead of random-
+    walking in a nullspace.  Every convergence-threshold assertion in the
+    suites should build its problem here (or through the conftest fixture
+    wrapping it) — on a rank-deficient problem dist drifts after
+    converging, by design, and thresholds turn flaky."""
+    assert n_agents * m > d, (n_agents, m, d)
+    prob = LinearRegression.generate(key if key is not None
+                                     else jax.random.PRNGKey(0),
+                                     n_agents=n_agents, m=m, d=d, **kw)
+    mu, _ = prob.mu_L
+    assert float(mu) > 1e-8, float(mu)
+    return prob
+
+
+def blockify_state(eng, st):
+    """Tree state -> the engine's blocked layout (same NamedTuple class)."""
+    if isinstance(st, tuple) and hasattr(st, "_asdict"):
+        vals = {f: eng.blockify(v) if getattr(v, "ndim", 0) == 2 else v
+                for f, v in st._asdict().items()}
+        return type(st)(**vals)
+    raise TypeError(type(st))
+
+
+def assert_fields_close(eng, st_f, st_t, k, atol=ATOL, unblock=True):
+    """Every state field of the flat step within atol of the tree step's
+    (relative to the field's own scale); the iteration counter is exempt."""
+    for f in st_t._fields:
+        if f == "k":
+            continue
+        ref = getattr(st_t, f)
+        got = getattr(st_f, f)
+        if unblock:
+            got = eng.unblockify(got)
+        dev = float(jnp.max(jnp.abs(got - ref)))
+        tol = atol * (1.0 + float(jnp.max(jnp.abs(ref))))
+        assert dev <= tol, f"step {k}, field {f}: deviation {dev}"
+
+
+def pin_free_run_vs_tree(tree, dim, prob, steps=15, atol=ATOL,
+                         check_comp_err=True, key=None):
+    """Dense gossip: flat_twin(tree) free-runs the tree trajectory draw for
+    draw — same per-agent (and, multi-wire, per-wire) compressor key
+    splits — so every state field stays within atol at every step."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    eng = flat_twin(tree, dim)
+    with_metrics = hasattr(tree, "step_with_metrics")
+    tree_step = jax.jit(tree.step_with_metrics if with_metrics
+                        else tree.step)
+    flat_step = jax.jit(eng.step_with_wire)
+
+    x0 = jnp.zeros((prob.n, prob.d))
+    g0 = prob.full_grad(x0)
+    st_t = tree.init(x0, g0, key)
+    st_f = eng.init(x0, g0, key)
+    for k in range(steps):
+        kk = jax.random.fold_in(key, k)
+        out = tree_step(st_t, prob.full_grad(st_t.x), kk)
+        st_t, cerr_t = out if with_metrics else (out, None)
+        st_f, cerr_f, _ = flat_step(st_f, prob.full_grad(eng.x_of(st_f)), kk)
+        assert_fields_close(eng, st_f, st_t, k, atol)
+        if check_comp_err and with_metrics:
+            np.testing.assert_allclose(float(cerr_f), float(cerr_t),
+                                       atol=1e-5)
+
+
+def pin_per_step_vs_tree(tree, dim, prob, steps=15, atol=NB_ATOL,
+                         gossip="neighbor", key=None):
+    """Sparse gossip: from each common state along a real tree trajectory,
+    one flat step matches the tree step (which mixes densely with the same
+    W_k) — only the mixing's float summation order separates them, so the
+    per-step comparison isolates it from trajectory chaos."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    eng = flat_twin(tree, dim, gossip=gossip)
+    tree_step = jax.jit(tree.step_with_metrics)
+    flat_step = jax.jit(eng.step_with_wire)
+
+    x0 = jnp.zeros((prob.n, prob.d))
+    g0 = prob.full_grad(x0)
+    st = tree.init(x0, g0, key)
+    for k in range(steps):
+        kk = jax.random.fold_in(key, k)
+        g = prob.full_grad(st.x)
+        st_t, cerr_t = tree_step(st, g, kk)
+        st_f, cerr_f, _ = flat_step(blockify_state(eng, st), g, kk)
+        assert_fields_close(eng, st_f, st_t, k, atol)
+        np.testing.assert_allclose(float(cerr_f), float(cerr_t), atol=1e-5)
+        st = st_t
+
+
+def pin_static_equals_period1_bank(algo, comp, dim, prob, gossip="dense",
+                                   steps=12, atol=ATOL, key=None, **hyper):
+    """A one-round TopologyBank is the static graph: from each common state
+    along a real trajectory, one bank step matches one static step to f32
+    reassociation tolerance, and both meter identical wire bits — the bank
+    branch recomputes its reference mixes (W_k h) where the static branch
+    accumulates them incrementally, equal in exact arithmetic."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    n = prob.n
+    ring = topology.ring(n)
+    mk = lambda topo: engine_for(topo, comp, dim, algorithm=algo,
+                                 gossip=gossip, **hyper)
+    eng_s, eng_b = mk(ring), mk(topology.bank([ring]))
+    step_s = jax.jit(eng_s.step_with_wire)
+    step_b = jax.jit(eng_b.step_with_wire)
+
+    x0 = jnp.zeros((prob.n, prob.d))
+    g0 = prob.full_grad(x0)
+    st = eng_s.init(x0, g0, key)
+    st_b0 = eng_b.init(x0, g0, key)
+    for f in st._fields:                     # identical init
+        np.testing.assert_array_equal(np.asarray(getattr(st, f)),
+                                      np.asarray(getattr(st_b0, f)),
+                                      err_msg=f)
+    for k in range(steps):
+        kk = jax.random.fold_in(key, k)
+        g = prob.full_grad(eng_s.x_of(st))
+        st_s, _, bits_s = step_s(st, g, kk)
+        st_b, _, bits_b = step_b(st, g, kk)
+        assert_fields_close(eng_s, st_b, st_s, k, atol, unblock=False)
+        assert float(bits_s) == float(bits_b)
+        st = st_s
+
+
+def _bit_identical_traces(eng_a, eng_b, prob, iters=10, key=None):
+    key = key if key is not None else jax.random.PRNGKey(3)
+    ta = run(eng_a, prob, prob.x_star, iters=iters, key=key)
+    tb = run(eng_b, prob, prob.x_star, iters=iters, key=key)
+    np.testing.assert_array_equal(np.asarray(ta.dist), np.asarray(tb.dist))
+    np.testing.assert_array_equal(np.asarray(ta.bits_per_agent),
+                                  np.asarray(tb.bits_per_agent))
+
+
+def pin_tau1_bit_identical(algo, comp, dim, prob, iters=10, **hyper):
+    """with_interval(1) reproduces the flat every-step trajectory
+    BIT-identically — tau=1 is branch-free, not merely close."""
+    n = prob.n
+    a = engine_for(topology.ring(n), comp, dim, algorithm=algo,
+                   gossip="neighbor", **hyper)
+    b = engine_for(topology.ring(n).with_interval(1), comp, dim,
+                   algorithm=algo, gossip="neighbor", **hyper)
+    _bit_identical_traces(a, b, prob, iters)
+
+
+def pin_node_size1_bit_identical(algo, comp, dim, prob, iters=10, **hyper):
+    """hierarchical(inter, 1) under gossip='hier' reproduces the flat run
+    on the inter graph BIT-identically — 1-agent nodes are free."""
+    n = prob.n
+    a = engine_for(topology.ring(n), comp, dim, algorithm=algo,
+                   gossip="neighbor", **hyper)
+    b = engine_for(topology.hierarchical(topology.ring(n), 1), comp, dim,
+                   algorithm=algo, gossip="hier", **hyper)
+    _bit_identical_traces(a, b, prob, iters)
+
+
+def pin_local_step_freezes(algo, comp, dim, n=8, moving=("x",), key=None,
+                           **hyper):
+    """tau=2 interval: the comm step (k=0) ships bits, the skip step (k=1)
+    ships ZERO bits and freezes every communication-tracking state field;
+    only the iterate x — plus any gradient-refresh fields the caller lists
+    in ``moving`` (C-GT's tracker refresh runs locally) — may change."""
+    key = key if key is not None else jax.random.PRNGKey(4)
+    eng = engine_for(topology.ring(n).with_interval(2), comp, dim,
+                     algorithm=algo, gossip="neighbor", **hyper)
+    x0 = jax.random.normal(key, (n, dim))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (n, dim))
+    s1 = eng.init(x0, jax.random.normal(jax.random.fold_in(key, 2),
+                                        (n, dim)), key)
+    s1, _, bits1 = eng.step_with_wire(s1, eng.blockify(g), key)   # k=0 comm
+    s2, _, bits2 = eng.step_with_wire(s1, eng.blockify(g), key)   # k=1 local
+    assert float(bits1) > 0.0
+    assert float(bits2) == 0.0
+    assert not np.array_equal(np.asarray(s2.x), np.asarray(s1.x))
+    for f in eng.consensus_init:
+        if f in moving or f == "x":
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(getattr(s2, f)), np.asarray(getattr(s1, f)),
+            err_msg=f"{algo}.{f} moved on a local (skip) step")
+
+
+def pin_quantizer_bits_accounting(algo, quantizer, dim, prob, iters=10,
+                                  key=None, **hyper):
+    """The bits x-axis under a quantizer is exactly iters * n_wires *
+    wire_bits(dim): multi-wire engines (C-GT) meter every declared wire,
+    single-wire engines reproduce the historical accounting unchanged."""
+    n = prob.n
+    eng = engine_for(topology.ring(n), quantizer, dim, algorithm=algo,
+                     gossip="neighbor", **hyper)
+    tr = run(eng, prob, prob.x_star, iters=iters,
+             key=key if key is not None else jax.random.PRNGKey(0))
+    expect = (np.arange(iters) + 1) * eng.n_wires * quantizer.wire_bits(dim)
+    np.testing.assert_allclose(tr.bits_per_agent, expect)

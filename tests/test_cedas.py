@@ -37,6 +37,8 @@ from repro.core.convex import LinearRegression
 from repro.core.engines import engine_for, flat_twin, is_exact
 from repro.core.simulator import run
 
+import engine_pins
+
 N, D = 8, 768
 STEPS = 12
 ATOL = 1e-5
@@ -58,16 +60,6 @@ def _prob():
     return key, LinearRegression.generate(key, n_agents=N, m=64, d=D)
 
 
-def _compare(eng, st_f, st_t, k):
-    for f in st_t._fields:
-        if f == "k":
-            continue
-        ref = getattr(st_t, f)
-        dev = float(jnp.max(jnp.abs(eng.unblockify(getattr(st_f, f)) - ref)))
-        tol = ATOL * (1.0 + float(jnp.max(jnp.abs(ref))))
-        assert dev <= tol, f"step {k}, field {f}: deviation {dev}"
-
-
 @pytest.mark.parametrize("comp_name", sorted(COMPRESSORS))
 @pytest.mark.parametrize("topo_name", sorted(TOPOS))
 def test_cedas_flat_free_runs_tree_dense(topo_name, comp_name):
@@ -77,20 +69,8 @@ def test_cedas_flat_free_runs_tree_dense(topo_name, comp_name):
     key, prob = _prob()
     tree = CEDAS(topology=TOPOS[topo_name](), compressor=COMPRESSORS[comp_name],
                  eta=0.02, gamma=0.5, alpha=0.5)
-    eng = flat_twin(tree, D)
-    tree_step = jax.jit(tree.step_with_metrics)
-    flat_step = jax.jit(eng.step_with_wire)
-
-    x0 = jnp.zeros((N, D))
-    g0 = prob.full_grad(x0)
-    st_t = tree.init(x0, g0, key)
-    st_f = eng.init(x0, g0, key)
-    for k in range(STEPS):
-        kk = jax.random.fold_in(key, k)
-        st_t, cerr_t = tree_step(st_t, prob.full_grad(st_t.x), kk)
-        st_f, cerr_f, _ = flat_step(st_f, prob.full_grad(eng.x_of(st_f)), kk)
-        _compare(eng, st_f, st_t, k)
-        np.testing.assert_allclose(float(cerr_f), float(cerr_t), atol=1e-5)
+    engine_pins.pin_free_run_vs_tree(tree, D, prob, steps=STEPS, atol=ATOL,
+                                     key=key)
 
 
 @pytest.mark.parametrize("topo_name", sorted(TOPOS))
@@ -103,29 +83,9 @@ def test_cedas_flat_neighbor_step_equals_tree(topo_name):
     key, prob = _prob()
     tree = CEDAS(topology=TOPOS[topo_name](), compressor=COMPRESSORS["quant4"],
                  eta=0.02, gamma=0.5, alpha=0.5)
-    eng = flat_twin(tree, D, gossip="neighbor")
-    tree_step = jax.jit(tree.step_with_metrics)
-    flat_step = jax.jit(eng.step_with_wire)
-
-    x0 = jnp.zeros((N, D))
-    g0 = prob.full_grad(x0)
-    st = tree.init(x0, g0, key)
-    for k in range(STEPS):
-        kk = jax.random.fold_in(key, k)
-        g = prob.full_grad(st.x)
-        st_t, _ = tree_step(st, g, kk)
-        vals = {f: eng.blockify(v) if getattr(v, "ndim", 0) == 2 else v
-                for f, v in st._asdict().items()}
-        st_f, _, _ = flat_step(type(st)(**vals), g, kk)
-        for f in st_t._fields:
-            if f == "k":
-                continue
-            ref = getattr(st_t, f)
-            dev = float(jnp.max(jnp.abs(eng.unblockify(getattr(st_f, f))
-                                        - ref)))
-            tol = NB_ATOL * (1.0 + float(jnp.max(jnp.abs(ref))))
-            assert dev <= tol, f"step {k}, field {f}: deviation {dev}"
-        st = st_t
+    engine_pins.pin_per_step_vs_tree(tree, D, prob, steps=STEPS,
+                                     atol=NB_ATOL, gossip="neighbor",
+                                     key=key)
 
 
 def test_cedas_identity_is_exact_diffusion_d2():
@@ -168,35 +128,9 @@ def test_static_equals_period1_bank(algo, gossip):
     bit-untouched by the refactor (its jaxpr carries no bank machinery;
     the family equivalence suites pin its trajectories)."""
     key, prob = _prob()
-    ring = topology.ring(N)
-    comp = QuantizePNorm(bits=4, block=512)
-    mk = lambda topo: engine_for(topo, comp, D, algorithm=algo,
-                                 gossip=gossip, eta=0.02)
-    eng_s, eng_b = mk(ring), mk(topology.bank([ring]))
-    step_s = jax.jit(eng_s.step_with_wire)
-    step_b = jax.jit(eng_b.step_with_wire)
-
-    x0 = jnp.zeros((N, D))
-    g0 = prob.full_grad(x0)
-    st = eng_s.init(x0, g0, key)
-    st_b0 = eng_b.init(x0, g0, key)
-    for f in st._fields:                     # identical init
-        np.testing.assert_array_equal(np.asarray(getattr(st, f)),
-                                      np.asarray(getattr(st_b0, f)), err_msg=f)
-    for k in range(STEPS):
-        kk = jax.random.fold_in(key, k)
-        g = prob.full_grad(eng_s.x_of(st))
-        st_s, cerr_s, bits_s = step_s(st, g, kk)
-        st_b, cerr_b, bits_b = step_b(st, g, kk)
-        for f in st_s._fields:
-            if f == "k":
-                continue
-            ref = getattr(st_s, f)
-            dev = float(jnp.max(jnp.abs(getattr(st_b, f) - ref)))
-            tol = ATOL * (1.0 + float(jnp.max(jnp.abs(ref))))
-            assert dev <= tol, f"step {k}, field {f}: deviation {dev}"
-        assert float(bits_s) == float(bits_b)
-        st = st_s
+    engine_pins.pin_static_equals_period1_bank(
+        algo, QuantizePNorm(bits=4, block=512), D, prob, gossip=gossip,
+        steps=STEPS, atol=ATOL, key=key, eta=0.02)
 
 
 @pytest.mark.parametrize("algo", ["choco", "dcd", "cedas"])

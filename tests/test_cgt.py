@@ -1,0 +1,289 @@
+"""C-GT engine family contracts: the full engine_pins battery over the
+registry's first multi-wire engine, plus the pins only C-GT can exercise.
+
+  * flat vs tree — FlatCGTEngine free-runs the tree CGT trajectory draw
+    for draw on dense gossip (static ring AND one-peer bank; both wires'
+    compressor draws via the shared fold_in(key, wire) stream), and
+    matches per step under sparse neighbor exchange;
+  * algebraic reduction — with Identity compression (any alpha) C-GT *is*
+    exact lazy gradient tracking: x+ = M_g x - eta y, y+ = M_g y + g+ - g
+    with M_g = (1-gamma) I + gamma W; gamma = 1 is DIGing / Aug-DGM;
+  * static == period-1 bank, tau = 1 and node_size = 1 bit-identity, skip
+    steps freeze both error-feedback pairs while the tracker refreshes;
+  * wire accounting — TWO payloads per exchange: the bits x-axis is
+    exactly 2x the single-wire accounting, on the simulator and through
+    the hier (bits / node_size) and interval (bits / tau) knobs;
+  * the headline stability verdict — on exponential_onepeer(32), where
+    LEAD's dual-pair monodromy has radius ~1.218 at every gamma
+    (tests/test_cedas.py), C-GT's consensus pair is block-triangular
+    [[M_k, -eta I], [0, M_k]] so its period monodromy radius equals that
+    of prod M_k <= 1: measured EXACTLY 1 (the preserved-average mode)
+    with every other mode at 0 for gamma = 1 (n = 2^5: the period product
+    is uniform averaging) — C-GT lands on the STABLE side of the
+    boundary, and 4-bit C-GT converges to ~1e-9 end to end on both
+    n = 32 banks (benchmarks/BENCH_baselines.json records the row).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import topology
+from repro.core.baselines import CGT, TrackingState
+from repro.core.compression import Identity, QuantizePNorm, RandK
+from repro.core.convex import LinearRegression
+from repro.core.engines import engine_for, flat_twin, is_exact
+from repro.core.engines.cgt import FlatCGTEngine
+from repro.core.faults import FaultModel
+from repro.core.simulator import run
+
+import engine_pins
+
+N, D = 8, 768
+STEPS = 12
+COMP = QuantizePNorm(bits=4, block=512)
+
+TOPOS = {
+    "ring": lambda: topology.ring(N),
+    "onepeer": lambda: topology.exponential_onepeer(N),   # period-3 bank
+}
+COMPRESSORS = {
+    "quant4": QuantizePNorm(bits=4, block=512),
+    "randk": RandK(ratio=0.5),
+    "identity": Identity(),
+}
+
+
+def _prob():
+    key = jax.random.PRNGKey(0)
+    return key, LinearRegression.generate(key, n_agents=N, m=64, d=D)
+
+
+def _tree(topo, comp, **hyper):
+    hyper = {"eta": 0.02, "gamma": 0.5, "alpha": 0.5, **hyper}
+    return CGT(topology=topo, compressor=comp, **hyper)
+
+
+# ---------------------------------------------------------------------------
+# the shared battery (engine_pins) over the multi-wire engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("comp_name", sorted(COMPRESSORS))
+@pytest.mark.parametrize("topo_name", sorted(TOPOS))
+def test_cgt_flat_free_runs_tree_dense(topo_name, comp_name):
+    """Dense gossip: the flat engine free-runs the tree C-GT trajectory —
+    both wires' compressor draws, every state field, static and bank."""
+    key, prob = _prob()
+    tree = _tree(TOPOS[topo_name](), COMPRESSORS[comp_name])
+    engine_pins.pin_free_run_vs_tree(tree, D, prob, steps=STEPS,
+                                     atol=engine_pins.ATOL, key=key)
+
+
+@pytest.mark.parametrize("topo_name", sorted(TOPOS))
+def test_cgt_flat_neighbor_step_equals_tree(topo_name):
+    """Sparse neighbor exchange: per-step equivalence from common states —
+    only the mixing's float summation order separates the two sides."""
+    key, prob = _prob()
+    tree = _tree(TOPOS[topo_name](), COMPRESSORS["quant4"])
+    engine_pins.pin_per_step_vs_tree(tree, D, prob, steps=STEPS,
+                                     atol=engine_pins.NB_ATOL,
+                                     gossip="neighbor", key=key)
+
+
+@pytest.mark.parametrize("gossip", ["dense", "neighbor"])
+def test_cgt_static_equals_period1_bank(gossip):
+    key, prob = _prob()
+    engine_pins.pin_static_equals_period1_bank(
+        "cgt", COMP, D, prob, gossip=gossip, steps=STEPS,
+        atol=engine_pins.ATOL, key=key, eta=0.02)
+
+
+def test_cgt_tau1_and_node_size1_bit_identical():
+    _, prob = _prob()
+    engine_pins.pin_tau1_bit_identical("cgt", COMP, D, prob, eta=0.02)
+    engine_pins.pin_node_size1_bit_identical("cgt", COMP, D, prob, eta=0.02)
+
+
+def test_cgt_local_step_freezes_wire_state():
+    """Skip steps run the tracker refresh locally (s and g_prev move, x
+    descends) but BOTH wires' error-feedback pairs freeze — they mirror
+    neighbor-held replicas, and no wire fired."""
+    engine_pins.pin_local_step_freezes("cgt", COMP, D, n=N,
+                                       moving=("s", "g_prev"), eta=0.02)
+
+
+def test_cgt_bits_are_twice_single_wire():
+    """Multi-wire accounting: the bits x-axis is exactly 2x the quantizer's
+    static single-wire bits — and the exact (Identity) path meters
+    2 * d * 32 raw bits per step."""
+    _, prob = _prob()
+    engine_pins.pin_quantizer_bits_accounting("cgt", COMP, D, prob,
+                                              eta=0.02)
+    eng = engine_for(topology.ring(N), None, D, algorithm="cgt", eta=0.02)
+    assert eng.n_wires == 2 and eng.wire_fields == ("x", "s")
+    tr = run(eng, prob, prob.x_star, iters=5, key=jax.random.PRNGKey(0))
+    np.testing.assert_allclose(tr.bits_per_agent,
+                               (np.arange(5) + 1) * 2 * D * 32)
+
+
+# ---------------------------------------------------------------------------
+# algebraic reduction: Identity compression == exact lazy gradient tracking
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gamma", [1.0, 0.5])
+def test_cgt_identity_is_exact_gradient_tracking(gamma):
+    """Identity wire, any alpha: the engine's recursion collapses to
+    x+ = M_g x - eta y,  s+ = M_g y,  y = s + g - g_prev (DIGing at
+    gamma = 1) — pinned per step against the hand-rolled dense recursion,
+    which is exact regardless of stepsize stability."""
+    key = jax.random.PRNGKey(0)
+    prob = engine_pins.well_posed_problem()
+    n, d = prob.n, prob.d
+    eta = 0.2 / float(prob.mu_L[1])
+    eng = engine_for(topology.ring(n), None, d, algorithm="cgt", eta=eta,
+                     gamma=gamma, alpha=0.7)
+    step = jax.jit(eng.step_with_wire)
+    W = np.asarray(topology.ring(n).W, np.float64)
+    Mg = (1 - gamma) * np.eye(n) + gamma * W
+
+    x = np.zeros((n, d))
+    s = np.zeros((n, d))
+    gp = np.zeros((n, d))
+    st = eng.init(jnp.zeros((n, d)),
+                  prob.full_grad(jnp.zeros((n, d))), key)
+    for k in range(STEPS):
+        g = np.asarray(prob.full_grad(jnp.asarray(x, jnp.float32)),
+                       np.float64)
+        st, _, _ = step(st, eng.blockify(prob.full_grad(eng.x_of(st))),
+                        jax.random.fold_in(key, k))
+        y = s + g - gp
+        x, s, gp = Mg @ x - eta * y, Mg @ y, g
+        for f, ref in (("x", x), ("s", s), ("g_prev", gp)):
+            got = np.asarray(eng.unblockify(getattr(st, f)), np.float64)
+            dev = float(np.max(np.abs(got - ref)))
+            tol = 1e-5 * (1.0 + float(np.max(np.abs(ref))))
+            assert dev <= tol, f"step {k}, field {f}: deviation {dev}"
+
+
+def test_cgt_identity_diging_converges():
+    """gamma = 1 (DIGing) with Identity compression converges on the
+    well-posed problem at the gradient-tracking stepsize eta = 0.2/L (the
+    1/L LEAD default is OUTSIDE gradient tracking's stable range on
+    ring(8) — measured divergent — which is why the identity pin above is
+    per-step rather than convergence-based)."""
+    prob = engine_pins.well_posed_problem()
+    eta = 0.2 / float(prob.mu_L[1])
+    eng = engine_for(topology.ring(prob.n), None, prob.d, algorithm="cgt",
+                     eta=eta, gamma=1.0)
+    tr = run(eng, prob, prob.x_star, iters=600, key=jax.random.PRNGKey(0))
+    assert float(tr.dist[-1]) < 1e-2 * float(tr.dist[0]), \
+        (float(tr.dist[0]), float(tr.dist[-1]))
+    assert float(tr.consensus[-1]) < 1e-5, float(tr.consensus[-1])
+
+
+# ---------------------------------------------------------------------------
+# the headline: stability on the banks that break LEAD
+# ---------------------------------------------------------------------------
+
+def test_cgt_onepeer32_monodromy_stable():
+    """The boundary verdict, pinned from the same matrices that condemn
+    LEAD (tests/test_cedas.py::test_lead_onepeer32_monodromy_unstable):
+    C-GT's homogeneous consensus pair is block-triangular
+    [[M_k, -eta I], [0, M_k]], so its period monodromy radius equals the
+    radius of prod M_k — products of doubly stochastic matrices, <= 1 at
+    every gamma.  At gamma = 1 and n = 2^5 the period product is EXACTLY
+    uniform averaging: one preserved mode at 1, every other mode at 0."""
+    bk = topology.exponential_onepeer(32)
+    I = np.eye(bk.n)
+    for gamma, second_bound in [(1.0, 1e-9), (0.5, 0.6)]:
+        Phi = np.eye(bk.n)
+        for W in np.asarray(bk.Ws):
+            Phi = ((1 - gamma) * I + gamma * W) @ Phi
+        mods = np.sort(np.abs(np.linalg.eigvals(Phi)))[::-1]
+        assert mods[0] <= 1.0 + 1e-9, (gamma, mods[0])
+        assert mods[1] <= second_bound, (gamma, mods[1])
+    # gamma = 1: the period product IS J/n (uniform averaging)
+    Phi = np.eye(bk.n)
+    for W in np.asarray(bk.Ws):
+        Phi = W @ Phi
+    np.testing.assert_allclose(Phi, np.full((bk.n, bk.n), 1.0 / bk.n),
+                               atol=1e-12)
+
+
+@pytest.mark.parametrize("bank_name", ["onepeer", "matching"])
+def test_cgt_converges_on_n32_banks(bank_name):
+    """End to end: 4-bit C-GT converges to the consensual optimum on BOTH
+    n = 32 deg-1 banks — including directed exponential_onepeer(32),
+    where no LEAD hyper-parameter converges (measured dist ~1e-9 at 1200
+    iters; the 1e-6 threshold leaves 3 orders of headroom)."""
+    key = jax.random.PRNGKey(1)
+    prob = engine_pins.well_posed_problem(key, n_agents=32, m=64, d=256)
+    topo = (topology.exponential_onepeer(32) if bank_name == "onepeer"
+            else topology.random_matching(32, rounds=8))
+    eng = engine_for(topo, QuantizePNorm(bits=4, block=256), 256,
+                     algorithm="cgt", eta=0.2 / float(prob.mu_L[1]),
+                     gamma=0.5, alpha=0.5)
+    tr = run(eng, prob, prob.x_star, iters=1200, key=key)
+    assert float(tr.dist[-1]) < 1e-6, float(tr.dist[-1])
+    assert float(tr.consensus[-1]) < 1e-9, float(tr.consensus[-1])
+
+
+def test_cgt_converges_hier_and_interval(well_posed_prob):
+    """Both wire-cutting knobs: hierarchical two-level gossip (bits pay
+    1/node_size on both wires) and tau = 2 interval (bits exactly halve;
+    skip steps keep the tracker refreshing locally) still converge."""
+    prob = well_posed_prob
+    d = prob.d
+    q4 = QuantizePNorm(bits=4, block=256)
+    eta = 0.2 / float(prob.mu_L[1])
+    key = jax.random.PRNGKey(5)
+    flat = engine_for(topology.ring(8), q4, d, algorithm="cgt",
+                      gossip="neighbor", eta=eta, gamma=0.5)
+    tr_f = run(flat, prob, prob.x_star, iters=600, key=key)
+
+    hier = engine_for(topology.hierarchical(topology.ring(2), 4), q4, d,
+                      algorithm="cgt", gossip="hier", eta=eta, gamma=0.5)
+    tr_h = run(hier, prob, prob.x_star, iters=600, key=key)
+    assert float(tr_h.dist[-1]) < 5e-2, float(tr_h.dist[-1])
+    assert float(tr_h.consensus[-1]) < 1e-6, float(tr_h.consensus[-1])
+    assert float(tr_h.bits_per_agent[-1]) == \
+        float(tr_f.bits_per_agent[-1]) / 4
+
+    tau2 = engine_for(topology.ring(8).with_interval(2), q4, d,
+                      algorithm="cgt", gossip="neighbor", eta=eta,
+                      gamma=0.5)
+    tr_t = run(tau2, prob, prob.x_star, iters=600, key=key)
+    assert float(tr_t.dist[-1]) < 5e-2, float(tr_t.dist[-1])
+    assert float(tr_t.bits_per_agent[-1]) == \
+        float(tr_f.bits_per_agent[-1]) / 2
+
+
+# ---------------------------------------------------------------------------
+# registry + fault wiring
+# ---------------------------------------------------------------------------
+
+def test_cgt_registry_dispatch():
+    """'cgt' and 'c-gt' dispatch to the multi-wire engine; flat_twin
+    mirrors a tree instance's hypers and bank topology; the stale fault
+    policy is rejected (ONE stale cache per agent cannot hold two wires),
+    renormalize accepted."""
+    assert not is_exact("cgt")
+    bk = topology.exponential_onepeer(8)
+    tree = CGT(topology=bk, compressor=RandK(ratio=0.5),
+               eta=0.03, gamma=0.7, alpha=0.9)
+    eng = flat_twin(tree, D)
+    assert isinstance(eng, FlatCGTEngine)
+    assert eng.eta == 0.03 and eng.gamma == 0.7 and eng.alpha == 0.9
+    assert isinstance(eng.topology, topology.TopologyBank)
+    assert isinstance(engine_for(topology.ring(4), COMP, D,
+                                 algorithm="c-gt"), FlatCGTEngine)
+    assert isinstance(tree.init(jnp.zeros((8, D)), jnp.zeros((8, D)),
+                                jax.random.PRNGKey(0)), TrackingState)
+
+    fm_ok = FaultModel(seed=1, link_drop=0.2, policy="renormalize")
+    eng = engine_for(topology.ring(N), COMP, D, algorithm="cgt",
+                     faults=fm_ok)
+    assert eng.faults is fm_ok
+    with pytest.raises(AssertionError, match="multi-wire"):
+        engine_for(topology.ring(N), COMP, D, algorithm="cgt",
+                   faults=FaultModel(seed=1, link_drop=0.2, policy="stale"))

@@ -1,0 +1,140 @@
+"""Property tests for the flat wire codec (encode_blocks / decode_blocks).
+
+test_compression.py pins the tree-path operators (compress) and one fixed
+flat-vs-tree equivalence case; these properties sweep the WIRE path itself
+over random dims/seeds/ratios through the hypothesis shim:
+
+  * round-trip error bound   — quantizer decode error respects the
+    per-block quantization step for any dim/bits; sparsifier decodes are
+    exact on the kept support and zero elsewhere (including the layout
+    padding tail, which must never leak);
+  * payload-bit exactness    — metered bits equal the bits the payload
+    actually needs: dim*(b+1) + ceil(dim/block)*32 for the quantizer
+    (logical elements only, never the padded tail), 32 per actually-kept
+    entry for shared-seed RandK, k*(32+log2 d) for exact TopK;
+  * dither-plane determinism — the same wire key yields a bit-identical
+    payload (resume/replay safety), a different key moves the stochastic
+    operators' dither, and exact TopK is key-free (data-deterministic).
+
+The RandK property doubles as the shared-seed wire contract (paper
+App. C.2): the receiver regenerates the keep-mask from the key alone, so
+the test reconstructs it independently via the documented identity
+``bernoulli(key, p) == uniform(key) < p`` and requires the decoded support
+to match it exactly.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # container image has no hypothesis
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core.compression import QuantizePNorm, RandK, TopK
+
+BLOCK = 128
+N = 3
+
+
+def _buf(x, block=BLOCK):
+    """(n, d) rows -> zero-padded (n, nb, block) wire layout."""
+    n, d = x.shape
+    nb = -(-d // block)
+    return jnp.pad(x, ((0, 0), (0, nb * block - d))).reshape(n, nb, block)
+
+
+@settings(max_examples=12, deadline=None)
+@given(dim=st.integers(1, 1500), bits=st.integers(1, 6),
+       seed=st.integers(0, 2**30))
+def test_quantizer_wire_roundtrip_and_bits(dim, bits, seed):
+    q = QuantizePNorm(bits=bits, block=BLOCK)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (N, dim))
+    payload, bits_w = q.encode_blocks(jax.random.PRNGKey(seed + 1),
+                                      _buf(x), dim)
+    dec = np.asarray(q.decode_blocks(payload).reshape(N, -1)[:, :dim])
+    # per-block quantization-step bound on the logical elements (padding is
+    # zeros, so the inf-norm block scale is the logical max unchanged)
+    nb = -(-dim // BLOCK)
+    xp = np.asarray(_buf(x))
+    step = np.abs(xp).max(axis=2) * 2.0 ** (1 - bits)          # (N, nb)
+    bound = np.repeat(step, BLOCK, axis=1)[:, :dim]
+    assert np.all(np.abs(dec - np.asarray(x)) <= bound + 1e-6)
+    # exact bit meter: logical elements + one f32 scale per logical block
+    assert float(bits_w) == dim * (bits + 1) + nb * 32
+
+
+@settings(max_examples=12, deadline=None)
+@given(dim=st.integers(1, 1500), seed=st.integers(0, 2**30),
+       ratio=st.sampled_from([0.05, 0.25, 0.5]))
+def test_randk_wire_sharedseed_support_and_bits(dim, seed, ratio):
+    r = RandK(ratio=ratio)
+    key = jax.random.PRNGKey(seed)
+    sgn = jnp.where(jax.random.bernoulli(key, 0.5, (N, dim)), 1.0, -1.0)
+    x = sgn * (0.1 + jax.random.uniform(jax.random.fold_in(key, 1),
+                                        (N, dim)))   # nonzero everywhere
+    wkey = jax.random.PRNGKey(seed + 7)
+    payload, bits_w = r.encode_blocks(wkey, _buf(x), dim)
+    rows = np.asarray(r.decode_blocks(payload).reshape(N, -1))
+    assert not rows[:, dim:].any(), "layout padding tail leaked onto the wire"
+    dec, xs = rows[:, :dim], np.asarray(x)
+    # receiver-side mask reconstruction from the shared key alone
+    u = np.asarray(jax.vmap(lambda kk: jax.random.uniform(
+        kk, (dim,), jnp.float32))(jax.random.split(wkey, N)))
+    mask = u < ratio
+    assert np.array_equal(dec != 0, mask)
+    np.testing.assert_allclose(dec[mask], xs[mask] / ratio, rtol=1e-5)
+    # 32 bits per actually-kept entry, averaged over agents, exact
+    assert float(bits_w) == pytest.approx(mask.sum() / N * 32.0, abs=1e-3)
+
+
+@settings(max_examples=12, deadline=None)
+@given(dim=st.integers(2, 1500), seed=st.integers(0, 2**30),
+       ratio=st.sampled_from([0.02, 0.1, 0.3]))
+def test_topk_wire_exact_k_support_and_bits(dim, seed, ratio):
+    t = TopK(ratio=ratio)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (N, dim))
+    payload, bits_w = t.encode_blocks(jax.random.PRNGKey(0), _buf(x), dim)
+    rows = np.asarray(t.decode_blocks(payload).reshape(N, -1))
+    assert not rows[:, dim:].any(), "layout padding tail leaked onto the wire"
+    dec, xs = rows[:, :dim], np.asarray(x)
+    k = t._k(dim)
+    kept = dec != 0
+    assert np.all(kept.sum(axis=1) == k), "wire must carry exactly k entries"
+    np.testing.assert_array_equal(dec[kept], xs[kept])
+    for i in range(N):       # kept magnitudes dominate dropped magnitudes
+        assert (np.abs(xs[i][kept[i]]).min()
+                >= np.abs(xs[i][~kept[i]]).max(initial=0.0))
+    assert float(bits_w) == pytest.approx(k * (32 + math.log2(dim)),
+                                          rel=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(dim=st.sampled_from([96, 512, 777]), seed=st.integers(0, 2**30))
+def test_dither_plane_determinism(dim, seed):
+    """Same wire key -> bit-identical payload and meter (replay/resume
+    safety); a fresh key moves the stochastic dither planes; exact TopK is
+    key-free, so its payload must NOT depend on the key at all."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (N, dim))
+    buf = _buf(x)
+    k1, k2 = jax.random.PRNGKey(seed + 1), jax.random.PRNGKey(seed + 2)
+    for comp, keyed in ((QuantizePNorm(bits=2, block=BLOCK), True),
+                        (RandK(ratio=0.25), True),
+                        (TopK(ratio=0.1), False)):
+        name = type(comp).__name__
+        pa, ba = comp.encode_blocks(k1, buf, dim)
+        pb, bb = comp.encode_blocks(k1, buf, dim)
+        for la, lb in zip(jax.tree_util.tree_leaves(pa),
+                          jax.tree_util.tree_leaves(pb)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                          err_msg=f"{name}: same key must "
+                                                  "replay bit-identically")
+        assert float(ba) == float(bb), name
+        pc, _ = comp.encode_blocks(k2, buf, dim)
+        differs = any(not np.array_equal(np.asarray(la), np.asarray(lc))
+                      for la, lc in zip(jax.tree_util.tree_leaves(pa),
+                                        jax.tree_util.tree_leaves(pc)))
+        assert differs == keyed, (name, "dither plane ignored the key"
+                                  if keyed else "exact TopK used the key")

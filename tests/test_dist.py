@@ -87,6 +87,14 @@ def test_distributed_lead_trains_and_keeps_invariant():
 
 
 @pytest.mark.slow
+def test_distributed_cgt_trains_two_wires():
+    """Multi-wire trainer path: C-GT ships iterate + tracker payloads per
+    exchange, keeps the tracker column-sum invariant across hosts, and
+    meters exactly 2x the single-wire bits."""
+    _run("cgt_train")
+
+
+@pytest.mark.slow
 def test_multipod_mesh_lowers_and_compiles():
     """(pod, data, model) mesh: train step + serve decode lower + compile,
     and the gossip lowers to collective-permute."""

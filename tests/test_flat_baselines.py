@@ -35,6 +35,8 @@ from repro.core.gossip import DenseGossip
 from repro.core.simulator import run
 from repro.core.engines.base import FlatEngineBase
 
+import engine_pins
+
 N, D = 8, 768          # two logical blocks per agent, second one ragged
 STEPS = 15
 ATOL = 1e-5
@@ -88,27 +90,8 @@ def test_flat_compressed_trajectory_equals_tree(algo_name, comp_name):
     trajectory (same per-agent compressor draws), all state fields."""
     key, prob, gossip = _setup()
     tree = _tree_algos(gossip, COMPRESSORS[comp_name])[algo_name]
-    eng = flat_twin(tree, D)
-    tree_step = jax.jit(tree.step_with_metrics)
-    flat_step = jax.jit(eng.step_with_wire)
-
-    x0 = jnp.zeros((N, D))
-    g0 = prob.full_grad(x0)
-    st_t = tree.init(x0, g0, key)
-    st_f = eng.init(x0, g0, key)
-    for k in range(STEPS):
-        kk = jax.random.fold_in(key, k)
-        st_t, cerr_t = tree_step(st_t, prob.full_grad(st_t.x), kk)
-        st_f, cerr_f, _ = flat_step(st_f, prob.full_grad(eng.x_of(st_f)), kk)
-        for f in st_t._fields:
-            if f == "k":
-                continue
-            ref = getattr(st_t, f)
-            dev = float(jnp.max(jnp.abs(eng.unblockify(getattr(st_f, f))
-                                        - ref)))
-            tol = ATOL * (1.0 + float(jnp.max(jnp.abs(ref))))
-            assert dev <= tol, f"step {k}, field {f}: deviation {dev}"
-        np.testing.assert_allclose(float(cerr_f), float(cerr_t), atol=1e-5)
+    engine_pins.pin_free_run_vs_tree(tree, D, prob, steps=STEPS, atol=ATOL,
+                                     key=key)
 
 
 @pytest.mark.parametrize("comp_name", sorted(COMPRESSORS))
@@ -119,28 +102,8 @@ def test_flat_ring_step_equals_tree_step(algo_name, comp_name):
     ATOL — only the ring mixing's summation order separates them."""
     key, prob, gossip = _setup()
     tree = _tree_algos(gossip, COMPRESSORS[comp_name])[algo_name]
-    eng = flat_twin(tree, D, gossip="ring")
-    tree_step = jax.jit(tree.step_with_metrics)
-    flat_step = jax.jit(eng.step_with_wire)
-
-    x0 = jnp.zeros((N, D))
-    g0 = prob.full_grad(x0)
-    st = tree.init(x0, g0, key)
-    for k in range(STEPS):
-        kk = jax.random.fold_in(key, k)
-        g = prob.full_grad(st.x)
-        st_t, cerr_t = tree_step(st, g, kk)
-        st_f, cerr_f, _ = flat_step(_blockify_state(eng, st), g, kk)
-        for f in st_t._fields:
-            if f == "k":
-                continue
-            ref = getattr(st_t, f)
-            dev = float(jnp.max(jnp.abs(eng.unblockify(getattr(st_f, f))
-                                        - ref)))
-            tol = ATOL * (1.0 + float(jnp.max(jnp.abs(ref))))
-            assert dev <= tol, f"step {k}, field {f}: deviation {dev}"
-        np.testing.assert_allclose(float(cerr_f), float(cerr_t), atol=1e-5)
-        st = st_t
+    engine_pins.pin_per_step_vs_tree(tree, D, prob, steps=STEPS, atol=ATOL,
+                                     gossip="ring", key=key)
 
 
 @pytest.mark.parametrize("gossip_mode", ["dense", "ring"])
@@ -199,27 +162,9 @@ def test_flat_schedule_trajectory_equals_tree(algo_name):
                                    eta=_diminishing_eta, gamma=0.2),
         "nids": NIDS(gossip=gossip, eta=_diminishing_eta),
     }[algo_name]
-    eng = flat_twin(tree, D)
-    assert eng.eta is _diminishing_eta      # flat_twin carries the schedule
-    tree_step = jax.jit(tree.step)
-    flat_step = jax.jit(eng.step_with_wire)
-
-    x0 = jnp.zeros((N, D))
-    g0 = prob.full_grad(x0)
-    st_t = tree.init(x0, g0, key)
-    st_f = eng.init(x0, g0, key)
-    for k in range(STEPS):
-        kk = jax.random.fold_in(key, k)
-        st_t = tree_step(st_t, prob.full_grad(st_t.x), kk)
-        st_f, _, _ = flat_step(st_f, prob.full_grad(eng.x_of(st_f)), kk)
-        for f in st_t._fields:
-            if f == "k":
-                continue
-            ref = getattr(st_t, f)
-            dev = float(jnp.max(jnp.abs(eng.unblockify(getattr(st_f, f))
-                                        - ref)))
-            tol = ATOL * (1.0 + float(jnp.max(jnp.abs(ref))))
-            assert dev <= tol, f"step {k}, field {f}: deviation {dev}"
+    assert flat_twin(tree, D).eta is _diminishing_eta   # schedule carries
+    engine_pins.pin_free_run_vs_tree(tree, D, prob, steps=STEPS, atol=ATOL,
+                                     check_comp_err=False, key=key)
 
 
 def test_baseline_schedule_runs_through_simulator():

@@ -34,6 +34,8 @@ from repro.core.faults import FaultModel
 from repro.core.gossip import HierarchicalGossip
 from repro.core.simulator import run
 
+import engine_pins
+
 N, D = 8, 768          # two logical blocks per agent, second one ragged
 COMP = QuantizePNorm(bits=4, block=512)
 
@@ -142,32 +144,13 @@ def test_interval_bits_are_flat_bits_over_tau(algo):
 
 @pytest.mark.parametrize("algo", ["lead", "choco"])
 def test_tau1_pinned_bit_identical(algo):
-    prob = _prob()
-    key = jax.random.PRNGKey(3)
-    a = engine_for(topology.ring(N), COMP, D, algorithm=algo,
-                   gossip="neighbor", eta=0.02)
-    b = engine_for(topology.ring(N).with_interval(1), COMP, D,
-                   algorithm=algo, gossip="neighbor", eta=0.02)
-    ta = run(a, prob, prob.x_star, iters=10, key=key)
-    tb = run(b, prob, prob.x_star, iters=10, key=key)
-    np.testing.assert_array_equal(np.asarray(ta.dist), np.asarray(tb.dist))
-    np.testing.assert_array_equal(np.asarray(ta.bits_per_agent),
-                                  np.asarray(tb.bits_per_agent))
+    engine_pins.pin_tau1_bit_identical(algo, COMP, D, _prob(), eta=0.02)
 
 
 @pytest.mark.parametrize("algo", ["lead", "choco"])
 def test_node_size_one_pinned_bit_identical(algo):
-    prob = _prob()
-    key = jax.random.PRNGKey(3)
-    a = engine_for(topology.ring(N), COMP, D, algorithm=algo,
-                   gossip="neighbor", eta=0.02)
-    b = engine_for(topology.hierarchical(topology.ring(N), 1), COMP, D,
-                   algorithm=algo, gossip="hier", eta=0.02)
-    ta = run(a, prob, prob.x_star, iters=10, key=key)
-    tb = run(b, prob, prob.x_star, iters=10, key=key)
-    np.testing.assert_array_equal(np.asarray(ta.dist), np.asarray(tb.dist))
-    np.testing.assert_array_equal(np.asarray(ta.bits_per_agent),
-                                  np.asarray(tb.bits_per_agent))
+    engine_pins.pin_node_size1_bit_identical(algo, COMP, D, _prob(),
+                                             eta=0.02)
 
 
 # ---------------------------------------------------------------------------
@@ -177,38 +160,19 @@ def test_node_size_one_pinned_bit_identical(algo):
 @pytest.mark.parametrize("algo", ["lead", "choco", "dcd", "dgd"])
 def test_local_step_freezes_communication_state(algo):
     comp = None if algo == "dgd" else COMP     # DGD is an exact baseline
-    eng = engine_for(topology.ring(N).with_interval(2), comp, D,
-                     algorithm=algo, gossip="neighbor", eta=0.02)
-    key = jax.random.PRNGKey(4)
-    x0 = jax.random.normal(key, (N, D))
-    g = jax.random.normal(jax.random.fold_in(key, 1), (N, D))
-    s1 = eng.init(x0, jax.random.normal(jax.random.fold_in(key, 2), (N, D)),
-                  key)
-    s1, _, bits1 = eng.step_with_wire(s1, eng.blockify(g), key)   # k=0 comm
-    s2, _, bits2 = eng.step_with_wire(s1, eng.blockify(g), key)   # k=1 local
-    assert float(bits1) > 0.0
-    assert float(bits2) == 0.0
-    assert not np.array_equal(np.asarray(s2.x), np.asarray(s1.x))
-    for f in eng.consensus_init:
-        if f == "x":
-            continue
-        np.testing.assert_array_equal(np.asarray(getattr(s2, f)),
-                                      np.asarray(getattr(s1, f)),
-                                      err_msg=f"{algo}.{f} moved on a "
-                                              f"local (skip) step")
+    engine_pins.pin_local_step_freezes(algo, comp, D, n=N, eta=0.02)
 
 
 # ---------------------------------------------------------------------------
 # convergence under the knobs
 # ---------------------------------------------------------------------------
 
-def test_lead_converges_hier_and_interval():
+def test_lead_converges_hier_and_interval(well_posed_prob):
     # well-posed problem (n*m > d so mu > 0): on the N=8, D=768 default the
     # global Hessian is rank-deficient and quantization noise random-walks
     # in its nullspace — dist would drift after converging, by design
-    d = 256
-    prob = LinearRegression.generate(jax.random.PRNGKey(0), n_agents=N,
-                                     m=64, d=d)
+    prob = well_posed_prob
+    d = prob.d
     key = jax.random.PRNGKey(5)
     eta = 1.0 / prob.mu_L[1]
     hier = engine_for(topology.hierarchical(topology.ring(2), 4), COMP, d,

@@ -1,0 +1,120 @@
+"""Per-step invariant tripwires under live fault injection.
+
+Each engine family carries one structural invariant that any wiring bug —
+wrong realized mixing matrix, asymmetric renormalization, a wire skipping
+the fault mask — breaks immediately, long before a convergence test would
+notice.  These tests drive the faulted step path directly at a 10% link
+drop rate (policy="renormalize") on the symmetric ring and assert the
+invariant after EVERY step:
+
+  * LEAD      — sum_i d_i == 0: the dual increment is gamma/(2 eta)
+    (I - W_k) Y-hat, and renormalize_dense keeps the realized W_k doubly
+    stochastic for symmetric masks (link drops fail both directions), so
+    the column sums of I - W_k stay zero under faults;
+  * CHOCO/DCD — the replica pair advances with the step's REALIZED graph:
+    xhat_w+ - xhat_w == renormalize_dense(W, mask_k) @ (xhat+ - xhat),
+    where mask_k is the deterministic counter-hash realization the engine
+    itself must have used (the reference recomputes it independently from
+    core/faults.py);
+  * C-GT      — sum_i s_i == sum_i g_prev_i (the shifted-tracker column-sum
+    invariant, on BOTH fault-masked wires at once): preserved exactly by
+    any column-stochastic realized mixing, i.e. by symmetric drops under
+    renormalize.
+
+Each run also asserts that drops actually realized — a tripwire that never
+saw a degraded round pins nothing.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import topology
+from repro.core.compression import QuantizePNorm
+from repro.core.convex import LinearRegression
+from repro.core.engines import engine_for
+from repro.core.faults import FaultModel, renormalize_dense
+
+N, D = 8, 256
+STEPS = 12
+FM = FaultModel(seed=7, link_drop=0.1, policy="renormalize")
+COMP = QuantizePNorm(bits=4, block=256)
+
+
+def _prob():
+    return LinearRegression.generate(jax.random.PRNGKey(0), n_agents=N,
+                                     m=64, d=D)
+
+
+def _drive_faulted(eng, prob, steps=STEPS):
+    """Yield (state_before, state_after, k) along a faulted trajectory."""
+    key = jax.random.PRNGKey(3)
+    step = jax.jit(eng.step_with_wire_faulted)
+    x0 = jnp.zeros((N, D))
+    st = eng.init(x0, prob.full_grad(x0), key)
+    fs = eng.init_fault_state(st)
+    for k in range(steps):
+        g = prob.full_grad(eng.x_of(st))
+        new, fs, _, _ = step(st, fs, eng.blockify(g),
+                             jax.random.fold_in(key, k))
+        yield st, new, k
+        st = new
+
+
+def _assert_drops_realized():
+    masks = [np.asarray(FM.dense_mask(k, N)) for k in range(STEPS)]
+    assert any((~m).any() for m in masks), \
+        "10% drops over 12 steps realized no fault; tripwires pin nothing"
+
+
+def test_lead_dual_sum_zero_under_drops():
+    _assert_drops_realized()
+    prob = _prob()
+    eng = engine_for(topology.ring(N), COMP, D, algorithm="lead",
+                     eta=0.05, gamma=0.5, faults=FM)
+    for _, st, k in _drive_faulted(eng, prob):
+        d = np.asarray(eng.unblockify(st.d), np.float64)
+        dev = float(np.max(np.abs(d.sum(axis=0))))
+        scale = 1.0 + float(np.max(np.abs(d)))
+        assert dev < 1e-4 * scale, f"step {k}: |sum_i d_i| = {dev}"
+
+
+def test_cgt_tracker_sum_invariant_under_drops():
+    _assert_drops_realized()
+    prob = _prob()
+    eng = engine_for(topology.ring(N), COMP, D, algorithm="cgt",
+                     eta=0.01, gamma=0.5, alpha=0.5, faults=FM)
+    for _, st, k in _drive_faulted(eng, prob):
+        s = np.asarray(eng.unblockify(st.s), np.float64)
+        gp = np.asarray(eng.unblockify(st.g_prev), np.float64)
+        dev = float(np.max(np.abs(s.sum(axis=0) - gp.sum(axis=0))))
+        scale = 1.0 + float(np.max(np.abs(gp)))
+        assert dev < 1e-4 * scale, \
+            f"step {k}: |sum s - sum g_prev| = {dev}"
+
+
+@pytest.mark.parametrize("algo", ["choco", "dcd"])
+def test_hat_pair_tracks_realized_graph(algo):
+    """The public-replica pair must advance with the step's realized
+    (renormalized) graph — recomputed here independently from the same
+    counter-hash realization the engine used.  Identity wire keeps the
+    comparison deterministic."""
+    _assert_drops_realized()
+    prob = _prob()
+    eng = engine_for(topology.ring(N), None, D, algorithm=algo,
+                     eta=0.02, faults=FM)
+    W = jnp.asarray(topology.ring(N).W, jnp.float32)
+    saw_drop = False
+    for st0, st1, k in _drive_faulted(eng, prob):
+        mask = FM.dense_mask(k, N)
+        saw_drop = saw_drop or bool(np.asarray(~mask).any())
+        W_real = np.asarray(renormalize_dense(W, mask), np.float64)
+        d_hat = (np.asarray(eng.unblockify(st1.xhat), np.float64)
+                 - np.asarray(eng.unblockify(st0.xhat), np.float64))
+        d_hat_w = (np.asarray(eng.unblockify(st1.xhat_w), np.float64)
+                   - np.asarray(eng.unblockify(st0.xhat_w), np.float64))
+        ref = W_real @ d_hat
+        dev = float(np.max(np.abs(d_hat_w - ref)))
+        scale = 1.0 + float(np.max(np.abs(ref)))
+        assert dev < 1e-5 * scale, f"step {k}: deviation {dev}"
+    assert saw_drop

@@ -19,7 +19,15 @@ from repro.models import attention as attn_mod
 from repro.models.transformer import logits_fn
 from repro.optim.optimizers import SGD
 
-ARCHS = list_archs()
+# The heaviest reduced configs (~7-9s per forward+train smoke on this
+# box) ride the slow lane so the file stays inside the quick-lane budget
+# (conftest.py, REPRO_FILE_BUDGET_S).  Every family still executes in the
+# quick lane: dense/moe/vlm/audio through the light archs below, ssm and
+# hybrid through test_recurrent_long_decode_state_is_bounded.
+_HEAVY = {"xlstm-1.3b", "deepseek-67b", "recurrentgemma-2b",
+          "granite-moe-1b-a400m"}
+ARCHS = [pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY else a
+         for a in list_archs()]
 
 
 def _batch_for(cfg, key, B=2, S=64):
