@@ -1,0 +1,89 @@
+"""Serving engine: continuous batching + quantized paged-KV numbers.
+
+A reduced config is first fit on modular counting (serve/demo.py) so its
+greedy argmax has real margins — token-identity under 4-bit KV is a
+meaningless claim for random-init logits (top-1/2 gaps ~0.2 flip under
+any perturbation).  The same engine episode — staggered prompt lengths,
+mid-stream admissions, evictions — then runs with an fp cache and with
+4-/7-bit wire-codec page pools, and must produce byte-for-byte the same
+greedy token streams.
+
+Rows (``derived`` carries the acceptance quantity):
+    serve/decode_step_b{B}              us per warm jitted decode step
+    serve/throughput_fp                 engine tokens/sec over the episode
+    serve/kv_bits_per_elem_4bit         (bits+1) + 32/block wire meter
+    serve/kv_hbm_reduction_4bit         fp pool bits / codec pool bits (>=3x)
+    serve/kv_hbm_reduction_total_4bit   incl. exact tails + page tables
+    serve/tokens_match_4bit             1 iff greedy streams == fp streams
+    serve/tokens_match_7bit             1 iff greedy streams == fp streams
+    serve/decode_recompiles_after_warmup  jit cache growth over episode (=0)
+
+Writes BENCH_serve.json to the CWD when run directly; under
+benchmarks/run.py --json it is collected like every other module.
+"""
+import jax
+
+from benchmarks.common import emit, peek_rows, time_us, write_json
+from repro.configs.registry import get_config
+from repro.serve import ServeConfig, ServeEngine
+from repro.serve.demo import counting_prompt, fit_counting_lm
+
+ARCH = "granite-3-2b"
+MAX_LEN = 128
+PAGE = 16
+PROMPTS = (12, 20, 33, 16)
+MAX_NEW = 40
+
+
+def _episode(cfg, params, kv_bits):
+    eng = ServeEngine(cfg, params, ServeConfig(
+        max_batch=2, max_len=MAX_LEN, page=PAGE, kv_bits=kv_bits))
+    rids = [eng.submit(counting_prompt(cfg, 31 * i, n), max_new=MAX_NEW)
+            for i, n in enumerate(PROMPTS)]
+    eng.step()                                   # warm both jitted fns
+    warm = eng.compile_stats()
+    res = eng.run()
+    growth = sum(eng.compile_stats().values()) - sum(warm.values())
+    streams = [tuple(res[r]["tokens"]) for r in rids]
+    return eng, streams, growth
+
+
+def main() -> None:
+    cfg = get_config(ARCH).reduced()
+    params, loss = fit_counting_lm(cfg, jax.random.PRNGKey(1))
+    print(f"# {ARCH} fit on counting, loss={loss:.4f}")
+
+    eng_fp, fp_streams, growth = _episode(cfg, params, None)
+    st = eng_fp.stats()
+    emit("serve/throughput_fp", st["decode_s"] / st["decode_steps"] * 1e6,
+         f"tokens_per_sec={st['tokens_per_sec']:.1f}")
+    emit("serve/decode_recompiles_after_warmup", 0.0, growth)
+
+    # warm per-step latency at a couple of batch widths
+    for B in (2, 8):
+        eng = ServeEngine(cfg, params, ServeConfig(
+            max_batch=B, max_len=MAX_LEN, page=PAGE))
+        for _ in range(B):
+            eng.submit(counting_prompt(cfg, 3, 12), max_new=MAX_NEW)
+        eng.step()
+        us = time_us(eng._decode, eng.params, eng.last_token, eng.cache,
+                     iters=10, warmup=2)
+        emit(f"serve/decode_step_b{B}", us, f"{B / us * 1e6:.0f} tok/s")
+
+    for bits in (4, 7):
+        eng_q, q_streams, _ = _episode(cfg, params, bits)
+        rep = eng_q.cache_report()
+        match = int(q_streams == fp_streams)
+        emit(f"serve/tokens_match_{bits}bit", 0.0, match)
+        if bits == 4:
+            emit("serve/kv_bits_per_elem_4bit", 0.0,
+                 round(rep["bits_per_elem"], 4))
+            emit("serve/kv_hbm_reduction_4bit", 0.0,
+                 round(rep["hbm_reduction_pool"], 3))
+            emit("serve/kv_hbm_reduction_total_4bit", 0.0,
+                 round(rep["hbm_reduction_total"], 3))
+
+
+if __name__ == "__main__":
+    main()
+    write_json("BENCH_serve.json", "serve", peek_rows())

@@ -12,6 +12,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
     bench_baselines     flat engine family vs tree baselines (Fig 2-4 sweep)
     bench_gossip        dense vs neighbor-exchange mixing at n in {8,32,128}
     bench_faults        masked degraded mixing overhead vs the clean path
+    bench_serve         continuous batching + quantized paged-KV serving
 
 ``--json OUT``: additionally write one machine-readable ``BENCH_<name>.json``
 per executed module into directory OUT (rows: name, us_per_call, derived) so
@@ -28,7 +29,7 @@ import traceback
 from benchmarks import (bench_baselines, bench_compression, bench_faults,
                         bench_gossip, bench_lead_step, bench_linreg,
                         bench_logreg, bench_nn, bench_roofline,
-                        bench_sensitivity, bench_theory)
+                        bench_sensitivity, bench_serve, bench_theory)
 from benchmarks.common import drain_rows, write_json
 
 ALL = {
@@ -43,6 +44,7 @@ ALL = {
     "baselines": bench_baselines.main,
     "gossip": bench_gossip.main,
     "faults": bench_faults.main,
+    "serve": bench_serve.main,
 }
 
 

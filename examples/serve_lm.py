@@ -1,9 +1,19 @@
-"""Serving example: prefill a batch of prompts then decode tokens with the
-production cache layout (full + rolling-window caches, GQA).
+"""Serving example: continuous batching over the paged, optionally
+wire-codec-quantized KV cache (repro.serve).
 
-    PYTHONPATH=src python examples/serve_lm.py [--arch gemma3-12b]
-(reduced configs; greedy sampling from random-init weights — demonstrates
-the serving *mechanics*: batched prefill, ring-buffer local caches, decode.)
+    PYTHONPATH=src python examples/serve_lm.py [--arch granite-3-2b]
+        [--kv-bits 4] [--page 16] [--fit-steps 200]
+
+Submits a staggered batch of prompts to the ServeEngine (admission queue,
+page-table-backed cache, eviction on max_new) and reports tokens/sec,
+KV-cache bytes fp vs quantized, and the wire-meter bits/elem.  With
+--fit-steps > 0 the reduced model is first fit on modular counting
+(serve/demo.py) so generations are meaningful and the quantized engine's
+token streams can be checked against the fp engine's.
+
+Recurrent / cross-attention families (xlstm, recurrentgemma, whisper,
+vlm) fall back to the legacy contiguous prefill+decode path — the paged
+cache serves attention block stacks only.
 """
 import argparse
 import time
@@ -16,20 +26,51 @@ from repro.data.synthetic import stub_memory
 from repro.models import decode_step, init_params, prefill
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="gemma3-12b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=96)
-    ap.add_argument("--gen", type=int, default=32)
-    args = ap.parse_args()
+def paged_demo(cfg, args) -> None:
+    from repro.serve import ServeConfig, ServeEngine
+    from repro.serve.demo import counting_prompt, fit_counting_lm
 
-    cfg = get_config(args.arch).reduced()
-    # serving resolves only the model-config registry: no decentralized
-    # engine is involved (print it so docs and runs can't silently diverge)
-    print(f"registry: arch={args.arch} -> {cfg.name} (family={cfg.family}) "
-          "via repro.configs.registry; algorithm=none compressor=none "
-          "gossip=none (serving path)")
+    key = jax.random.PRNGKey(0)
+    if args.fit_steps > 0:
+        t0 = time.time()
+        params, loss = fit_counting_lm(cfg, key, steps=args.fit_steps)
+        print(f"fit on counting: {args.fit_steps} steps, "
+              f"loss={loss:.4f} ({time.time()-t0:.1f}s)")
+    else:
+        params = init_params(cfg, key)
+        print("random-init weights: token streams are noise; pass "
+              "--fit-steps 200 for a model with real greedy margins")
+
+    max_len = args.prompt_len + args.gen
+    max_len += (-max_len) % args.page                  # whole pages
+    scfg = ServeConfig(max_batch=args.batch, max_len=max_len,
+                       page=args.page, kv_bits=args.kv_bits)
+    eng = ServeEngine(cfg, params, scfg)
+    prompt_lens = [max(1, args.prompt_len - 7 * i) for i in range(2 * args.batch)]
+    for i, n in enumerate(prompt_lens):
+        eng.submit(counting_prompt(cfg, 31 * i, n), max_new=args.gen)
+    t0 = time.time()
+    results = eng.run()
+    wall = time.time() - t0
+
+    st, rep = eng.stats(), eng.cache_report()
+    print(f"{cfg.name}: served {len(results)} sequences "
+          f"({st['admitted']} admitted / {st['evicted']} evicted, "
+          f"queue peak {st['queued_peak']}) in {wall:.2f}s")
+    print(f"throughput: {st['tokens_per_sec']:.1f} tokens/sec over "
+          f"{st['decode_steps']} decode steps "
+          f"(compiles: {st['decode_compiles']} decode / "
+          f"{st['prefill_compiles']} prefill)")
+    print(f"kv cache: {rep['paged_bytes']/1024:.1f} KiB paged "
+          f"({rep['bits_per_elem']:.4f} bits/elem pool) vs "
+          f"{rep['fp_bytes']/1024:.1f} KiB contiguous fp — "
+          f"pool reduction {rep['hbm_reduction_pool']:.2f}x, "
+          f"total {rep['hbm_reduction_total']:.2f}x")
+    rid = min(results)
+    print("sample token ids:", results[rid]["tokens"][:16])
+
+
+def contiguous_demo(cfg, args) -> None:
     key = jax.random.PRNGKey(0)
     params = init_params(cfg, key)
     B, S = args.batch, args.prompt_len
@@ -55,8 +96,41 @@ def main():
     jax.block_until_ready(tok)
     dt = (time.time() - t0) / (args.gen - 1)
     gen = jnp.concatenate(out, 1)
-    print(f"decoded {args.gen} tokens/seq, {dt*1e3:.1f} ms/token")
+    print(f"decoded {args.gen} tokens/seq, {dt*1e3:.1f} ms/token "
+          f"({B/dt:.0f} tokens/sec)")
     print("sample token ids:", gen[0, :16].tolist())
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--kv-bits", type=int, default=None,
+                    help="quantize cold KV pages to this many bits (1-7); "
+                    "default keeps fp pages")
+    ap.add_argument("--page", type=int, default=16)
+    ap.add_argument("--fit-steps", type=int, default=0,
+                    help="fit the reduced model on counting first (e.g. 200)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    # serving resolves only the model-config registry: no decentralized
+    # engine is involved (print it so docs and runs can't silently diverge)
+    print(f"registry: arch={args.arch} -> {cfg.name} (family={cfg.family}) "
+          "via repro.configs.registry; algorithm=none compressor=none "
+          "gossip=none (serving path)")
+    types = cfg.layer_types()
+    paged_ok = (all(t in ("attn", "local", "global") for t in types)
+                and not cfg.cross_attn_every and not cfg.encoder_layers)
+    if paged_ok:
+        paged_demo(cfg, args)
+    else:
+        print(f"note: {args.arch} has non-attention or cross-attention "
+              "blocks — paged serving unavailable, using the contiguous "
+              "cache path (no --kv-bits)")
+        contiguous_demo(cfg, args)
 
 
 if __name__ == "__main__":

@@ -21,6 +21,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.dist import sharding as shr
 from repro.models import transformer as tfm
+from repro.serve.paged_cache import PagedKVCache
 
 
 def _replicated(mesh, sds_tree):
@@ -28,15 +29,37 @@ def _replicated(mesh, sds_tree):
         lambda s: NamedSharding(mesh, P(*([None] * len(s.shape)))), sds_tree)
 
 
+def _leaf_name(path) -> str:
+    """Last named component of a key path ('' for unnamed, e.g. the k/v
+    leaves of the contiguous KVCache which flatten positionally)."""
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.GetAttrKey):
+            return entry.name
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+    return ""
+
+
 def _batched(mesh, sds_tree, batch: int):
-    """Shard dim 0 over "data" for leaves carrying the batch dim; replicate
-    scalars/metadata (e.g. the cache position counter)."""
-    def one(s):
-        if len(s.shape) >= 1 and s.shape[0] == batch:
-            return NamedSharding(mesh,
-                                 shr.serve_batch_spec(mesh, len(s.shape), batch))
-        return NamedSharding(mesh, P(*([None] * len(s.shape))))
-    return jax.tree_util.tree_map(one, sds_tree)
+    """Shard dim 0 over "data" for leaves whose tree position marks them as
+    per-sequence state; replicate scalars and page-pool leaves.
+
+    Classification is by key path, NOT by dimension size: a pool leaf whose
+    page count happens to equal the batch (or a cache whose length equals
+    it) must stay replicated — every device gathers from the whole pool.
+    Leaves classified per-sequence are then required to actually lead with
+    the batch dim."""
+    pool = set(PagedKVCache._POOL_FIELDS)
+
+    def one(path, s):
+        if len(s.shape) == 0 or _leaf_name(path) in pool:
+            return NamedSharding(mesh, P(*([None] * len(s.shape))))
+        assert s.shape[0] == batch, (
+            f"per-sequence cache leaf {jax.tree_util.keystr(path)} has "
+            f"leading dim {s.shape[0]}, expected batch={batch}")
+        return NamedSharding(mesh,
+                             shr.serve_batch_spec(mesh, len(s.shape), batch))
+    return jax.tree_util.tree_map_with_path(one, sds_tree)
 
 
 def make_decode(cfg, mesh, prof: shr.ShardingProfile, shape):
@@ -47,6 +70,39 @@ def make_decode(cfg, mesh, prof: shr.ShardingProfile, shape):
     key = jax.random.PRNGKey(0)
     params_sds = jax.eval_shape(lambda k: tfm.init_params(cfg, k), key)
     cache_sds = jax.eval_shape(lambda: tfm.init_cache(cfg, B, cache_len))
+    sds = {
+        "params": params_sds,
+        "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "cache": cache_sds,
+    }
+    shardings = {
+        "params": _replicated(mesh, params_sds),
+        "token": NamedSharding(mesh, shr.serve_batch_spec(mesh, 2, B)),
+        "cache": _batched(mesh, cache_sds, B),
+    }
+
+    def fn(params, token, cache):
+        return tfm.decode_step(params, cfg, token, cache)
+
+    return fn, sds, shardings, cfg
+
+
+def make_paged_decode(cfg, mesh, prof: shr.ShardingProfile, shape, *,
+                      page: int = 16, kv_bits=None):
+    """Decode step over the serving subsystem's paged cache (repro.serve).
+
+    Same (fn, sds, shardings, cfg) contract as make_decode, but the cache
+    is a paged pool + per-sequence page tables: pool leaves replicated
+    (every shard gathers any page), per-sequence leaves — page_table,
+    exact tails, the (B,) position/active vectors — sharded over "data"."""
+    from repro.serve.paged_cache import init_paged_cache
+
+    B, cache_len = shape.global_batch, shape.seq_len
+    key = jax.random.PRNGKey(0)
+    params_sds = jax.eval_shape(lambda k: tfm.init_params(cfg, k), key)
+    cache_sds = jax.eval_shape(
+        lambda: init_paged_cache(cfg, B, cache_len, page=page,
+                                 kv_bits=kv_bits))
     sds = {
         "params": params_sds,
         "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),

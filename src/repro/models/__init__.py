@@ -3,4 +3,5 @@
 from repro.models import attention, moe, recurrent, transformer
 from repro.models.transformer import (
     decode_step, forward, init_cache, init_params, loss_fn, prefill,
+    prefill_chunk,
 )

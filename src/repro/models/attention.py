@@ -181,32 +181,84 @@ class KVCache:
         return cls(leaves[0], leaves[1], rolling)
 
 
-def decode_attention(q, cache: KVCache, pos) -> jnp.ndarray:
-    """q: (B, 1, nq, hd); pos: current position (scalar int32).  The cache is
-    assumed to already contain the new token's k/v (see update_cache)."""
+def decode_attention(q, cache, pos) -> jnp.ndarray:
+    """q: (B, 1, nq, hd); pos: current position — scalar int32, or a (B,)
+    vector for continuous batching (each sequence at its own position).
+    The cache is assumed to already contain the new token's k/v (see
+    update_cache).  ``cache`` is either the contiguous KVCache or any
+    page-table-aware cache exposing ``view(pos) -> (k, v)`` plus
+    ``rolling`` (repro.serve.paged_cache.PagedKVCache) — the paged view
+    reproduces the contiguous slot order exactly, so both paths run the
+    identical masked-softmax below."""
     B, _, nq, hd = q.shape
-    L = cache.k.shape[1]
-    scale = hd ** -0.5
-    s = _gqa_scores(q, cache.k) * scale                           # (B, nq, 1, L)
-    slot = jnp.arange(L)
-    if cache.rolling:
-        valid = slot <= jnp.minimum(pos, L - 1)
-        # ring buffer: all L slots hold the last L positions once pos >= L-1
-        valid = jnp.where(pos >= L - 1, jnp.ones_like(valid), valid)
+    if isinstance(cache, KVCache):
+        k, v = cache.k, cache.v
     else:
-        valid = slot <= pos
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        pos_v = pos if jnp.ndim(pos) else jnp.full((B,), pos, jnp.int32)
+        k, v = cache.view(pos_v)
+    L = k.shape[1]
+    scale = hd ** -0.5
+    s = _gqa_scores(q, k) * scale                                 # (B, nq, 1, L)
+    slot = jnp.arange(L)
+    posb = pos[:, None] if jnp.ndim(pos) else pos                 # (B,1) | ()
+    if cache.rolling:
+        valid = slot <= jnp.minimum(posb, L - 1)
+        # ring buffer: all L slots hold the last L positions once pos >= L-1
+        valid = jnp.where(posb >= L - 1, jnp.ones_like(valid), valid)
+    else:
+        valid = slot <= posb
+    valid = valid if valid.ndim == 2 else valid[None]             # (B|1, L)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    return _gqa_values(p, cache.v).astype(q.dtype)
+    return _gqa_values(p, v).astype(q.dtype)
 
 
-def update_cache(cache: KVCache, k_new, v_new, pos) -> KVCache:
-    """Insert one token's k/v at position pos (ring-buffered if rolling)."""
+def update_cache(cache, k_new, v_new, pos):
+    """Insert one token's k/v at position pos (ring-buffered if rolling).
+
+    Contiguous KVCache requires a scalar pos (one dynamic slice for the
+    whole batch); paged caches take a per-sequence (B,) vector and scatter
+    through their page tables (repro.serve.paged_cache)."""
+    if not isinstance(cache, KVCache):
+        B = k_new.shape[0]
+        pos_v = pos if jnp.ndim(pos) else jnp.full((B,), pos, jnp.int32)
+        return cache.update(k_new, v_new, pos_v)
+    assert jnp.ndim(pos) == 0, "contiguous KVCache decodes at one shared pos"
     L = cache.k.shape[1]
     idx = jnp.mod(pos, L) if cache.rolling else pos
     k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype), idx, axis=1)
     v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype), idx, axis=1)
     return KVCache(k=k, v=v, rolling=cache.rolling)
+
+
+def chunk_attention(q, k_chunk, v_chunk, k_past, v_past, past_pos, past_valid,
+                    start, *, window: Optional[int] = None) -> jnp.ndarray:
+    """Prefill-continuation attention for one chunk of one sequence.
+
+    q, k_chunk, v_chunk: (1, C, nq|nkv, hd) at positions start..start+C-1;
+    k_past/v_past: (1, L, nkv, hd) cached view whose slot j holds logical
+    position past_pos[j] (valid where past_valid[j]) — the shape-stable
+    product of PagedKVCache.prefill_view.  window=None is full causal;
+    otherwise the sliding-window band (k_pos > q_pos - window - 1), the
+    same span windowed_attention uses, so chunked prefill matches the
+    reference full-sequence pass.  One softmax over (L + C) keys — fine
+    for serving-scale contexts; the O(S^2) training path stays on the
+    online-softmax kernels."""
+    _, C, nq, hd = q.shape
+    scale = hd ** -0.5
+    k = jnp.concatenate([k_past.astype(q.dtype), k_chunk.astype(q.dtype)], 1)
+    v = jnp.concatenate([v_past.astype(q.dtype), v_chunk.astype(q.dtype)], 1)
+    q_pos = start + jnp.arange(C)                                # (C,)
+    k_pos = jnp.concatenate([past_pos, start + jnp.arange(C)])   # (L+C,)
+    k_valid = jnp.concatenate(
+        [past_valid, jnp.ones((C,), bool)])
+    mask = k_valid[None, :] & (k_pos[None, :] <= q_pos[:, None])
+    if window is not None:
+        mask &= k_pos[None, :] > q_pos[:, None] - window - 1
+    s = _gqa_scores(q, k) * scale                                # (1, nq, C, L+C)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return _gqa_values(p, v)                                     # (1, C, nq, hd)
 
 
 def init_cache(batch: int, length: int, nkv: int, hd: int, dtype,

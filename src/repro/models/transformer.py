@@ -21,6 +21,8 @@ Entry points:
     loss_fn(params, cfg, batch) -> (loss, metrics)
     prefill(params, cfg, tokens, memory=None, cache_len) -> (logits, cache)
     decode_step(params, cfg, token, pos, cache, memory=None) -> (logits, cache)
+    prefill_chunk(params, cfg, tokens, cache, slot, start, valid_len)
+        -> (last-valid-token logits, cache)   [paged serving path]
     init_cache(cfg, batch, cache_len, dtype)
 """
 from __future__ import annotations
@@ -591,13 +593,64 @@ def _fill_cache(cfg, t, template, entry, S):
     return entry  # recurrent states pass through
 
 
+def prefill_chunk(params, cfg: ModelConfig, tokens, cache, slot, start,
+                  valid_len):
+    """Chunked prefill into a *paged* cache: process one (1, C) chunk of one
+    sequence's prompt, attending to the slot's already-cached pages plus
+    the chunk itself (causal), and insert the chunk's k/v through the page
+    table.  C must equal the cache's page size, so a full chunk flushes as
+    exactly one page and only the final partial chunk (valid_len < C, pad
+    tokens masked by position) lands in the exact tail.
+
+    slot / start / valid_len are traced scalars — the serving engine
+    compiles this once and admits any prompt at any batch lane without
+    recompiling.  Returns (logits of the last valid token (1, 1, V),
+    new cache)."""
+    _, C = tokens.shape
+    x = params["embed"].astype(jnp.dtype(cfg.param_dtype))[tokens]
+    positions = (start + jnp.arange(C))[None]
+    new_layers = []
+    for i, t, lp in _iter_layers(cfg, params):
+        assert t in ("attn", "local", "global"), (
+            f"prefill_chunk serves attention stacks only, got {t!r}")
+        c = cache["layers"][i]
+        h = _rms(x, lp["ln1"])
+        q, k, v = _qkv(cfg, lp["attn"], h)
+        q = attn.apply_rope(q, positions, cfg.rope_theta)
+        k = attn.apply_rope(k, positions, cfg.rope_theta)
+        k_past, v_past, past_pos, past_valid = c.prefill_view(slot, start)
+        o = attn.chunk_attention(
+            q, k, v, k_past, v_past, past_pos, past_valid, start,
+            window=cfg.window if t == "local" else None)
+        x = x + o.reshape(1, C, -1) @ lp["attn"]["wo"].astype(x.dtype)
+        h2 = _rms(x, lp["ln2"])
+        if cfg.n_experts:
+            mo, _ = moe_mod.moe_apply(lp["moe"], h2, top_k=cfg.top_k,
+                                      capacity_factor=4.0)
+        else:
+            mo = _mlp_apply(cfg, lp["mlp"], h2)
+        x = x + mo
+        new_layers.append(c.insert_chunk(k, v, slot, start, valid_len))
+    new_cache = dict(cache)
+    new_cache["layers"] = tuple(new_layers)
+    h = _rms(x, params["final_ln"])
+    last = jax.lax.dynamic_slice_in_dim(h, valid_len - 1, 1, axis=1)
+    return logits_fn(params, cfg, last), new_cache
+
+
 def decode_step(params, cfg: ModelConfig, token, cache, memory=None):
-    """token: (B, 1) int32; cache from init_cache/prefill.  Returns
-    (logits (B, 1, V), new cache)."""
+    """token: (B, 1) int32; cache from init_cache/prefill (contiguous,
+    scalar ``pos``) or serve.paged_cache.init_paged_cache (paged, ``pos``
+    a per-sequence (B,) vector for continuous batching — each slot decodes
+    at its own position; extra keys like ``active`` ride through).
+    Returns (logits (B, 1, V), new cache)."""
     B = token.shape[0]
     pos = cache["pos"]
     x = params["embed"].astype(jnp.dtype(cfg.param_dtype))[token]
-    positions = pos[None, None].astype(jnp.int32) * jnp.ones((B, 1), jnp.int32)
+    if pos.ndim == 1:
+        positions = pos[:, None].astype(jnp.int32)
+    else:
+        positions = pos[None, None].astype(jnp.int32) * jnp.ones((B, 1), jnp.int32)
 
     new_layer_caches = []
     cross_idx = 0

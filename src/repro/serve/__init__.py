@@ -1,0 +1,29 @@
+"""Serving subsystem: continuous batching over a paged, optionally
+wire-codec-quantized KV cache.
+
+The creative reuse at the heart of this package: the repo's fused
+``kernels/quantize.py`` blockwise inf-norm quantizer — LEAD's
+bits-on-the-wire codec over ``(n, nb, block)`` buffers — is exactly a KV
+*page* codec.  A page of K (or V) is ``page * kv_heads * head_dim``
+contiguous elements; flattened page-major it is the codec's ``(n_pages,
+nb, block)`` layout, so cold pages are stored as int8 codes + per-block
+scales at ``(bits+1) + 32/block`` bits/elem (the same meter
+``QuantizePNorm.wire_bits`` charges on the wire) instead of 16/32-bit
+floats — a several-fold KV-cache HBM cut measured by
+``benchmarks/bench_serve.py``.
+
+Layers:
+    kv_quant.py     page codec (encode/decode page rows + bits/elem meter)
+    paged_cache.py  PagePool + PagedKVCache (page table, exact tail page)
+    scheduler.py    host-side page allocator + admission queue + slots
+    engine.py       ServeEngine: continuous batching over the jitted step
+"""
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.kv_quant import KVQuantSpec
+from repro.serve.paged_cache import (PagedKVCache, init_paged_cache,
+                                     paged_from_contiguous)
+from repro.serve.scheduler import Request, Scheduler
+
+__all__ = ["ServeConfig", "ServeEngine", "KVQuantSpec", "PagedKVCache",
+           "init_paged_cache", "paged_from_contiguous", "Request",
+           "Scheduler"]

@@ -1,0 +1,236 @@
+"""ServeEngine: continuous batching over the jitted paged decode step.
+
+The engine keeps a static ``(max_batch, ...)`` device state (paged cache +
+last tokens + active mask) and two jitted functions compiled exactly once:
+
+  * ``_decode`` — one greedy decode step for the whole batch
+    (``tfm.decode_step`` with per-sequence positions; inactive lanes
+    compute padding and their page flushes drop);
+  * ``_prefill`` — one page-sized prompt chunk for one sequence
+    (``tfm.prefill_chunk``; slot / start / valid_len are traced scalars).
+
+Everything else is host-side data plumbing (scheduler.py): admissions pop
+the queue when a slot and pages are free, prompts stream in page-sized
+chunks without disturbing the other lanes' decode cadence, finished
+sequences (EOS or max_new) free their pages immediately.  No admission,
+eviction, prompt length, or batch occupancy pattern changes a traced
+shape, so a warm engine never recompiles — pinned by
+``compile_stats()`` in tests/test_serve.py and BENCH_serve.json.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tfm
+from repro.serve import paged_cache as pc
+from repro.serve.scheduler import Scheduler
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Engine knobs (model config rides separately).
+
+    kv_bits=None keeps fp pages; 1..7 stores cold pages through the wire
+    codec at (kv_bits+1) + 32/block bits/elem (kv_quant.py)."""
+    max_batch: int = 4
+    max_len: int = 256
+    page: int = 16
+    kv_bits: Optional[int] = None
+    block: Optional[int] = None
+    cache_dtype: str = "bfloat16"
+    eos_id: Optional[int] = None
+    n_pages_full: Optional[int] = None
+    n_pages_roll: Optional[int] = None
+
+
+class ServeEngine:
+    def __init__(self, model_cfg, params, cfg: ServeConfig = ServeConfig()):
+        self.model_cfg, self.params, self.cfg = model_cfg, params, cfg
+        dtype = jnp.dtype(cfg.cache_dtype)
+        self.cache = pc.init_paged_cache(
+            model_cfg, cfg.max_batch, cfg.max_len, page=cfg.page,
+            kv_bits=cfg.kv_bits, block=cfg.block, dtype=dtype,
+            n_pages_full=cfg.n_pages_full, n_pages_roll=cfg.n_pages_roll)
+        npp_full, npp_roll = pc._geometry(model_cfg, cfg.max_len, cfg.page)
+        kinds = [c.rolling for c in self.cache["layers"]]
+        self._full_idx = [i for i, r in enumerate(kinds) if not r]
+        self._roll_idx = [i for i, r in enumerate(kinds) if r]
+        n_full = cfg.n_pages_full or cfg.max_batch * npp_full
+        n_roll = cfg.n_pages_roll or cfg.max_batch * npp_roll
+        self.sched = Scheduler(max_batch=cfg.max_batch, npp_full=npp_full,
+                               npp_roll=npp_roll, n_pages_full=n_full,
+                               n_pages_roll=n_roll,
+                               has_rolling=bool(self._roll_idx))
+        self.last_token = jnp.zeros((cfg.max_batch, 1), jnp.int32)
+        self.finished: Dict[int, Dict[str, Any]] = {}
+
+        mc = model_cfg
+
+        def _decode(p, token, cache):
+            logits, cache = tfm.decode_step(p, mc, token, cache)
+            return jnp.argmax(logits[:, -1], -1).astype(jnp.int32), cache
+
+        def _prefill(p, tokens, cache, slot, start, valid_len):
+            return tfm.prefill_chunk(p, mc, tokens, cache, slot, start,
+                                     valid_len)
+
+        self._decode = jax.jit(_decode)
+        self._prefill = jax.jit(_prefill)
+        self.decode_steps = 0
+        self.decode_s = 0.0
+        self.tokens_out = 0
+
+    # -- page-table plumbing -------------------------------------------------
+    def _edit_tables(self, kind_idx: List[int], edits) -> None:
+        """Apply (slot, col, pid) edits to the shared page table of one
+        layer kind (pid=-1 clears).  Host-side data update only."""
+        if not kind_idx or not edits:
+            return
+        pt = self.cache["layers"][kind_idx[0]].page_table
+        for slot, col, pid in edits:
+            pt = pt.at[slot, col].set(pid)
+        layers = list(self.cache["layers"])
+        for i in kind_idx:
+            layers[i] = layers[i].replace(page_table=pt)
+        self.cache["layers"] = tuple(layers)
+
+    def _clear_slot_tables(self, slot: int) -> None:
+        npp_f = self.sched.npp_full
+        self._edit_tables(self._full_idx,
+                          [(slot, c, -1) for c in range(npp_f)])
+        self._edit_tables(self._roll_idx,
+                          [(slot, c, -1) for c in range(self.sched.npp_roll)])
+
+    # -- public API ----------------------------------------------------------
+    def submit(self, prompt, max_new: int = 32) -> int:
+        prompt = [int(t) for t in prompt]
+        assert len(prompt) >= 1
+        assert len(prompt) + max_new <= self.cfg.max_len, (
+            f"prompt({len(prompt)}) + max_new({max_new}) exceeds "
+            f"max_len={self.cfg.max_len}")
+        return self.sched.submit(prompt, max_new)
+
+    def _admit(self, adm) -> None:
+        req, slot = adm["req"], adm["slot"]
+        C = self.cfg.page
+        self._edit_tables(self._full_idx,
+                          [(slot, c, p) for c, p in adm["full"]])
+        self._edit_tables(self._roll_idx,
+                          [(slot, c, p) for c, p in adm["roll"]])
+        toks = req.prompt
+        n_chunks = -(-len(toks) // C)
+        padded = toks + [0] * (n_chunks * C - len(toks))
+        logits = None
+        for j in range(n_chunks):
+            chunk = jnp.asarray(padded[j * C:(j + 1) * C],
+                                jnp.int32)[None]
+            valid = min(len(toks) - j * C, C)
+            logits, self.cache = self._prefill(
+                self.params, chunk, self.cache, slot, j * C, valid)
+        first = int(jnp.argmax(logits[0, -1]))
+        self.cache["pos"] = self.cache["pos"].at[slot].set(len(toks))
+        self.cache["active"] = self.cache["active"].at[slot].set(True)
+        self.last_token = self.last_token.at[slot, 0].set(first)
+        seq = self.sched.slots[slot]
+        seq.generated.append(first)
+        self.tokens_out += 1
+        self._maybe_finish(seq)
+
+    def _maybe_finish(self, seq) -> bool:
+        done = (len(seq.generated) >= seq.max_new
+                or (self.cfg.eos_id is not None
+                    and seq.generated[-1] == self.cfg.eos_id))
+        if done:
+            self.finished[seq.rid] = {
+                "tokens": list(seq.generated),
+                "prompt_len": seq.prompt_len,
+            }
+            slot = seq.slot
+            self.sched.evict(slot)
+            self._clear_slot_tables(slot)
+            self.cache["active"] = self.cache["active"].at[slot].set(False)
+            self.cache["pos"] = self.cache["pos"].at[slot].set(0)
+        return done
+
+    def step(self) -> int:
+        """One engine tick: admit what fits, grow lazily-allocated pages,
+        run one jitted decode step, harvest tokens, evict finished.
+        Returns the number of sequences that decoded this tick."""
+        while True:
+            adm = self.sched.try_admit(self.cfg.page)
+            if adm is None:
+                break
+            self._admit(adm)
+        active = self.sched.active_slots()
+        if not active:
+            return 0
+        self._edit_tables(self._full_idx,
+                          self.sched.grow_for_step(self.cfg.page))
+        t0 = time.perf_counter()
+        tok, self.cache = self._decode(self.params, self.last_token,
+                                       self.cache)
+        toks = np.asarray(tok)                   # host sync point
+        self.decode_s += time.perf_counter() - t0
+        self.decode_steps += 1
+        self.last_token = tok[:, None]
+        n = 0
+        for seq in active:
+            seq.generated.append(int(toks[seq.slot]))
+            n += 1
+            self._maybe_finish(seq)
+        self.tokens_out += n
+        return n
+
+    def run(self, max_steps: int = 100_000) -> Dict[int, Dict[str, Any]]:
+        """Drive until queue and batch drain; returns {rid: result}."""
+        for _ in range(max_steps):
+            if not self.sched.queue and not self.sched.active_slots():
+                break
+            if self.step() == 0 and self.sched.queue:
+                raise RuntimeError(
+                    "admission stalled with an empty batch: page pools too "
+                    "small for the queued prompt")
+        return dict(self.finished)
+
+    # -- introspection -------------------------------------------------------
+    def compile_stats(self) -> Dict[str, int]:
+        """jit cache sizes — 1 + 1 after warmup, and they must stay there
+        across any admission/eviction pattern (the zero-recompile pin)."""
+        return {"decode_compiles": self._decode._cache_size(),
+                "prefill_compiles": self._prefill._cache_size()}
+
+    def cache_report(self) -> Dict[str, float]:
+        """Wire-meter HBM accounting over all layers (see
+        PagedKVCache.meter_bits)."""
+        agg = {"pool_bits": 0.0, "tail_bits": 0.0, "table_bits": 0.0,
+               "fp_bits": 0.0}
+        for c in self.cache["layers"]:
+            m = c.meter_bits()
+            for k in agg:
+                agg[k] += m[k]
+        total = agg["pool_bits"] + agg["tail_bits"] + agg["table_bits"]
+        rep = {
+            "fp_bytes": agg["fp_bits"] / 8,
+            "paged_bytes": total / 8,
+            "pool_bytes": agg["pool_bits"] / 8,
+            "bits_per_elem": self.cache["layers"][0].meter_bits()["bits_per_elem"],
+            "hbm_reduction_pool": agg["fp_bits"] / max(agg["pool_bits"], 1.0),
+            "hbm_reduction_total": agg["fp_bits"] / max(total, 1.0),
+        }
+        return rep
+
+    def stats(self) -> Dict[str, float]:
+        s = dict(self.sched.stats)
+        s.update(decode_steps=self.decode_steps,
+                 tokens_out=self.tokens_out,
+                 decode_s=self.decode_s,
+                 tokens_per_sec=(self.tokens_out / self.decode_s
+                                 if self.decode_s else 0.0))
+        s.update(self.compile_stats())
+        return s

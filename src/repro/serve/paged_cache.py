@@ -1,0 +1,391 @@
+"""Paged KV cache: fixed-size pages in a per-layer global pool, indexed by a
+per-sequence page table.
+
+Layout (one ``PagedKVCache`` per attention layer):
+
+  * **pool** — ``n_pages`` fixed-size pages.  Exact mode stores fp pages
+    ``(n_pages, page, kv_heads, head_dim)``; quantized mode stores the
+    wire-codec form ``(n_pages, nb, block)`` int8 codes + ``(n_pages, nb,
+    1)`` f32 scales per K and V (see kv_quant.py — a page flattened
+    page-major IS the codec's block layout).
+  * **page_table** — ``(max_batch, pages_per_seq)`` int32 page ids, ``-1``
+    where unallocated.  Full layers index logical page ``pos // page``;
+    rolling (sliding-window) layers ring over ``window // page`` pages,
+    mirroring the contiguous ring buffer slot-for-slot (``slot = pos %
+    window``) so exact-mode decode is bit-identical to ``attn.KVCache``.
+  * **tail** — ``(max_batch, page, kv_heads, head_dim)`` fp staging buffer
+    holding each sequence's current, partially-written page.  The tail is
+    always exact: a page is only encoded (quantized) once, when it fills
+    and flushes to the pool — the "current decode window kept exact"
+    contract.
+
+All update/read paths are scatter/gather with traced indices, so one jitted
+decode step serves any admission/eviction pattern without recompiling;
+writes for inactive or unallocated slots are dropped via out-of-bounds
+scatter ids (``mode="drop"``).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.serve.kv_quant import (KVQuantSpec, decode_rows, encode_rows,
+                                  pick_block)
+
+
+@jax.tree_util.register_pytree_with_keys_class
+class PagedKVCache:
+    """One layer's paged KV cache.  ``spec is None`` => exact fp pool.
+
+    Leaves (exact):  kp, vp, page_table, tail_k, tail_v
+    Leaves (quant):  kc, ksc, vc, vsc, page_table, tail_k, tail_v
+    Static aux:      page size, rolling flag, quant spec.
+    """
+
+    def __init__(self, *, page: int, rolling: bool,
+                 spec: Optional[KVQuantSpec],
+                 page_table, tail_k, tail_v,
+                 kp=None, vp=None, kc=None, ksc=None, vc=None, vsc=None):
+        self.page, self.rolling, self.spec = page, rolling, spec
+        self.page_table, self.tail_k, self.tail_v = page_table, tail_k, tail_v
+        self.kp, self.vp = kp, vp
+        self.kc, self.ksc, self.vc, self.vsc = kc, ksc, vc, vsc
+
+    # -- pytree protocol (key-aware so dist/serve.py can classify leaves by
+    # path: pool leaves are global, everything else is batch-major) ---------
+    _POOL_FIELDS = ("kp", "vp", "kc", "ksc", "vc", "vsc")
+    _SEQ_FIELDS = ("page_table", "tail_k", "tail_v")
+
+    def _fields(self):
+        names = [n for n in self._POOL_FIELDS if getattr(self, n) is not None]
+        return list(self._SEQ_FIELDS) + names
+
+    def tree_flatten_with_keys(self):
+        names = self._fields()
+        children = [(jax.tree_util.GetAttrKey(n), getattr(self, n))
+                    for n in names]
+        return children, (self.page, self.rolling, self.spec, tuple(names))
+
+    def tree_flatten(self):
+        children, aux = self.tree_flatten_with_keys()
+        return [c for _, c in children], aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        page, rolling, spec, names = aux
+        kw = dict(zip(names, leaves))
+        return cls(page=page, rolling=rolling, spec=spec, **kw)
+
+    def replace(self, **kw) -> "PagedKVCache":
+        names = self._fields()
+        d = {n: getattr(self, n) for n in names}
+        d.update(kw)
+        return PagedKVCache(page=self.page, rolling=self.rolling,
+                            spec=self.spec, **d)
+
+    # -- geometry -----------------------------------------------------------
+    @property
+    def n_pages(self) -> int:
+        return (self.kp if self.spec is None else self.kc).shape[0]
+
+    @property
+    def pages_per_seq(self) -> int:
+        return self.page_table.shape[1]
+
+    @property
+    def view_len(self) -> int:
+        return self.pages_per_seq * self.page
+
+    @property
+    def page_shape(self) -> Tuple[int, int, int]:
+        return self.tail_k.shape[1:]
+
+    @property
+    def dtype(self):
+        return self.tail_k.dtype
+
+    def _cur_page(self, pos):
+        """Logical page-table column holding position ``pos``."""
+        npp = self.pages_per_seq
+        if self.rolling:
+            return (pos // self.page) % npp
+        return jnp.clip(pos // self.page, 0, npp - 1)
+
+    # -- pool access ---------------------------------------------------------
+    def _gather_pages(self, pt):
+        """pt: any-shape int32 page ids (clipped) -> fp pages (*pt, page,
+        nkv, hd), decoding the wire codec for quantized pools."""
+        safe = jnp.clip(pt, 0, self.n_pages - 1)
+        if self.spec is None:
+            return self.kp[safe], self.vp[safe]
+        k = decode_rows(self.kc[safe], self.ksc[safe], self.spec,
+                        self.page_shape, self.dtype)
+        v = decode_rows(self.vc[safe], self.vsc[safe], self.spec,
+                        self.page_shape, self.dtype)
+        return k, v
+
+    def _scatter_page(self, pid, k_pages, v_pages):
+        """Write fp pages (rows of shape page_shape) at ids ``pid``; ids that
+        are out of bounds (>= n_pages, the 'do not write' sentinel) drop.
+        Quantized pools encode through the wire codec here — the single
+        lossy step in a page's life."""
+        if self.spec is None:
+            return self.replace(
+                kp=self.kp.at[pid].set(k_pages.astype(self.kp.dtype),
+                                       mode="drop"),
+                vp=self.vp.at[pid].set(v_pages.astype(self.vp.dtype),
+                                       mode="drop"))
+        kc, ksc = encode_rows(k_pages.reshape(-1, *self.page_shape), self.spec)
+        vc, vsc = encode_rows(v_pages.reshape(-1, *self.page_shape), self.spec)
+        shape = jnp.shape(pid)
+        kc = kc.reshape(*shape, *kc.shape[1:])
+        ksc = ksc.reshape(*shape, *ksc.shape[1:])
+        vc = vc.reshape(*shape, *vc.shape[1:])
+        vsc = vsc.reshape(*shape, *vsc.shape[1:])
+        return self.replace(kc=self.kc.at[pid].set(kc, mode="drop"),
+                            ksc=self.ksc.at[pid].set(ksc, mode="drop"),
+                            vc=self.vc.at[pid].set(vc, mode="drop"),
+                            vsc=self.vsc.at[pid].set(vsc, mode="drop"))
+
+    # -- decode-step paths ---------------------------------------------------
+    def view(self, pos):
+        """Per-sequence KV view for decode attention.
+
+        pos: (B,) int32 current positions.  Returns (k, v), each
+        (B, view_len, nkv, hd): pool pages gathered through the page table
+        (quantized pages decoded on read) with the exact tail overlaid on
+        the current page at offsets <= pos % page.  Offsets beyond that on
+        the current page fall through to the pool — for rolling layers
+        those are the previous wrap's (cold) values, exactly what the
+        contiguous ring holds there."""
+        B, npp, page = pos.shape[0], self.pages_per_seq, self.page
+        kpg, vpg = self._gather_pages(self.page_table)   # (B, npp, page, ...)
+        cur = self._cur_page(pos)
+        off = pos % page
+        use_tail = ((jnp.arange(npp)[None, :, None] == cur[:, None, None])
+                    & (jnp.arange(page)[None, None, :] <= off[:, None, None]))
+        use_tail = use_tail[..., None, None]
+        k = jnp.where(use_tail, self.tail_k[:, None].astype(kpg.dtype), kpg)
+        v = jnp.where(use_tail, self.tail_v[:, None].astype(vpg.dtype), vpg)
+        nkv, hd = k.shape[-2:]
+        return (k.reshape(B, npp * page, nkv, hd),
+                v.reshape(B, npp * page, nkv, hd))
+
+    def update(self, k_new, v_new, pos) -> "PagedKVCache":
+        """Insert one token's k/v per sequence at positions ``pos`` (B,).
+
+        The token lands in the exact tail; when it completes a page
+        (pos % page == page-1) the tail flushes to the pool at the page
+        table's id for the current logical page (rolling layers ring over
+        their pages in place).  Slots with no allocated page (id -1, e.g.
+        inactive batch lanes) drop the flush."""
+        B, page = pos.shape[0], self.page
+        off = pos % page
+        b = jnp.arange(B)
+        tail_k = self.tail_k.at[b, off].set(k_new[:, 0].astype(self.dtype))
+        tail_v = self.tail_v.at[b, off].set(v_new[:, 0].astype(self.dtype))
+        out = self.replace(tail_k=tail_k, tail_v=tail_v)
+        pid = self.page_table[b, self._cur_page(pos)]
+        write = (off == page - 1) & (pid >= 0)
+        pid = jnp.where(write, pid, self.n_pages)        # OOB => dropped
+        return out._scatter_page(pid, tail_k, tail_v)
+
+    # -- chunked-prefill paths ----------------------------------------------
+    def prefill_view(self, slot, start):
+        """KV view + logical positions for one sequence's prefill chunk.
+
+        slot: traced scalar batch lane; start: traced scalar first position
+        of the chunk.  Returns (k (1, view_len, nkv, hd), v, k_pos
+        (view_len,), k_valid (view_len,)): the slot's pool pages with each
+        slot's logical token position reconstructed — full layers hold
+        position s at slot s (valid iff s < start); rolling layers hold the
+        last write to the ring slot (valid iff it exists).  The tail never
+        participates: prefill chunks are page-aligned, only the final
+        (partial) chunk writes the tail, after which prefill is done."""
+        npp, page = self.pages_per_seq, self.page
+        L = npp * page
+        kpg, vpg = self._gather_pages(self.page_table[slot])
+        nkv, hd = kpg.shape[-2:]
+        k = kpg.reshape(1, L, nkv, hd)
+        v = vpg.reshape(1, L, nkv, hd)
+        s = jnp.arange(L)
+        if self.rolling:
+            k_pos = start - 1 - jnp.mod(start - 1 - s, L)
+            k_valid = (k_pos >= 0) & (start > 0)
+        else:
+            k_pos = s
+            k_valid = s < start
+        return k, v, k_pos, k_valid
+
+    def insert_chunk(self, k_chunk, v_chunk, slot, start,
+                     valid_len) -> "PagedKVCache":
+        """Insert one prefill chunk (1, page, nkv, hd) for sequence ``slot``
+        starting at position ``start`` (page-aligned).  A full chunk
+        (valid_len == page) flushes straight to its pool page; the final
+        partial chunk lands in the exact tail instead (pad positions write
+        garbage there, masked by position everywhere it is read)."""
+        page = self.page
+        assert k_chunk.shape[1] == page, (k_chunk.shape, page)
+        pid = self.page_table[slot, self._cur_page(start)]
+        full = (valid_len >= page) & (pid >= 0)
+        pid = jnp.where(full, pid, self.n_pages)
+        out = self._scatter_page(pid[None],
+                                 k_chunk.astype(self.dtype),
+                                 v_chunk.astype(self.dtype))
+        tail_k = jnp.where(full, self.tail_k,
+                           self.tail_k.at[slot].set(
+                               k_chunk[0].astype(self.dtype)))
+        tail_v = jnp.where(full, self.tail_v,
+                           self.tail_v.at[slot].set(
+                               v_chunk[0].astype(self.dtype)))
+        return out.replace(tail_k=tail_k, tail_v=tail_v)
+
+    # -- metering ------------------------------------------------------------
+    def meter_bits(self) -> Dict[str, float]:
+        """Wire-accurate storage meter for this layer (k+v).
+
+        pool_bits charges quantized pages at the codec rate ((bits+1) per
+        element + 32 per block scale — QuantizePNorm.wire_bits' formula)
+        and exact pages at the container dtype width; tail/table bits are
+        the exact overhead.  fp_bits is the contiguous fp cache of the same
+        per-sequence capacity (the baseline the HBM-reduction claim is
+        against)."""
+        page, npp = self.page, self.pages_per_seq
+        B = self.page_table.shape[0]
+        elems = 1
+        for s in self.page_shape:
+            elems *= int(s)
+        dtype_bits = jnp.dtype(self.dtype).itemsize * 8
+        if self.spec is None:
+            pool_bits = 2 * self.n_pages * elems * dtype_bits
+            bits_per_elem = float(dtype_bits)
+        else:
+            pool_bits = 2 * self.n_pages * self.spec.page_bits(elems)
+            bits_per_elem = self.spec.bits_per_elem
+        tail_bits = 2 * B * elems * dtype_bits
+        table_bits = B * npp * 32
+        return {
+            "pool_bits": float(pool_bits),
+            "tail_bits": float(tail_bits),
+            "table_bits": float(table_bits),
+            "bits_per_elem": float(bits_per_elem),
+            "fp_bits": float(2 * B * npp * elems * dtype_bits),
+        }
+
+
+# ---------------------------------------------------------------------------
+# constructors
+# ---------------------------------------------------------------------------
+
+def _attn_layer_kinds(cfg) -> Tuple[str, ...]:
+    types = cfg.layer_types()
+    bad = [t for t in types if t not in ("attn", "local", "global")]
+    assert not bad, (
+        f"paged serving supports attention block stacks only, got {bad}; "
+        "recurrent / cross-attention families use the contiguous path")
+    assert not cfg.cross_attn_every and not cfg.encoder_layers, (
+        "paged serving does not carry cross-attention memories")
+    return types
+
+
+def _geometry(cfg, max_len: int, page: int):
+    assert max_len % page == 0, (max_len, page)
+    npp_full = max_len // page
+    w_eff = min(cfg.window, max_len)
+    assert w_eff % page == 0, (
+        f"rolling window {w_eff} must be a whole number of pages ({page})")
+    return npp_full, w_eff // page
+
+
+def _empty_layer(cfg, kind: str, batch: int, npp: int, n_pages: int,
+                 spec: Optional[KVQuantSpec], dtype, page: int,
+                 page_table) -> PagedKVCache:
+    nkv, hd = cfg.kv_heads, cfg.head_dim
+    tail = jnp.zeros((batch, page, nkv, hd), dtype)
+    kw: Dict[str, Any] = dict(page=page, rolling=(kind == "local"), spec=spec,
+                              page_table=page_table, tail_k=tail, tail_v=tail)
+    if spec is None:
+        pool = jnp.zeros((n_pages, page, nkv, hd), dtype)
+        kw.update(kp=pool, vp=pool)
+    else:
+        elems = page * nkv * hd
+        nb = elems // spec.block
+        codes = jnp.zeros((n_pages, nb, spec.block), jnp.int8)
+        scales = jnp.zeros((n_pages, nb, 1), jnp.float32)
+        kw.update(kc=codes, ksc=scales, vc=codes, vsc=scales)
+    return PagedKVCache(**kw)
+
+
+def init_paged_cache(cfg, batch: int, max_len: int, *, page: int = 16,
+                     kv_bits: Optional[int] = None, block: Optional[int] = None,
+                     dtype=jnp.bfloat16, n_pages_full: Optional[int] = None,
+                     n_pages_roll: Optional[int] = None) -> Dict[str, Any]:
+    """Empty paged serving cache for an attention-stack model.
+
+    Layers of the same kind (full vs rolling) share one page-table array
+    and one page-id space: the scheduler allocates a page id once and it
+    denotes the same page row in every such layer's pool.  Pools default to
+    full provisioning (batch * pages_per_seq); size them smaller to make
+    admission wait on freed pages."""
+    types = _attn_layer_kinds(cfg)
+    npp_full, npp_roll = _geometry(cfg, max_len, page)
+    elems = page * cfg.kv_heads * cfg.head_dim
+    spec = None
+    if kv_bits is not None:
+        spec = KVQuantSpec(kv_bits, block or pick_block(elems))
+    pt_full = jnp.full((batch, npp_full), -1, jnp.int32)
+    pt_roll = jnp.full((batch, npp_roll), -1, jnp.int32)
+    n_full = n_pages_full or batch * npp_full
+    n_roll = n_pages_roll or batch * npp_roll
+    layers = tuple(
+        _empty_layer(cfg, t, batch,
+                     npp_roll if t == "local" else npp_full,
+                     n_roll if t == "local" else n_full,
+                     spec, dtype, page,
+                     pt_roll if t == "local" else pt_full)
+        for t in types)
+    return {"layers": layers,
+            "pos": jnp.zeros((batch,), jnp.int32),
+            "active": jnp.zeros((batch,), bool)}
+
+
+def paged_from_contiguous(cache: Dict[str, Any], cfg, *, page: int = 16,
+                          kv_bits: Optional[int] = None,
+                          block: Optional[int] = None) -> Dict[str, Any]:
+    """Host-side conversion of a contiguous ``tfm.init_cache``/``prefill``
+    cache into the paged layout (slot-major page ids, pool fully
+    provisioned) — the bit-identity pin in tests/test_serve.py starts both
+    paths from literally the same values.  Not jittable: reads the scalar
+    position."""
+    assert "cross_mem" not in cache and "enc_mem" not in cache
+    pos_val = int(cache["pos"])
+    layers = []
+    for c in cache["layers"]:
+        B, L, nkv, hd = c.k.shape
+        assert L % page == 0, (L, page)
+        npp = L // page
+        spec = None
+        if kv_bits is not None:
+            spec = KVQuantSpec(kv_bits, block or pick_block(page * nkv * hd))
+        pt = jnp.arange(B * npp, dtype=jnp.int32).reshape(B, npp)
+        kpages = c.k.reshape(B * npp, page, nkv, hd)
+        vpages = c.v.reshape(B * npp, page, nkv, hd)
+        cur = (pos_val // page) % npp if c.rolling \
+            else min(pos_val // page, npp - 1)
+        tail_k = c.k[:, cur * page:(cur + 1) * page]
+        tail_v = c.v[:, cur * page:(cur + 1) * page]
+        kw: Dict[str, Any] = dict(page=page, rolling=c.rolling, spec=spec,
+                                  page_table=pt, tail_k=tail_k, tail_v=tail_v)
+        if spec is None:
+            kw.update(kp=kpages, vp=vpages)
+        else:
+            kc, ksc = encode_rows(kpages, spec)
+            vc, vsc = encode_rows(vpages, spec)
+            kw.update(kc=kc, ksc=ksc, vc=vc, vsc=vsc)
+        layers.append(PagedKVCache(**kw))
+    B = cache["layers"][0].k.shape[0]
+    return {"layers": tuple(layers),
+            "pos": jnp.full((B,), pos_val, jnp.int32),
+            "active": jnp.ones((B,), bool)}

@@ -128,3 +128,27 @@ def test_readme_names_live_entry_points():
                 "docs/ARCHITECTURE.md", "ROADMAP.md"):
         assert rel in text, f"README should mention {rel}"
         assert (ROOT / rel).exists(), rel
+
+
+def test_architecture_documents_serving():
+    """§10 must carry the serving contract: the page↔wire-codec block
+    layout correspondence, the exactness + zero-recompile pins, and the
+    bits/elem accounting the BENCH rows are judged against."""
+    text = ARCH.read_text()
+    assert "## 10. Serving: continuous batching & quantized KV pages" in text
+    for needle in ("(n_pages, nb, block)", "(n, nb, block)", "page_table",
+                   "exact tail", "bit-identical", "(b+1) + 32/block",
+                   "never recompiles", "tree path, not dimension size",
+                   "fit_counting_lm"):
+        assert needle in text, f"ARCHITECTURE §10 must mention {needle!r}"
+
+
+def test_readme_documents_serving():
+    """The README Serving section must name the engine package, the
+    --kv-bits knob, the bits/elem rate, and the benchmark artifact."""
+    text = README.read_text()
+    assert "## Serving" in text
+    for needle in ("repro.serve", "--kv-bits", "5.0625 bits/elem",
+                   "BENCH_serve.json", "tests/test_serve.py",
+                   "docs/ARCHITECTURE.md §10"):
+        assert needle in text, f"README Serving section must mention {needle!r}"

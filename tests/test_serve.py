@@ -1,0 +1,207 @@
+"""Serving subsystem pins: paged cache exactness, quantized-KV fidelity,
+continuous batching, and the sharding classification regression.
+
+The two load-bearing invariants:
+
+  * an exact (fp) paged cache is a pure data-layout change — decode logits
+    are BIT-identical to the contiguous KVCache path, for full-attention
+    and rolling-window layers, including after the rolling ring wraps;
+  * the jitted decode/prefill functions compile exactly once per engine —
+    admissions, evictions, unaligned prompt lengths, and batch occupancy
+    patterns are all data, never shapes.
+
+Quantized-KV greedy agreement uses a counting-trained model
+(serve/demo.py): random-init argmax margins are noise and flip under any
+perturbation, so token-identity would pin nothing.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.registry import get_config
+from repro.models import decode_step, init_params, prefill
+from repro.serve import ServeConfig, ServeEngine
+from repro.serve.kv_quant import KVQuantSpec, pick_block
+from repro.serve.paged_cache import init_paged_cache, paged_from_contiguous
+
+ARCHS = ["granite-3-2b",   # pure full attention
+         "gemma3-12b"]     # rolling-window (local) layers, window=128 reduced
+
+
+@pytest.fixture(scope="module")
+def counting():
+    """granite reduced fit on modular counting — big greedy margins."""
+    from repro.serve.demo import fit_counting_lm
+    cfg = get_config("granite-3-2b").reduced()
+    params, loss = fit_counting_lm(cfg, jax.random.PRNGKey(1))
+    assert loss < 0.01, f"counting fit did not converge: {loss}"
+    return cfg, params
+
+
+def _reference(params, cfg, prompt, max_new, cache_len):
+    """Single-sequence greedy decode on the contiguous cache path."""
+    toks = jnp.asarray(prompt, jnp.int32)[None]
+    lg, cache = prefill(params, cfg, toks, cache_len=cache_len,
+                        cache_dtype=jnp.bfloat16)
+    out = [int(jnp.argmax(lg[0, -1]))]
+    step = jax.jit(lambda p, t, c: decode_step(p, cfg, t, c))
+    for _ in range(max_new - 1):
+        lg, cache = step(params, jnp.asarray([[out[-1]]], jnp.int32), cache)
+        out.append(int(jnp.argmax(lg[0, -1])))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# paged + exact == contiguous, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_paged_exact_is_bit_identical_to_contiguous(arch, key):
+    """fp paged view == contiguous cache logits exactly, every step.  The
+    gemma case decodes past its 128-token window so the rolling ring wraps
+    (the tail-overlay staleness regression: pool must supply the previous
+    wrap's values at offsets beyond the current position)."""
+    cfg = get_config(arch).reduced()
+    cache_len, steps = (64, 24) if arch == ARCHS[0] else (192, 150)
+    params = init_params(cfg, key)
+    toks = jax.random.randint(key, (2, 20), 0, cfg.vocab)
+    lg, cache = prefill(params, cfg, toks, cache_len=cache_len,
+                        cache_dtype=jnp.bfloat16)
+    pcache = paged_from_contiguous(cache, cfg, page=16)
+    step = jax.jit(lambda p, t, c: decode_step(p, cfg, t, c))
+    t1 = t2 = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+    for i in range(steps):
+        lg1, cache = step(params, t1, cache)
+        lg2, pcache = step(params, t2, pcache)
+        assert np.array_equal(np.asarray(lg1), np.asarray(lg2)), (
+            f"paged/contiguous logits diverge at decode step {i}")
+        t1 = jnp.argmax(lg1[:, -1], -1).astype(jnp.int32)[:, None]
+        t2 = jnp.argmax(lg2[:, -1], -1).astype(jnp.int32)[:, None]
+
+
+# ---------------------------------------------------------------------------
+# continuous batching: admissions, evictions, zero recompiles
+# ---------------------------------------------------------------------------
+
+def test_continuous_batching_episode_matches_reference(key):
+    """2-slot engine, 3 requests (page-aligned, unaligned, multi-page
+    prompts; staggered max_new): the third is admitted mid-stream into the
+    slot the first eviction frees, every greedy stream equals the
+    single-sequence contiguous reference, and neither jitted function
+    recompiles after warmup."""
+    cfg = get_config("granite-3-2b").reduced()
+    params = init_params(cfg, key)
+    eng = ServeEngine(cfg, params,
+                      ServeConfig(max_batch=2, max_len=64, page=16))
+    jobs = [([3] * 5, 4), (list(range(16)), 18), (list(range(7, 40)), 12)]
+    rids = [eng.submit(p, max_new=m) for p, m in jobs]
+    eng.step()                                     # warm: both fns compiled
+    warm = eng.compile_stats()
+    assert warm == {"decode_compiles": 1, "prefill_compiles": 1}
+    res = eng.run()
+    assert eng.compile_stats() == warm, (
+        "decode/prefill recompiled mid-episode: an admission or eviction "
+        f"leaked into a traced shape ({eng.compile_stats()})")
+    st = eng.stats()
+    assert st["admitted"] == st["evicted"] == 3
+    assert st["queued_peak"] >= 2                  # r2 genuinely waited
+    for rid, (prompt, max_new) in zip(rids, jobs):
+        ref = _reference(params, cfg, prompt, max_new, cache_len=64)
+        assert res[rid]["tokens"] == ref, f"rid={rid} diverged from reference"
+
+
+def test_eos_evicts_early(key):
+    cfg = get_config("granite-3-2b").reduced()
+    params = init_params(cfg, key)
+    probe = ServeEngine(cfg, params,
+                        ServeConfig(max_batch=1, max_len=64, page=16))
+    probe.submit([3] * 5, max_new=8)
+    toks = probe.run()[0]["tokens"]
+    eos = toks[2]                                  # greedy emits this at step 2
+    eng = ServeEngine(cfg, params, ServeConfig(max_batch=1, max_len=64,
+                                               page=16, eos_id=eos))
+    rid = eng.submit([3] * 5, max_new=8)
+    out = eng.run()[rid]["tokens"]
+    assert out == toks[:toks.index(eos) + 1]       # stopped at, and kept, EOS
+
+
+# ---------------------------------------------------------------------------
+# quantized pages: greedy streams vs the fp engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [7, 4])
+def test_quantized_kv_greedy_agreement(counting, bits):
+    """>=32-step greedy decode with quantized cold pages reproduces the fp
+    engine's token streams exactly (counting-trained model)."""
+    cfg, params = counting
+    from repro.serve.demo import counting_prompt
+    prompts = [counting_prompt(cfg, 5, 12), counting_prompt(cfg, 200, 20)]
+    streams = {}
+    for kv_bits in (None, bits):
+        eng = ServeEngine(cfg, params, ServeConfig(
+            max_batch=2, max_len=64, page=16, kv_bits=kv_bits))
+        rids = [eng.submit(p, max_new=34) for p in prompts]
+        res = eng.run()
+        streams[kv_bits] = [res[r]["tokens"] for r in rids]
+    assert streams[bits] == streams[None], (
+        f"{bits}-bit KV pages changed the greedy stream")
+
+
+def test_bits_accounting_matches_wire_meter():
+    """Page-codec bits/elem == the wire meter's QuantizePNorm.wire_bits
+    rate for the same (bits, block): same codec, same accounting."""
+    from repro.core.compression import QuantizePNorm
+    spec = KVQuantSpec(bits=4, block=512)
+    n = 4096
+    q = QuantizePNorm(bits=4, block=512)
+    assert spec.bits_per_elem == q.wire_bits(n) / n
+    assert spec.page_bits(n) == q.wire_bits(n)
+    assert spec.bits_per_elem == 5.0625
+    # pool meter: 4-bit pages vs bf16 — the >=3x HBM headline
+    cfg = get_config("granite-3-2b").reduced()
+    eng = ServeEngine(cfg, jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0))),
+        ServeConfig(max_batch=2, max_len=64, page=16, kv_bits=4))
+    rep = eng.cache_report()
+    assert rep["hbm_reduction_pool"] == pytest.approx(16 / 5.0625)
+    assert rep["hbm_reduction_pool"] >= 3.0
+    assert pick_block(4096) == 512 and pick_block(96) == 96
+
+
+# ---------------------------------------------------------------------------
+# sharding classification regression (dist/serve._batched)
+# ---------------------------------------------------------------------------
+
+def test_batched_sharding_classifies_by_path_not_shape():
+    """A pool leaf whose page count equals the batch (and a contiguous
+    cache whose length equals it) must stay replicated/batch-sharded by
+    its ROLE — the old shape[0] == batch heuristic sharded the page pool
+    over "data", splitting pages that every sequence must gather."""
+    from repro.dist.serve import _batched
+    from repro.models import transformer as tfm
+    cfg = get_config("granite-3-2b").reduced()
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    B = 2
+    paged = jax.eval_shape(lambda: init_paged_cache(
+        cfg, B, 32, page=16, kv_bits=4, n_pages_full=B))   # n_pages == B!
+    sh = _batched(mesh, paged, B)
+    for layer in sh["layers"]:
+        for name in ("kc", "ksc", "vc", "vsc"):
+            assert getattr(layer, name).spec == P(None, None, None), (
+                f"pool leaf {name} must be replicated")
+        assert layer.page_table.spec[0] == "data"
+        assert layer.tail_k.spec[0] == "data"
+    assert sh["pos"].spec == P("data") and sh["active"].spec == P("data")
+    # contiguous cache with cache_len == B: k/v batch-sharded, pos replicated
+    contig = jax.eval_shape(lambda: tfm.init_cache(cfg, B, B))
+    shc = _batched(mesh, contig, B)
+    assert all(s.spec[0] == "data"
+               for layer in shc["layers"] for s in jax.tree_util.tree_leaves(
+                   layer, is_leaf=lambda x: hasattr(x, "spec")))
+    assert shc["pos"].spec == P()
+    # a misclassified per-sequence leaf (wrong leading dim) must be loud
+    with pytest.raises(AssertionError, match="per-sequence"):
+        _batched(mesh, {"tail_k": jax.ShapeDtypeStruct((5, 4), jnp.float32)},
+                 B)
